@@ -1,0 +1,76 @@
+"""Measured communication cost of Echo-CGC vs prior algorithms (Sec. 4.3).
+
+Runs the faithful radio-network protocol at the paper's operating points
+and compares measured bits / echo fraction against the closed-form bounds
+(C, p). One row per (n, sigma, x) cell; also the per-round wall time of the
+jitted protocol on this host.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import byzantine, costfns, theory
+from repro.core.protocol import run_training
+from repro.core.types import ProtocolConfig, raw_bits
+
+
+def one_cell(n: int, sigma: float, x: float, d: int = 1000, rounds: int = 10,
+             seed: int = 0):
+    f = int(n * x)
+    key = jax.random.PRNGKey(seed)
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=sigma)
+    r, eta, *_ = theory.pick_r_eta(n, f, 1.0, 1.0, sigma)
+    cfg = ProtocolConfig(n=n, f=f, r=r, eta=eta)
+    byz = jnp.zeros(n, bool).at[:f].set(True)
+
+    t0 = time.perf_counter()
+    tr = run_training(cfg, cost, byzantine.ATTACKS["sign_flip"], byz, key,
+                      jnp.ones(d), rounds=rounds)
+    jax.block_until_ready(tr["bits"])
+    dt_us = (time.perf_counter() - t0) / rounds * 1e6
+
+    bits = float(jnp.mean(jnp.sum(tr["bits"].reshape(rounds, -1)
+                                  if tr["bits"].ndim > 1 else
+                                  tr["bits"][:, None], axis=-1)))
+    bits_p2p = n * raw_bits(d)
+    ratio = bits / bits_p2p
+    echo_frac = float(jnp.mean(tr["n_echo"])) / (n - 1)
+    C = theory.comm_ratio_C(sigma, x, 1.0, n)
+    p = theory.echo_probability(r, sigma)
+    # The paper's C assumes d >> n (echo bits negligible). At finite d the
+    # attainable floor is the echo cost itself — report the d-adjusted
+    # bound for an apples-to-apples comparison.
+    C_adj = (theory.expected_bits_per_round(n, d, p)
+             / theory.prior_bits_per_round(n, d))
+    return dict(n=n, sigma=sigma, x=x, r=r, measured_ratio=ratio,
+                bound_C=C, bound_C_adj_d=C_adj, echo_frac=echo_frac,
+                bound_p=p, us=dt_us)
+
+
+def run(out_dir: str = "experiments"):
+    cells = [
+        (20, 0.05, 0.10), (20, 0.10, 0.10),
+        (50, 0.05, 0.10), (50, 0.10, 0.06),
+        (100, 0.05, 0.10), (100, 0.10, 0.10),
+    ]
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    results = []
+    for n, s, x in cells:
+        c = one_cell(n, s, x)
+        rows.append(c)
+        results.append((
+            f"comm_n{n}_s{s}_x{x}", c["us"],
+            f"ratio={c['measured_ratio']:.3f}|C={c['bound_C']:.3f}"
+            f"|C_adj={c['bound_C_adj_d']:.3f}"
+            f"|echo={c['echo_frac']:.3f}|p={c['bound_p']:.3f}"))
+    with open(os.path.join(out_dir, "comm_cost.csv"), "w") as fh:
+        fh.write(",".join(rows[0]) + "\n")
+        for c in rows:
+            fh.write(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                              for v in c.values()) + "\n")
+    return results

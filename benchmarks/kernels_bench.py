@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container the numbers are NOT TPU performance — they validate
+the harness and provide the shape sweep used on real hardware (where
+interpret=False). us_per_call is the jnp reference path (the production
+fallback); derived reports allclose agreement.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cgc import cgc_filter
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(out_dir: str = "experiments"):
+    key = jax.random.PRNGKey(0)
+    results = []
+
+    for n, d in [(16, 4096), (32, 65536)]:
+        G = jax.random.normal(key, (n, d))
+        f = n // 4
+        us = _time(jax.jit(lambda G: cgc_filter(G, f)), G)
+        ok = np.allclose(np.asarray(ops.cgc_clip(G, f)),
+                         np.asarray(ref.cgc_clip_ref(G, f)), rtol=1e-4)
+        results.append((f"cgc_clip_n{n}_d{d}", us, f"allclose={ok}"))
+
+    for n, d in [(16, 4096), (32, 65536)]:
+        A = jax.random.normal(key, (n, d))
+        g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+        mask = jnp.ones(n, bool)
+        us = _time(jax.jit(ref.gram_ref), A, g)
+        x, echo = ops.echo_project(A, mask, g)
+        from repro.core.echo import project_onto_span
+        x2, echo2 = project_onto_span(A, mask, g)
+        ok = np.allclose(np.asarray(echo), np.asarray(echo2), rtol=1e-3,
+                         atol=1e-4)
+        results.append((f"echo_project_n{n}_d{d}", us, f"allclose={ok}"))
+
+    for B, H, K, T in [(4, 8, 8, 4096), (1, 32, 8, 32768)]:
+        hd = 128
+        q = jax.random.normal(key, (B, H, hd), jnp.bfloat16)
+        k = jax.random.normal(key, (B, T, K, hd), jnp.bfloat16)
+        v = jax.random.normal(key, (B, T, K, hd), jnp.bfloat16)
+        mask = jnp.ones((B, T), bool)
+        us = _time(jax.jit(ref.decode_attention_ref), q, k, v, mask)
+        out = ops.decode_attention(q, k, v, mask)
+        exp = ref.decode_attention_ref(q, k, v, mask)
+        ok = np.allclose(np.asarray(out, np.float32),
+                         np.asarray(exp, np.float32), rtol=5e-2, atol=5e-2)
+        results.append((f"decode_attn_B{B}_T{T}", us, f"allclose={ok}"))
+    return results

@@ -1,0 +1,106 @@
+"""Roofline table: three terms per (arch x shape) from the dry-run records.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), applies
+the analytic FLOP/byte model (repro.launch.roofline — see its docstring for
+why the compiled cost_analysis is kept as evidence rather than used raw),
+and writes experiments/roofline.csv + a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.roofline import analyze
+
+
+def load_recs(dry_dir: str = "experiments/dryrun") -> Dict[str, dict]:
+    recs = {}
+    if not os.path.isdir(dry_dir):
+        return recs
+    for f in os.listdir(dry_dir):
+        if f.endswith(".json"):
+            with open(os.path.join(dry_dir, f)) as fh:
+                r = json.load(fh)
+            recs[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    return recs
+
+
+def build_table(mesh: str = "16x16", dry_dir: str = "experiments/dryrun"
+                ) -> List[dict]:
+    recs = load_recs(dry_dir)
+    chips = 512 if mesh == "2x16x16" else 256
+    dp = 32 if mesh == "2x16x16" else 16
+    tp = 16
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            rec = recs.get((arch, sname, mesh))
+            if rec and rec.get("status") == "skipped":
+                rows.append(dict(arch=arch, shape=sname, mesh=mesh,
+                                 status="skipped",
+                                 note=rec.get("reason", "")))
+                continue
+            rl = analyze(cfg, shape, chips, dp, tp, rec)
+            d = rl.as_dict()
+            d["status"] = rec.get("status", "no-dryrun") if rec else \
+                "no-dryrun"
+            d["mesh"] = mesh
+            rows.append(d)
+    return rows
+
+
+def write_csv(rows: List[dict], path: str):
+    keys = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops_global",
+            "useful_ratio", "fit_hbm", "note"]
+    with open(path, "w") as fh:
+        fh.write(",".join(keys) + "\n")
+        for r in rows:
+            fh.write(",".join(_fmt(r.get(k)) for k in keys) + "\n")
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v) if v is not None else ""
+
+
+def write_markdown(rows: List[dict], path: str):
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) "
+             "| dominant | useful ratio | fits HBM |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"{r['dominant']} | {_fmt(r.get('useful_ratio'))} | "
+            f"{r.get('fit_hbm')} |")
+    with open(path, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def run(out_dir: str = "experiments"):
+    results = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = build_table(mesh)
+        write_csv(rows, os.path.join(out_dir, f"roofline_{mesh}.csv"))
+        if mesh == "16x16":
+            write_markdown(rows,
+                           os.path.join(out_dir, "roofline_16x16.md"))
+        ok = sum(1 for r in rows if r.get("status") == "ok")
+        dom = {}
+        for r in rows:
+            if "dominant" in r:
+                dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        results.append((f"roofline_{mesh}", 0.0,
+                        f"rows={len(rows)}|ok={ok}|"
+                        + "|".join(f"{k}={v}" for k, v in sorted(
+                            dom.items()))))
+    return results

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig1           : Figure 1a-d, Eq. 29 curves (the paper's numerical study)
+  comm_cost      : measured bits / echo fraction vs the C and p bounds
+  convergence    : Thm 9 convergence table (attacks x aggregators)
+  kernels_bench  : Pallas kernel shape sweep vs jnp reference
+  roofline_table : deliverable (g) — three roofline terms per arch x shape
+
+Prints ``name,us_per_call,derived`` CSV; artifacts land in experiments/.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (comm_cost, convergence, fig1, kernels_bench,
+                            roofline_table)
+    mods = [("fig1", fig1), ("comm_cost", comm_cost),
+            ("convergence", convergence), ("kernels", kernels_bench),
+            ("roofline", roofline_table)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and name != only:
+            continue
+        try:
+            for row in mod.run():
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
+            raise
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: Echo-CGC on a strongly-convex problem in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the faithful single-hop radio-network simulation (Algorithm 1) with
+f Byzantine workers sign-flipping their gradients, prints convergence and
+the measured communication saving vs the point-to-point baseline.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import byzantine, costfns, theory
+from repro.core.protocol import run_training
+from repro.core.types import ProtocolConfig, raw_bits
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    n, f, d, sigma = 20, 2, 100, 0.05
+    rounds = 60
+
+    # A quadratic cost with known (L, mu) and relative gradient noise sigma.
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=sigma)
+
+    # Admissible (r, eta) from the paper's Lemma 4 / Theorem 5.
+    r, eta, beta, gamma, rho = theory.pick_r_eta(n, f, cost.L, cost.mu,
+                                                 sigma)
+    print(f"n={n} f={f} d={d} sigma={sigma}")
+    print(f"deviation ratio r={r:.4f}  step size eta={eta:.5f}  "
+          f"proven rate rho={rho:.4f}")
+
+    cfg = ProtocolConfig(n=n, f=f, r=r, eta=eta)
+    byz_mask = jnp.zeros(n, bool).at[:f].set(True)
+    trace = run_training(cfg, cost, byzantine.ATTACKS["sign_flip"],
+                         byz_mask, key, jnp.ones(d) * 2.0, rounds=rounds)
+
+    d2 = trace["dist2"]
+    print(f"\n||w - w*||^2 : {float(d2[0]):.4f} -> {float(d2[-1]):.2e} "
+          f"in {rounds} rounds (under {f} sign-flipping workers)")
+
+    bits = float(jnp.sum(trace["bits"]))
+    p2p = rounds * n * raw_bits(d)
+    print(f"bits sent    : {bits:.3g} vs point-to-point {p2p:.3g} "
+          f"-> saving {100 * (1 - bits / p2p):.1f}%")
+    print(f"echo rate    : {float(jnp.mean(trace['n_echo'])) / (n - 1):.2%} "
+          f"of eligible workers per round")
+
+
+if __name__ == "__main__":
+    main()

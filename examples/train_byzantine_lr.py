@@ -1,0 +1,61 @@
+"""Byzantine-tolerant logistic regression with Echo-CGC vs baselines.
+
+    PYTHONPATH=src python examples/train_byzantine_lr.py [--rounds 80]
+
+Trains L2-regularised logistic regression (strongly convex, mu = l2) in the
+parameter-server radio network under several attacks, comparing Echo-CGC
+against Krum / coordinate-median / trimmed-mean / undefended mean, and
+reporting measured communication per aggregator. This mirrors the paper's
+setting with a real (synthetic) dataset instead of an abstract quadratic.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import byzantine, costfns, theory
+from repro.core.protocol import run_training
+from repro.core.types import ProtocolConfig, raw_bits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=80)
+    ap.add_argument("--n", type=int, default=20)
+    ap.add_argument("--f", type=int, default=2)
+    ap.add_argument("--d", type=int, default=50)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    cost = costfns.logistic_l2(key, n_data=2000, d=args.d, batch=64,
+                               l2=0.25)
+    sigma = min(cost.sigma, 0.9 / jnp.sqrt(args.n).item())
+    r, eta, *_ , rho = theory.pick_r_eta(args.n, args.f, cost.L, cost.mu,
+                                         sigma)
+    eta = min(eta, 0.5 / cost.L)
+    cfg = ProtocolConfig(n=args.n, f=args.f, r=r, eta=eta)
+    byz = jnp.zeros(args.n, bool).at[:args.f].set(True)
+    print(f"logistic regression d={args.d}: L={cost.L:.3f} mu={cost.mu:.3f}"
+          f" sigma~{cost.sigma:.3f} -> r={r:.4f} eta={eta:.5f}")
+
+    header = f"{'attack':14s} {'aggregator':13s} {'final Q-Q*':>12s} " \
+             f"{'dist^2':>10s} {'Mbits':>8s}"
+    print("\n" + header + "\n" + "-" * len(header))
+    q_star = float(cost.value(cost.w_star))
+    for attack in ["none", "sign_flip", "large_norm", "mean_shift"]:
+        for agg, radio in [("cgc", True), ("krum", False),
+                           ("median", False), ("trimmed_mean", False),
+                           ("mean", False)]:
+            tr = run_training(cfg, cost, byzantine.ATTACKS[attack], byz,
+                              key, jnp.zeros(args.d), rounds=args.rounds,
+                              aggregator=agg, use_radio=radio)
+            gap = float(cost.value(tr["w_final"])) - q_star
+            mb = float(jnp.sum(tr["bits"])) / 1e6 if radio else \
+                args.rounds * args.n * raw_bits(args.d) / 1e6
+            name = ("echo-" + agg) if radio else agg
+            print(f"{attack:14s} {name:13s} {gap:12.3e} "
+                  f"{float(tr['dist2'][-1]):10.2e} {mb:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

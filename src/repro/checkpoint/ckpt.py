@@ -1,0 +1,89 @@
+"""Checkpointing: flat .npz snapshots of arbitrary pytrees.
+
+Sharded arrays are gathered to host before writing (fine at the scales this
+container trains; a real multi-host deployment would write per-shard files —
+the directory layout already namespaces by step so that extension is local
+to this module). Restore reshards via ``jax.device_put`` with the target
+sharding tree when one is provided.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(directory: str, step: int, tree, extra: Optional[Dict] = None
+         ) -> str:
+    """Write <dir>/step_<N>.npz (+ sidecar json). Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **arrays)
+    os.replace(tmp, path)
+    meta = {"step": step, "keys": sorted(arrays), **(extra or {})}
+    with open(os.path.join(directory, f"step_{step:08d}.json"), "w") as fh:
+        json.dump(meta, fh)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, like, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``; optionally reshard.
+
+    Returns (tree, step). Raises FileNotFoundError if no checkpoint exists.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint {path} missing keys: {sorted(missing)[:5]}"
+                       f" (+{max(len(missing) - 5, 0)} more)")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = ["/".join(_path_str(p) for p in path_)
+            for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    arrays = [data[k] for k in keys]
+    tree = jax.tree_util.tree_unflatten(treedef, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step

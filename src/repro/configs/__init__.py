@@ -1,0 +1,5 @@
+from .base import (ARCH_IDS, INPUT_SHAPES, ModelConfig, ShapeConfig,
+                   all_configs, get_config, reduced)
+
+__all__ = ["ARCH_IDS", "INPUT_SHAPES", "ModelConfig", "ShapeConfig",
+           "all_configs", "get_config", "reduced"]

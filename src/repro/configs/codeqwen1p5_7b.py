@@ -1,0 +1,22 @@
+"""CodeQwen1.5-7B — Qwen1.5 architecture [hf:Qwen/CodeQwen1.5-7B].
+
+32L, d_model=4096, 32 heads (MHA, kv=32), d_ff=13440, vocab 92416,
+attention QKV bias (Qwen1.5 style).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=13440,
+    vocab_size=92416,
+    attn_type="gqa",
+    use_bias=True,
+    head_dim=128,
+    rope_theta=1e6,
+)

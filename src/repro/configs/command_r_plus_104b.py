@@ -1,0 +1,23 @@
+"""Command R+ 104B — dense GQA decoder [hf:CohereForAI/c4ai-command-r-v01].
+
+64L, d_model=12288, 96 heads, GQA kv=8, d_ff=33792, vocab 256000,
+no biases, tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    attn_type="gqa",
+    use_bias=False,
+    tie_embeddings=True,
+    head_dim=128,
+    rope_theta=1e4,
+)

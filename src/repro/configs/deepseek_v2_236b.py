@@ -1,0 +1,32 @@
+"""DeepSeek-V2 236B — MoE with Multi-head Latent Attention [arXiv:2405.04434].
+
+60L, d_model=5120, 128 heads, MLA kv_lora=512 (q_lora=1536, qk_nope=128,
+qk_rope=64, v=128), 160 routed experts top-6 + 2 shared, per-expert
+d_ff=1536, first layer dense (d_ff=12288), vocab 102400.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,          # MLA: kv heads == heads post up-projection
+    d_ff=12288,                # dense (first) layer hidden
+    vocab_size=102400,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    head_dim=128,
+    num_experts=160,
+    num_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    first_dense_layers=1,
+    rope_theta=1e4,
+)

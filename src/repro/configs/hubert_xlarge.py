@@ -1,0 +1,27 @@
+"""HuBERT X-Large — encoder-only audio backbone [arXiv:2106.07447].
+
+48L, d_model=1280, 16 heads, d_ff=5120, 504 k-means target classes.
+Encoder-only: bidirectional attention, masked-prediction CE loss, NO decode
+step (decode_32k / long_500k skipped — DESIGN.md §4). The conv waveform
+feature extractor is the assigned STUB: ``input_specs`` feeds precomputed
+frame embeddings of shape (batch, frames, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    source="arXiv:2106.07447",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    attn_type="gqa",
+    causal=False,
+    is_encoder=True,
+    frontend="audio",
+    use_bias=True,
+    rope_theta=1e4,
+)

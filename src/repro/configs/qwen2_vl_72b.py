@@ -1,0 +1,29 @@
+"""Qwen2-VL-72B — VLM decoder with M-RoPE [arXiv:2409.12191].
+
+80L, d_model=8192, 64 heads, GQA kv=8, d_ff=29568, vocab 152064, QKV bias,
+M-RoPE sections (16, 24, 24). The ViT vision encoder + projector is the
+assigned STUB: ``input_specs`` feeds precomputed patch embeddings for the
+leading ``num_vision_tokens`` positions (dynamic resolution abstracted as a
+variable vision-token count).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    attn_type="gqa",
+    use_bias=True,
+    head_dim=128,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    frontend="vision",
+    num_vision_tokens=1024,
+    rope_theta=1e6,
+)

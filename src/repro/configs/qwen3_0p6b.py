@@ -1,0 +1,23 @@
+"""Qwen3-0.6B — dense GQA with qk-norm [hf:Qwen/Qwen3-8B family].
+
+28L, d_model=1024, 16 heads, GQA kv=8, d_ff=3072, vocab 151936, head_dim 128,
+qk-norm, tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    source="hf:Qwen/Qwen3-8B (family card)",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    attn_type="gqa",
+    qk_norm=True,
+    head_dim=128,
+    tie_embeddings=True,
+    rope_theta=1e6,
+)

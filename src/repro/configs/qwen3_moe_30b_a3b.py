@@ -1,0 +1,27 @@
+"""Qwen3-30B-A3B — MoE, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+
+48L, d_model=2048, 32 heads, GQA kv=4, per-expert d_ff=768, vocab 151936,
+qk-norm, head_dim=128, no shared experts.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=0,                    # all layers MoE
+    vocab_size=151936,
+    attn_type="gqa",
+    qk_norm=True,
+    head_dim=128,
+    num_experts=128,
+    top_k=8,
+    moe_d_ff=768,
+    num_shared_experts=0,
+    first_dense_layers=0,
+    rope_theta=1e6,
+)

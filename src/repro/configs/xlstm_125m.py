@@ -1,0 +1,21 @@
+"""xLSTM-125M — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+12L, d_model=768, 4 heads, vocab 50304, d_ff=0 (xLSTM blocks carry their own
+up/down projections: mLSTM pf=2, sLSTM gated pf=4/3). Block pattern 3:1
+mLSTM:sLSTM (paper's sparse-sLSTM placements).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    source="arXiv:2405.04517",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    attn_type="none",
+    xlstm_pattern=("m", "m", "m", "s") * 3,
+)

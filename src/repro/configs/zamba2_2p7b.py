@@ -1,0 +1,27 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention blocks [arXiv:2411.15242].
+
+54 Mamba2 layers, d_model=2560, ssm_state=64; one *shared* transformer block
+(32-head attention + d_ff=10240 MLP, same weights every application) applied
+every 6 Mamba layers — the Zamba weight-sharing trick.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,                # shared-block MLP hidden
+    vocab_size=32000,
+    attn_type="gqa",
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=128,
+    conv_width=4,
+    shared_attn_every=6,
+    rope_theta=1e4,
+)

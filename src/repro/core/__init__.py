@@ -1,0 +1,20 @@
+"""Echo-CGC core: the paper's contribution as a composable JAX library."""
+from . import aggregators, byzantine, cgc, costfns, echo, protocol, theory
+from .byzantine import ATTACKS, AttackPlan
+from .cgc import cgc_aggregate, cgc_filter, cgc_scales, cgc_threshold
+from .echo import echo_decision, project_onto_span, reconstruct_echo
+from .protocol import (communication_phase, echo_cgc_round, pointwise_round,
+                       run_training)
+from .theory import (K_STAR, comm_ratio_C, echo_probability, pick_r_eta,
+                     r_max_lemma3, r_max_lemma4, resilience_condition)
+from .types import ProtocolConfig, RoundStats, ServerState
+
+__all__ = [
+    "ATTACKS", "AttackPlan", "K_STAR", "ProtocolConfig", "RoundStats",
+    "ServerState", "aggregators", "byzantine", "cgc", "cgc_aggregate",
+    "cgc_filter", "cgc_scales", "cgc_threshold", "comm_ratio_C", "costfns",
+    "echo", "echo_cgc_round", "echo_decision", "echo_probability",
+    "communication_phase", "pick_r_eta", "pointwise_round",
+    "project_onto_span", "protocol", "r_max_lemma3", "r_max_lemma4",
+    "reconstruct_echo", "resilience_condition", "run_training", "theory",
+]

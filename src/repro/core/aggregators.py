@@ -1,0 +1,105 @@
+"""Byzantine-robust aggregation baselines.
+
+The paper builds on the CGC filter [11] and cites Krum [4], coordinate-wise
+median / trimmed mean [6], and plain averaging as the surrounding landscape.
+All of them are implemented here with one signature so the trainer, the
+protocol simulator and the benchmarks can swap them freely:
+
+    aggregate(G: (n, d) gradients, f: int) -> (d,) update direction
+
+Conventions: CGC returns the filtered *sum* (paper line 44); the others
+return a mean-scale vector. ``repro/dist`` re-exposes these inside shard_map
+for the TPU trainer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .cgc import cgc_aggregate, cgc_filter
+
+
+def mean(G: jax.Array, f: int = 0) -> jax.Array:
+    """Fault-intolerant baseline: plain average (times n to match CGC sum)."""
+    return jnp.mean(G, axis=0)
+
+
+def cgc_sum(G: jax.Array, f: int) -> jax.Array:
+    """The paper's aggregation: CGC filter then sum (Gupta-Vaidya)."""
+    return cgc_aggregate(G, f)
+
+
+def cgc_mean(G: jax.Array, f: int) -> jax.Array:
+    """CGC filter then mean — scale-compatible with the other baselines."""
+    return cgc_aggregate(G, f) / G.shape[0]
+
+
+def krum(G: jax.Array, f: int) -> jax.Array:
+    """Krum (Blanchard et al., NeurIPS'17).
+
+    Scores each gradient by the sum of squared distances to its n-f-2
+    nearest neighbours; returns the minimiser. Requires n > 2f + 2.
+    """
+    n = G.shape[0]
+    sq = jnp.sum((G[:, None, :] - G[None, :, :]) ** 2, axis=-1)  # (n, n)
+    sq = sq + jnp.diag(jnp.full((n,), jnp.inf))
+    k = max(n - f - 2, 1)
+    nearest = jnp.sort(sq, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)
+    return G[jnp.argmin(scores)]
+
+
+def multi_krum(G: jax.Array, f: int, m: int | None = None) -> jax.Array:
+    """Multi-Krum: average the m best-scored gradients."""
+    n = G.shape[0]
+    m = m if m is not None else max(n - f, 1)
+    sq = jnp.sum((G[:, None, :] - G[None, :, :]) ** 2, axis=-1)
+    sq = sq + jnp.diag(jnp.full((n,), jnp.inf))
+    k = max(n - f - 2, 1)
+    scores = jnp.sum(jnp.sort(sq, axis=1)[:, :k], axis=1)
+    best = jnp.argsort(scores)[:m]
+    return jnp.mean(G[best], axis=0)
+
+
+def coordinate_median(G: jax.Array, f: int = 0) -> jax.Array:
+    """Coordinate-wise median (Yin et al. / Chen-Su-Xu [6] family)."""
+    return jnp.median(G, axis=0)
+
+
+def trimmed_mean(G: jax.Array, f: int) -> jax.Array:
+    """Coordinate-wise f-trimmed mean: drop the f largest and f smallest
+    entries per coordinate, average the rest. Requires n > 2f."""
+    n = G.shape[0]
+    if n <= 2 * f:
+        raise ValueError(f"trimmed_mean needs n > 2f (n={n}, f={f})")
+    s = jnp.sort(G, axis=0)
+    kept = s[f:n - f] if f > 0 else s
+    return jnp.mean(kept, axis=0)
+
+
+def geometric_median(G: jax.Array, f: int = 0, iters: int = 32,
+                     eps: float = 1e-8) -> jax.Array:
+    """Weiszfeld iterations for the geometric median (RFA-style)."""
+    def step(z, _):
+        dist = jnp.maximum(jnp.linalg.norm(G - z, axis=-1), eps)
+        wts = 1.0 / dist
+        z = (wts @ G) / jnp.sum(wts)
+        return z, None
+
+    z0 = jnp.mean(G, axis=0)
+    z, _ = jax.lax.scan(step, z0, None, length=iters)
+    return z
+
+
+AGGREGATORS: Dict[str, Callable] = {
+    "mean": mean,
+    "cgc": cgc_sum,
+    "cgc_mean": cgc_mean,
+    "krum": krum,
+    "multi_krum": multi_krum,
+    "median": coordinate_median,
+    "trimmed_mean": trimmed_mean,
+    "geometric_median": geometric_median,
+}

@@ -1,0 +1,180 @@
+"""Byzantine attack zoo.
+
+The adversary is omniscient (paper Sec. 2.1): it sees the parameter w^t and
+all honest gradients before choosing the Byzantine messages. Due to the
+reliable-local-broadcast property it cannot equivocate (same message reaches
+server and all workers) and cannot spoof identities — so an attack is fully
+described by *what each Byzantine worker broadcasts in its slot*:
+
+  - a raw (bogus) d-dimensional vector, or
+  - an echo message (k, x, I), possibly malformed (I referencing a worker the
+    server never heard from -> provable detection, paper line 36-37), or
+  - silence (crash; the synchronous server times the worker out).
+
+An ``Attack`` maps (key, honest_grads, byz_mask, w, true_grad) -> per-worker
+raw vectors plus optional echo-forging flags, consumed by the protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .types import MSG_ECHO, MSG_RAW, MSG_SILENT
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AttackPlan:
+    """What each Byzantine worker broadcasts.
+
+    raw:        (n, d) vector to send when mode==MSG_RAW (rows for honest
+                workers are ignored).
+    mode:       (n,) int32 — MSG_RAW / MSG_ECHO / MSG_SILENT per worker
+                (honest rows ignored).
+    echo_k:     (n,) forged norm ratio when mode==MSG_ECHO.
+    echo_x:     (n, n) forged coefficients.
+    echo_ref:   (n, n) bool forged reference set I (may point at unheard
+                workers -> server detection).
+    """
+
+    raw: jax.Array
+    mode: jax.Array
+    echo_k: jax.Array
+    echo_x: jax.Array
+    echo_ref: jax.Array
+
+
+AttackFn = Callable[..., AttackPlan]
+
+
+def _default_plan(n: int, d: int, raw: jax.Array) -> AttackPlan:
+    return AttackPlan(
+        raw=raw,
+        mode=jnp.full((n,), MSG_RAW, jnp.int32),
+        echo_k=jnp.zeros((n,)),
+        echo_x=jnp.zeros((n, n)),
+        echo_ref=jnp.zeros((n, n), bool),
+    )
+
+
+def no_attack(key, honest, byz_mask, w, true_grad) -> AttackPlan:
+    """Byzantine workers behave honestly (sanity baseline)."""
+    n, d = honest.shape
+    return _default_plan(n, d, honest)
+
+
+def sign_flip(key, honest, byz_mask, w, true_grad, scale: float = 1.0
+              ) -> AttackPlan:
+    """Send -scale * g_j: reverses descent, classic Byzantine SGD attack."""
+    n, d = honest.shape
+    return _default_plan(n, d, -scale * honest)
+
+
+def large_norm(key, honest, byz_mask, w, true_grad, scale: float = 100.0
+               ) -> AttackPlan:
+    """Blow up the magnitude — what norm-clipping filters (CGC) neutralise."""
+    n, d = honest.shape
+    return _default_plan(n, d, -scale * honest)
+
+
+def random_gauss(key, honest, byz_mask, w, true_grad, scale: float = 1.0
+                 ) -> AttackPlan:
+    """Random Gaussian junk scaled to the mean honest norm."""
+    n, d = honest.shape
+    mean_norm = jnp.mean(jnp.linalg.norm(honest, axis=-1))
+    noise = jax.random.normal(key, (n, d)) / jnp.sqrt(d)
+    return _default_plan(n, d, scale * mean_norm * noise)
+
+
+def mean_shift(key, honest, byz_mask, w, true_grad, z: float = 1.5
+               ) -> AttackPlan:
+    """"A Little Is Enough"-style attack (Baruch et al.):
+
+    send mean - z * std of the honest gradients — crafted to stay inside the
+    honest spread so norm filters cannot distinguish it, while steadily
+    biasing the aggregate.
+    """
+    n, d = honest.shape
+    # Statistics over honest workers only.
+    h_mask = (~byz_mask).astype(honest.dtype)[:, None]
+    cnt = jnp.maximum(jnp.sum(h_mask), 1.0)
+    mean = jnp.sum(honest * h_mask, 0) / cnt
+    var = jnp.sum(((honest - mean) ** 2) * h_mask, 0) / cnt
+    bogus = mean - z * jnp.sqrt(var)
+    return _default_plan(n, d, jnp.broadcast_to(bogus, (n, d)))
+
+
+def inner_product(key, honest, byz_mask, w, true_grad, eps: float = 0.1
+                  ) -> AttackPlan:
+    """Inner-product-manipulation attack (Xie et al.): send -eps * true_grad.
+
+    Small norm (passes CGC untouched) but negative alignment with the
+    descent direction.
+    """
+    n, d = honest.shape
+    return _default_plan(n, d, jnp.broadcast_to(-eps * true_grad, (n, d)))
+
+
+def forged_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 50.0
+                ) -> AttackPlan:
+    """Echo-specific attack: forge (k, x, I).
+
+    Each Byzantine worker emits an echo message whose reference set I points
+    at worker 0 plus *itself* — referencing its own (unsent) gradient means
+    the server sees G[i] = ⊥ for some i in I and provably detects it
+    (paper lines 36-37). Used to exercise the detection path.
+    """
+    n, d = honest.shape
+    plan = _default_plan(n, d, honest)
+    mode = jnp.full((n,), MSG_ECHO, jnp.int32)
+    ref = jnp.zeros((n, n), bool)
+    ref = ref.at[:, 0].set(True)
+    # self-reference: row j references column j (never heard in slot order
+    # when j echoes instead of sending raw).
+    ref = ref | jnp.eye(n, dtype=bool)
+    x = jnp.zeros((n, n)).at[:, 0].set(1.0)
+    return dataclasses.replace(
+        plan, mode=mode, echo_k=jnp.full((n,), k_scale), echo_x=x,
+        echo_ref=ref)
+
+
+def poisoned_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 25.0
+                  ) -> AttackPlan:
+    """Echo attack with a *valid* reference set but inflated norm ratio k.
+
+    The reconstruction k * A_I x is well-formed, so the server cannot detect
+    it — only the CGC filter's norm clipping bounds its damage. This is the
+    attack the paper's Lemma 7/8 analysis has to survive.
+    """
+    n, d = honest.shape
+    plan = _default_plan(n, d, honest)
+    mode = jnp.full((n,), MSG_ECHO, jnp.int32)
+    ref = jnp.zeros((n, n), bool).at[:, 0].set(True)   # reference slot-0 raw
+    x = jnp.zeros((n, n)).at[:, 0].set(-1.0)            # flipped direction
+    return dataclasses.replace(
+        plan, mode=mode, echo_k=jnp.full((n,), k_scale), echo_x=x,
+        echo_ref=ref)
+
+
+def crash(key, honest, byz_mask, w, true_grad) -> AttackPlan:
+    """Silent workers — the server times them out (synchronous model)."""
+    n, d = honest.shape
+    plan = _default_plan(n, d, honest)
+    return dataclasses.replace(plan, mode=jnp.full((n,), MSG_SILENT,
+                                                   jnp.int32))
+
+
+ATTACKS = {
+    "none": no_attack,
+    "sign_flip": sign_flip,
+    "large_norm": large_norm,
+    "random_gauss": random_gauss,
+    "mean_shift": mean_shift,
+    "inner_product": inner_product,
+    "forged_echo": forged_echo,
+    "poisoned_echo": poisoned_echo,
+    "crash": crash,
+}

@@ -1,0 +1,44 @@
+"""The CGC filter of Gupta & Vaidya (PODC 2020), Eq. (8) of the paper.
+
+Sort received gradients by Euclidean norm; the top-f norms are clipped down
+to the (n-f)-th smallest norm; directions are preserved. The server then
+aggregates by *summing* the filtered gradients (paper Eq. 2 / line 44).
+
+Pure-jnp reference implementation; ``repro.kernels.cgc_clip`` provides the
+fused Pallas TPU version with the same contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cgc_threshold(norms: jax.Array, f: int) -> jax.Array:
+    """The (n-f)-th smallest norm — the clip level of the CGC filter."""
+    n = norms.shape[0]
+    if not 0 <= f < n:
+        raise ValueError(f"need 0 <= f < n, got f={f}, n={n}")
+    sorted_norms = jnp.sort(norms)
+    return sorted_norms[n - f - 1]  # (n-f)-th smallest, 0-indexed
+
+
+def cgc_scales(norms: jax.Array, f: int, eps: float = 1e-12) -> jax.Array:
+    """Per-gradient scale factors: min(1, ||g_{(n-f)}|| / ||g_j||).
+
+    Exactly Eq. (8): gradients whose norm ranks above n-f are scaled down to
+    the threshold norm; the rest are untouched. Ties are handled naturally —
+    a gradient at the threshold gets scale 1.
+    """
+    thr = cgc_threshold(norms, f)
+    return jnp.minimum(1.0, thr / jnp.maximum(norms, eps))
+
+
+def cgc_filter(G: jax.Array, f: int) -> jax.Array:
+    """Apply the CGC filter to an (n, d) stack of gradients -> (n, d)."""
+    norms = jnp.linalg.norm(G, axis=-1)
+    return G * cgc_scales(norms, f)[:, None]
+
+
+def cgc_aggregate(G: jax.Array, f: int) -> jax.Array:
+    """Filtered *sum* g^t = sum_j CGC(g_j) (paper line 44)."""
+    return jnp.sum(cgc_filter(G, f), axis=0)

@@ -1,0 +1,192 @@
+"""Strongly-convex cost functions with known (L, mu) for paper validation.
+
+The paper's convergence theory (Sec. 4) is parameterised by the Lipschitz
+constant L (Assumption 2), the strong-convexity constant mu (Assumption 3),
+and the relative gradient-noise bound sigma (Assumption 5):
+
+    E||g - grad Q(w)||^2 <= sigma^2 ||grad Q(w)||^2.
+
+Each cost here exposes exact (or tightly-bounded) L, mu and a stochastic
+gradient oracle whose noise is *relative* so Assumption 5 holds by
+construction (quadratic) or is measurable (least-squares / logistic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CostFn:
+    """A strongly-convex objective with a stochastic-gradient oracle.
+
+    Attributes:
+      value:       w -> Q(w)
+      grad:        w -> exact gradient of Q at w
+      stoch_grad:  (key, w) -> one stochastic gradient sample (Assumption 4/5)
+      w_star:      argmin Q
+      L, mu:       smoothness / strong-convexity constants
+      sigma:       relative noise bound of stoch_grad (Assumption 5)
+      d:           dimension
+    """
+
+    value: Callable[[jax.Array], jax.Array]
+    grad: Callable[[jax.Array], jax.Array]
+    stoch_grad: Callable[[jax.Array, jax.Array], jax.Array]
+    w_star: jax.Array
+    L: float
+    mu: float
+    sigma: float
+    d: int
+
+
+def quadratic(
+    key: jax.Array,
+    d: int,
+    mu: float = 1.0,
+    L: float = 1.0,
+    sigma: float = 0.1,
+) -> CostFn:
+    """Q(w) = 1/2 (w - w*)^T H (w - w*) with spec(H) in [mu, L].
+
+    The stochastic oracle returns ``grad * (1 + sigma * u)`` with u a
+    unit-variance isotropic perturbation, so Assumption 5 holds with equality
+    in expectation: E||g - grad||^2 = sigma^2 ||grad||^2 and E g = grad
+    (Assumption 4).
+    """
+    k_eig, k_rot, k_star = jax.random.split(key, 3)
+    # Eigenvalues in [mu, L] with both endpoints hit exactly.
+    if d >= 2:
+        inner = jax.random.uniform(k_eig, (d - 2,), minval=mu, maxval=L)
+        eigs = jnp.concatenate([jnp.array([mu, L]), inner])
+    else:
+        eigs = jnp.array([L])
+    # Random rotation via QR of a Gaussian matrix.
+    Qm, _ = jnp.linalg.qr(jax.random.normal(k_rot, (d, d)))
+    H = (Qm * eigs) @ Qm.T
+    w_star = jax.random.normal(k_star, (d,))
+
+    def value(w):
+        dw = w - w_star
+        return 0.5 * dw @ H @ dw
+
+    def grad(w):
+        return H @ (w - w_star)
+
+    def stoch_grad(key, w):
+        g = grad(w)
+        # Isotropic relative noise: u = N(0, I)/sqrt(d) has E||u||^2 = 1, so
+        # E||sigma*||g||*u||^2 = sigma^2 ||g||^2 — Assumption 5 with equality
+        # (and E g_j = grad Q, Assumption 4).
+        u = jax.random.normal(key, (d,)) / jnp.sqrt(d)
+        return g + sigma * jnp.linalg.norm(g) * u
+    return CostFn(value, grad, stoch_grad, w_star, float(L), float(mu),
+                  float(sigma), d)
+
+
+def least_squares(
+    key: jax.Array,
+    n_data: int,
+    d: int,
+    batch: int = 8,
+    noise: float = 0.0,
+    l2: float = 0.0,
+) -> CostFn:
+    """Q(w) = 1/(2N) ||X w - y||^2 + l2/2 ||w||^2 over a fixed synthetic set.
+
+    The stochastic oracle samples a random mini-batch (the paper's "random
+    data batch xi_j^t from the dataset shared by all workers"). sigma is
+    estimated empirically at w0 and reported; L = lam_max(X^T X)/N + l2,
+    mu = lam_min(X^T X)/N + l2.
+    """
+    kx, ky, kw = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n_data, d))
+    w_true = jax.random.normal(kw, (d,))
+    y = X @ w_true + noise * jax.random.normal(ky, (n_data,))
+
+    H = X.T @ X / n_data + l2 * jnp.eye(d)
+    eigs = jnp.linalg.eigvalsh(H)
+    L = float(eigs[-1])
+    mu = float(eigs[0])
+    # Closed-form optimum.
+    w_star = jnp.linalg.solve(H, X.T @ y / n_data)
+
+    def value(w):
+        r = X @ w - y
+        return 0.5 * jnp.mean(r ** 2) + 0.5 * l2 * w @ w
+
+    def grad(w):
+        return X.T @ (X @ w - y) / n_data + l2 * w
+
+    def stoch_grad(key, w):
+        idx = jax.random.randint(key, (batch,), 0, n_data)
+        Xb, yb = X[idx], y[idx]
+        return Xb.T @ (Xb @ w - yb) / batch + l2 * w
+
+    # Empirical sigma at a reference point (relative noise, Assumption 5).
+    k0, keval = jax.random.split(key)
+    w0 = jax.random.normal(k0, (d,))
+    g0 = grad(w0)
+    keys = jax.random.split(keval, 256)
+    gs = jax.vmap(lambda k: stoch_grad(k, w0))(keys)
+    sigma = float(jnp.sqrt(jnp.mean(jnp.sum((gs - g0) ** 2, -1))
+                           / (g0 @ g0)))
+    return CostFn(value, grad, stoch_grad, w_star, L, mu, sigma, d)
+
+
+def logistic_l2(
+    key: jax.Array,
+    n_data: int,
+    d: int,
+    batch: int = 16,
+    l2: float = 0.1,
+    margin: float = 1.0,
+) -> CostFn:
+    """L2-regularised logistic regression (mu = l2, L = lam_max/4 + l2).
+
+    Strongly convex thanks to the ridge term; w* found by Newton iterations.
+    """
+    kx, kw = jax.random.split(key)
+    X = jax.random.normal(kx, (n_data, d))
+    w_true = margin * jax.random.normal(kw, (d,)) / jnp.sqrt(d)
+    p = jax.nn.sigmoid(X @ w_true)
+    y = (jax.random.uniform(jax.random.fold_in(key, 7), (n_data,)) < p
+         ).astype(jnp.float32)
+
+    XtX = X.T @ X / n_data
+    L = float(jnp.linalg.eigvalsh(XtX)[-1] / 4.0 + l2)
+    mu = float(l2)
+
+    def value(w):
+        z = X @ w
+        return jnp.mean(jnp.logaddexp(0.0, z) - y * z) + 0.5 * l2 * w @ w
+
+    def grad(w):
+        z = X @ w
+        return X.T @ (jax.nn.sigmoid(z) - y) / n_data + l2 * w
+
+    def stoch_grad(key, w):
+        idx = jax.random.randint(key, (batch,), 0, n_data)
+        Xb, yb = X[idx], y[idx]
+        z = Xb @ w
+        return Xb.T @ (jax.nn.sigmoid(z) - yb) / batch + l2 * w
+
+    # Newton's method for w*.
+    def newton_step(w, _):
+        z = X @ w
+        s = jax.nn.sigmoid(z)
+        Hn = (X.T * (s * (1 - s))) @ X / n_data + l2 * jnp.eye(d)
+        w = w - jnp.linalg.solve(Hn, grad(w))
+        return w, None
+
+    w_star, _ = jax.lax.scan(newton_step, jnp.zeros(d), None, length=50)
+
+    # Empirical sigma at w0 = 0.
+    keys = jax.random.split(jax.random.fold_in(key, 11), 256)
+    g0 = grad(jnp.zeros(d))
+    gs = jax.vmap(lambda k: stoch_grad(k, jnp.zeros(d)))(keys)
+    sigma = float(jnp.sqrt(jnp.mean(jnp.sum((gs - g0) ** 2, -1)) / (g0 @ g0)))
+    return CostFn(value, grad, stoch_grad, w_star, L, mu, sigma, d)

@@ -1,0 +1,122 @@
+"""The echo mechanism — the paper's main novelty (Sec. 3, communication phase).
+
+A worker that overheard raw gradients ``R = {g_{i_1}, ..., g_{i_k}}`` computes
+the projection of its local gradient onto span(R):
+
+    A = [g_{i_1} | ... | g_{i_k}]  in R^{d x k}
+    x = (A^T A)^{-1} A^T g        (Moore-Penrose least squares)
+    echo gradient  g* = A x
+
+and broadcasts the O(n)-bit echo message (||g||/||g*||, x, I) iff
+
+    ||g* - g|| <= r ||g||.                                        (Eq. 7)
+
+We work with a *masked fixed-shape* representation: the reference buffer is
+always (n, d) with a boolean ``mask`` marking valid rows, so the whole slot
+loop jits. The Gram solve adds a tiny ridge scaled to the Gram diagonal for
+numerical stability (exact MP-inverse in exact arithmetic per Appendix D —
+columns of A are linearly independent by construction).
+
+The server-side reconstruction is ``g~ = k * A_I x`` (paper line 39), which by
+construction satisfies ||g~|| = ||g|| (the norm ratio k restores the original
+magnitude while keeping the echo direction).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EchoDecision(NamedTuple):
+    send_echo: jax.Array     # () bool — Eq. 7 holds and span is non-empty
+    k: jax.Array             # () norm ratio ||g|| / ||g*||
+    x: jax.Array             # (n,) projection coefficients (masked)
+    echo: jax.Array          # (d,) the echo gradient A x
+    residual: jax.Array      # () ||Ax - g|| (diagnostic)
+
+
+def masked_gram(R: jax.Array, mask: jax.Array, ridge: float) -> jax.Array:
+    """Gram matrix A^T A of the masked reference rows, ridged for stability.
+
+    Masked-out rows contribute identity rows/cols so the solve stays
+    well-posed without affecting valid coefficients.
+    """
+    n = R.shape[0]
+    Rm = R * mask[:, None]
+    G = Rm @ Rm.T                                    # (n, n)
+    diag_scale = jnp.maximum(jnp.max(jnp.abs(jnp.diag(G))), 1.0)
+    # Identity on masked-out rows keeps the system invertible there.
+    off = (~mask).astype(G.dtype)
+    G = G + jnp.diag(off * diag_scale + ridge * diag_scale)
+    return G
+
+
+def project_onto_span(
+    R: jax.Array, mask: jax.Array, g: jax.Array, ridge: float = 1e-8
+) -> Tuple[jax.Array, jax.Array]:
+    """Least-squares coefficients x and projection A x of g onto span(R[mask]).
+
+    Equivalent to the paper's x = (A^T A)^{-1} A^T g with A the masked columns
+    (we store gradients as rows, so A = R[mask].T). Returns (x, echo) with
+    x zero outside the mask.
+    """
+    Rm = R * mask[:, None]
+    b = Rm @ g                                       # A^T g, (n,)
+    G = masked_gram(R, mask, ridge)
+    x = jnp.linalg.solve(G, b)
+    x = x * mask
+    echo = x @ Rm                                    # A x, (d,)
+    return x, echo
+
+
+def echo_decision(
+    R: jax.Array,
+    mask: jax.Array,
+    g: jax.Array,
+    r: float,
+    ridge: float = 1e-8,
+) -> EchoDecision:
+    """Full slot-time computation of worker j (paper lines 18-24)."""
+    x, echo = project_onto_span(R, mask, g, ridge)
+    g_norm = jnp.linalg.norm(g)
+    echo_norm = jnp.linalg.norm(echo)
+    residual = jnp.linalg.norm(echo - g)
+    nonempty = jnp.any(mask)
+    ok = (residual <= r * g_norm) & nonempty & (echo_norm > 0)
+    k = jnp.where(echo_norm > 0, g_norm / jnp.maximum(echo_norm, 1e-30), 0.0)
+    return EchoDecision(send_echo=ok, k=k, x=x, echo=echo, residual=residual)
+
+
+def is_linearly_independent(
+    R: jax.Array,
+    mask: jax.Array,
+    g: jax.Array,
+    tol: float = 1e-6,
+    ridge: float = 1e-8,
+) -> jax.Array:
+    """Appendix-D test (line 29): g independent of R iff A A^+ g != g.
+
+    In floating point we use a *relative residual* test: independent iff
+    ||A A^+ g - g|| > tol * ||g||. An empty R always accepts g.
+    """
+    _, proj = project_onto_span(R, mask, g, ridge)
+    res = jnp.linalg.norm(proj - g)
+    return (res > tol * jnp.linalg.norm(g)) | (~jnp.any(mask))
+
+
+def reconstruct_echo(
+    G_server: jax.Array,
+    ref_mask: jax.Array,
+    k: jax.Array,
+    x: jax.Array,
+) -> jax.Array:
+    """Server-side g~ = k * A_I x (paper line 39).
+
+    ``G_server`` is the server's (n, d) gradient table; ``ref_mask`` marks I.
+    Coefficients outside I are zeroed defensively (a Byzantine echo may ship
+    junk there).
+    """
+    xm = x * ref_mask
+    return k * (xm @ (G_server * ref_mask[:, None]))

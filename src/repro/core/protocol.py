@@ -1,0 +1,230 @@
+"""The full Echo-CGC round: computation, communication and aggregation phases.
+
+This is the *faithful* simulation of the paper's Algorithm 1 on a single-hop
+radio network: n TDMA slots in worker-ID order, every broadcast overheard by
+everyone, raw gradients entering the (shared, in-order) reference set if
+linearly independent, echo messages reconstructed by the server, provable
+detection of echoes referencing unheard workers, and CGC-filtered sum update.
+
+Everything is fixed-shape and jittable; the slot loop is a lax.fori_loop.
+
+A note on the reference sets R_j: in the paper each worker keeps its own R_j,
+but every worker hears the same raw broadcasts in the same slot order and
+applies the same deterministic independence test — so R_j is exactly the
+shared in-order independent prefix known at slot j. We therefore keep ONE
+reference buffer keyed by broadcaster ID and snapshot its mask per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregators as agg_lib
+from .byzantine import AttackPlan
+from .cgc import cgc_aggregate
+from .echo import (echo_decision, is_linearly_independent, project_onto_span,
+                   reconstruct_echo)
+from .types import (MSG_ECHO, MSG_RAW, MSG_SILENT, ProtocolConfig, RoundStats,
+                    ServerState, echo_bits, raw_bits)
+
+
+class CommState(NamedTuple):
+    """Carry of the slot loop."""
+
+    G: jax.Array          # (n, d) server gradient table
+    received: jax.Array   # (n,) bool
+    detected: jax.Array   # (n,) bool
+    R: jax.Array          # (n, d) overheard raw gradients (row = sender ID)
+    rmask: jax.Array      # (n,) bool — rows of R that are in the reference set
+    bits: jax.Array       # (n,) float bits transmitted per worker
+    echoed: jax.Array     # (n,) bool — worker sent an echo message
+
+
+def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
+          grads: jax.Array, byz_mask: jax.Array, plan: AttackPlan
+          ) -> CommState:
+    """One TDMA slot: worker i broadcasts; server + all workers process."""
+    n, d = grads.shape
+    g_i = grads[i]
+    is_byz = byz_mask[i]
+
+    # --- Worker i decides what to broadcast (lines 14-24) ----------------
+    dec = echo_decision(st.R, st.rmask, g_i, cfg.r, cfg.ridge)
+    honest_mode = jnp.where(dec.send_echo, MSG_ECHO, MSG_RAW)
+    mode = jnp.where(is_byz, plan.mode[i], honest_mode).astype(jnp.int32)
+
+    raw_msg = jnp.where(is_byz, plan.raw[i], g_i)
+    echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
+    echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
+    echo_ref = jnp.where(is_byz, plan.echo_ref[i], st.rmask)
+
+    is_raw = mode == MSG_RAW
+    is_echo = mode == MSG_ECHO
+
+    # --- Server processes the message (lines 33-41) ----------------------
+    # Echo referencing an unheard worker == provable Byzantine (lines 36-37).
+    bad_ref = jnp.any(echo_ref & ~st.received)
+    detected_i = is_echo & bad_ref
+    g_echo = reconstruct_echo(st.G, echo_ref & st.received, echo_k, echo_x)
+    g_tilde = jnp.where(is_raw, raw_msg,
+                        jnp.where(is_echo & ~bad_ref, g_echo,
+                                  jnp.zeros((d,), grads.dtype)))
+    G = st.G.at[i].set(g_tilde)
+    received = st.received.at[i].set(mode != MSG_SILENT)
+    detected = st.detected.at[i].set(detected_i)
+
+    # --- All later workers overhear raw broadcasts (lines 26-31) ---------
+    indep = is_linearly_independent(st.R, st.rmask, raw_msg, cfg.indep_tol,
+                                    cfg.ridge)
+    add = is_raw & indep
+    R = jnp.where(add, st.R.at[i].set(raw_msg), st.R)
+    rmask = st.rmask.at[i].set(add | st.rmask[i])
+
+    # --- Bit accounting (Sec. 2.1 cost model) -----------------------------
+    rank = jnp.sum(echo_ref & st.received)
+    bits_i = jnp.where(
+        is_raw, float(raw_bits(d)),
+        jnp.where(is_echo, echo_bits(n, rank).astype(jnp.float32), 0.0))
+    bits = st.bits.at[i].set(bits_i)
+    echoed = st.echoed.at[i].set(is_echo)
+
+    return CommState(G, received, detected, R, rmask, bits, echoed)
+
+
+def communication_phase(
+    cfg: ProtocolConfig,
+    grads: jax.Array,
+    byz_mask: jax.Array,
+    plan: AttackPlan,
+) -> Tuple[ServerState, RoundStats]:
+    """Run the n TDMA slots; return the server view and round statistics."""
+    n, d = grads.shape
+    st = CommState(
+        G=jnp.zeros((n, d), grads.dtype),
+        received=jnp.zeros((n,), bool),
+        detected=jnp.zeros((n,), bool),
+        R=jnp.zeros((n, d), grads.dtype),
+        rmask=jnp.zeros((n,), bool),
+        bits=jnp.zeros((n,), jnp.float32),
+        echoed=jnp.zeros((n,), bool),
+    )
+    body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask, plan=plan)
+    st = jax.lax.fori_loop(0, n, body, st)
+
+    server = ServerState(G=st.G, received=st.received, detected=st.detected)
+    stats = RoundStats(
+        bits_sent=st.bits,
+        echo_sent=st.echoed,
+        n_echo=jnp.sum(st.echoed.astype(jnp.int32)),
+        n_detected=jnp.sum(st.detected.astype(jnp.int32)),
+        rank_R=jnp.sum(st.rmask.astype(jnp.int32)),
+    )
+    return server, stats
+
+
+def aggregate(server: ServerState, f: int, aggregator: str = "cgc"
+              ) -> jax.Array:
+    """Aggregation phase. ``cgc`` is the paper's (filter + sum, line 42-44);
+    the rest are baselines operating on the same reconstructed table."""
+    G = jnp.where(server.received[:, None], server.G, 0.0)
+    if aggregator == "cgc":
+        return cgc_aggregate(G, f)
+    return agg_lib.AGGREGATORS[aggregator](G, f)
+
+
+@partial(jax.jit, static_argnames=("cfg", "aggregator"))
+def echo_cgc_round(
+    cfg: ProtocolConfig,
+    w: jax.Array,
+    grads: jax.Array,
+    byz_mask: jax.Array,
+    plan: AttackPlan,
+    aggregator: str = "cgc",
+) -> Tuple[jax.Array, ServerState, RoundStats]:
+    """One full Echo-CGC round given precomputed worker gradients.
+
+    Returns (w_next, server_state, stats). ``grads[j]`` is what an *honest*
+    worker j would send; Byzantine rows are overridden by ``plan``.
+    """
+    server, stats = communication_phase(cfg, grads, byz_mask, plan)
+    g_agg = aggregate(server, cfg.f, aggregator)
+    w_next = w - cfg.eta * g_agg
+    return w_next, server, stats
+
+
+@partial(jax.jit, static_argnames=("cfg", "aggregator"))
+def pointwise_round(
+    cfg: ProtocolConfig,
+    w: jax.Array,
+    grads: jax.Array,
+    byz_mask: jax.Array,
+    plan: AttackPlan,
+    aggregator: str = "cgc",
+) -> Tuple[jax.Array, jax.Array]:
+    """Prior-algorithm baseline round (point-to-point network, no echoes).
+
+    Every worker uploads its raw gradient: bits = n * 32 * d. Used for the
+    communication-complexity comparison and for pure-CGC [11] / Krum [4]
+    baselines.
+    """
+    n, d = grads.shape
+    G = jnp.where(byz_mask[:, None], plan.raw, grads)
+    g_agg = (cgc_aggregate(G, cfg.f) if aggregator == "cgc"
+             else agg_lib.AGGREGATORS[aggregator](G, cfg.f))
+    w_next = w - cfg.eta * g_agg
+    bits = jnp.float32(n * raw_bits(d))
+    return w_next, bits
+
+
+def run_training(
+    cfg: ProtocolConfig,
+    cost,
+    attack_fn: Callable[..., AttackPlan],
+    byz_mask: jax.Array,
+    key: jax.Array,
+    w0: jax.Array,
+    rounds: int,
+    aggregator: str = "cgc",
+    use_radio: bool = True,
+):
+    """Multi-round driver: Echo-CGC (use_radio) or point-to-point baseline.
+
+    Returns a dict of per-round traces: dist2 (||w-w*||^2), value, bits,
+    n_echo, n_detected.
+    """
+    n = cfg.n
+
+    def one_round(carry, key_t):
+        w = carry
+        keys = jax.random.split(key_t, n + 1)
+        grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys[:n])
+        true_grad = cost.grad(w)
+        plan = attack_fn(keys[n], grads, byz_mask, w, true_grad)
+        if use_radio:
+            w_next, server, stats = echo_cgc_round(
+                cfg, w, grads, byz_mask, plan, aggregator)
+            bits = jnp.sum(stats.bits_sent)
+            n_echo = stats.n_echo
+            n_det = stats.n_detected
+        else:
+            w_next, bits = pointwise_round(cfg, w, grads, byz_mask, plan,
+                                           aggregator)
+            n_echo = jnp.int32(0)
+            n_det = jnp.int32(0)
+        out = dict(
+            dist2=jnp.sum((w - cost.w_star) ** 2),
+            value=cost.value(w),
+            bits=bits,
+            n_echo=n_echo,
+            n_detected=n_det,
+        )
+        return w_next, out
+
+    keys = jax.random.split(key, rounds)
+    w_final, trace = jax.lax.scan(one_round, w0, keys)
+    trace["w_final"] = w_final
+    return trace

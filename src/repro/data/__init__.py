@@ -1,0 +1,5 @@
+from .synthetic import (SyntheticConfig, decode_inputs, make_batch_iterator,
+                        synthetic_batch, train_inputs)
+
+__all__ = ["SyntheticConfig", "decode_inputs", "make_batch_iterator",
+           "synthetic_batch", "train_inputs"]

@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipeline.
+
+Two roles:
+
+1. **LM training batches** — a reproducible token stream with a Zipf-like
+   marginal and short-range structure (next token correlated with current),
+   so cross-entropy actually decreases during the example runs and data is
+   cheap to generate on the fly (no disk, offline container).
+
+2. **The paper's shared dataset semantics** — every worker samples an IID
+   mini-batch from the SAME dataset (paper Assumption 4/5); the per-worker
+   batch RNG is derived from (round, worker-id), so runs are bitwise
+   reproducible across aggregator choices.
+
+Modality stubs (DESIGN.md §4): audio frame embeddings and vision patch
+embeddings are generated with the right shapes; the conv codec / ViT that
+would produce them is out of scope by assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import FRONTEND_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2          # marginal skew
+    copy_prob: float = 0.3       # P(next == aux of current): learnable signal
+
+
+def _token_stream(key, cfg: SyntheticConfig, batch: int) -> jax.Array:
+    """(batch, seq_len + 1) int32 tokens with learnable structure."""
+    V = cfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf-ish marginal via exponential transform of uniforms.
+    u = jax.random.uniform(k1, (batch, cfg.seq_len + 1), minval=1e-6)
+    base = jnp.clip((u ** (-1.0 / cfg.zipf_a) - 1.0).astype(jnp.int32), 0,
+                    V - 1)
+    # Deterministic "grammar": tok_{t+1} = (7 * tok_t + 13) % V with prob p —
+    # autoregressive so bigram structure is actually learnable.
+    coin = jax.random.uniform(k2, (batch, cfg.seq_len)) < cfg.copy_prob
+
+    def step(tok, inp):
+        c, b = inp
+        nxt = jnp.where(c, (7 * tok + 13) % V, b)
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(
+        step, base[:, 0],
+        (jnp.moveaxis(coin, 1, 0), jnp.moveaxis(base[:, 1:], 1, 0)))
+    return jnp.concatenate([base[:, :1], jnp.moveaxis(rest, 0, 1)], axis=1)
+
+
+def synthetic_batch(key, cfg: SyntheticConfig) -> Dict[str, jax.Array]:
+    toks = _token_stream(key, cfg, cfg.global_batch)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def train_inputs(key, mcfg: ModelConfig, batch: int, seq: int
+                 ) -> Dict[str, jax.Array]:
+    """A full training batch for any architecture/modality."""
+    scfg = SyntheticConfig(vocab_size=mcfg.vocab_size, seq_len=seq,
+                           global_batch=batch)
+    out = synthetic_batch(key, scfg)
+    if mcfg.frontend == "audio":
+        kf = jax.random.fold_in(key, 1)
+        out["features"] = 0.02 * jax.random.normal(
+            kf, (batch, seq, FRONTEND_DIM["audio"]), jnp.float32)
+        out.pop("tokens")
+    elif mcfg.frontend == "vision":
+        kv = jax.random.fold_in(key, 2)
+        nv = min(mcfg.num_vision_tokens, seq)
+        out["vision_embeds"] = 0.02 * jax.random.normal(
+            kv, (batch, nv, FRONTEND_DIM["vision"]), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(seq), (batch, seq))
+        out["mrope_positions"] = jnp.broadcast_to(pos, (3, batch, seq))
+    return out
+
+
+def decode_inputs(key, mcfg: ModelConfig, batch: int, pos_value: int
+                  ) -> Dict[str, jax.Array]:
+    """One decode-step input (token + position)."""
+    tok = jax.random.randint(key, (batch, 1), 0, mcfg.vocab_size,
+                             jnp.int32)
+    pos = jnp.full((batch,), pos_value, jnp.int32)
+    return {"token": tok, "pos": pos}
+
+
+def make_batch_iterator(mcfg: ModelConfig, batch: int, seq: int,
+                        seed: int = 0) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite deterministic batch iterator (host-side jitted generator)."""
+    gen = jax.jit(lambda k: train_inputs(k, mcfg, batch, seq))
+    step = 0
+    while True:
+        yield gen(jax.random.fold_in(jax.random.PRNGKey(seed), step))
+        step += 1

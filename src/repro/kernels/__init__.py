@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §5).
+
+  cgc_clip.py         — fused norm+clip over (n, d) gradients (server agg)
+  echo_project.py     — single-pass Gram reduction for the echo projection
+  decode_attention.py — flash-decode GQA over long KV caches (serving)
+
+``ops`` holds the jitted public wrappers (interpret-mode on CPU); ``ref``
+holds the pure-jnp oracles every kernel is tested against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

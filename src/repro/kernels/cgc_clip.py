@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused CGC norm + clip over an (n, d) gradient stack.
+
+The server's aggregation phase (paper Eq. 8) is two streaming passes over a
+matrix whose row count n is tiny (#workers) but whose row length d is huge
+(model dimension) — a textbook memory-bound shape. The kernel tiles d
+through VMEM in (n, BLOCK_D) tiles:
+
+  pass 1 (``norms_kernel``): accumulate per-row sum-of-squares in an (n,)
+         fp32 VMEM accumulator while streaming the tiles;
+  host:  sort n floats -> threshold = the (n-f)-th smallest norm (O(n log n)
+         on n <= a few hundred — never worth a kernel);
+  pass 2 (``scale_kernel``): re-stream the tiles, multiplying each row by
+         min(1, thr / norm).
+
+d-tiles are MXU/VPU aligned (BLOCK_D multiple of 128); n is padded to 8
+(sublane) by the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _norms_kernel(g_ref, out_ref, acc_ref):
+    """Grid (d_blocks,). Accumulate row sum-of-squares into acc (n, 1)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = g_ref[...].astype(F32)                    # (n, BLOCK_D)
+    acc_ref[...] += jnp.sum(blk * blk, axis=1, keepdims=True)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def row_sq_norms(G: jax.Array, block_d: int = DEFAULT_BLOCK_D,
+                 interpret: bool = False) -> jax.Array:
+    """(n, d) -> (n,) fp32 sum of squares per row."""
+    n, d = G.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    out = pl.pallas_call(
+        _norms_kernel,
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), F32),
+        scratch_shapes=[pltpu.VMEM((n, 1), F32)],
+        interpret=interpret,
+    )(G)
+    return out[:, 0]
+
+
+def _scale_kernel(g_ref, scale_ref, out_ref):
+    """Grid (d_blocks,). out = g * scale (row-broadcast)."""
+    out_ref[...] = (g_ref[...].astype(F32) * scale_ref[...]).astype(
+        out_ref.dtype)
+
+
+def scale_rows(G: jax.Array, scale: jax.Array,
+               block_d: int = DEFAULT_BLOCK_D,
+               interpret: bool = False) -> jax.Array:
+    n, d = G.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda i: (0, i)),
+                  pl.BlockSpec((n, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), G.dtype),
+        interpret=interpret,
+    )(G, scale.reshape(n, 1))

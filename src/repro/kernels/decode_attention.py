@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: flash-decode GQA — one query token vs a long KV cache.
+
+The serving hot-spot for decode_32k / long_500k: memory-bound streaming of
+the (T, K, hd) cache with an online-softmax accumulator. Grid is
+(batch, kv_blocks); TPU executes the last grid dimension sequentially per
+batch row, so the (H, hd) output accumulator + (H,) running max / sum live
+in VMEM scratch across kv blocks and are finalised on the last block.
+
+Masking: the caller passes a (B, T) bool mask (valid cache slots, causal /
+sliding-window semantics already applied — same contract as ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_T = 512
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
+                   acc_ref, m_ref, l_ref, *, n_groups: int):
+    """Grid (B, T_blocks). Online softmax over kv blocks."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(F32)                         # (H, hd)
+    k = k_ref[0].astype(F32)                         # (bt, K, hd)
+    v = v_ref[0].astype(F32)                         # (bt, K, hd)
+    mask = mask_ref[0]                               # (bt,)
+    H, hd = q.shape
+    bt, K, _ = k.shape
+    G = n_groups
+
+    qg = q.reshape(K, G, hd)
+    s = jnp.einsum("kgh,tkh->kgt", qg, k,
+                   preferred_element_type=F32) * hd ** -0.5  # (K, G, bt)
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (K, G)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])                # (K, G, bt)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("kgt,tkh->kgh", p, v,
+                    preferred_element_type=F32)      # (K, G, hd)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_cur
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out_ref[0] = out.reshape(H, hd).astype(out_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, block_t: int = DEFAULT_BLOCK_T,
+                     interpret: bool = False) -> jax.Array:
+    """q (B,H,hd), k/v (B,T,K,hd), mask (B,T) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    _, T, K, _ = k.shape
+    G = H // K
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    kern = functools.partial(_decode_kernel, n_groups=G)
+    return pl.pallas_call(
+        kern,
+        grid=(B, T // bt),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, t: (b, 0, 0)),
+            pl.BlockSpec((1, bt, K, hd), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, bt, K, hd), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, bt), lambda b, t: (b, t)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, t: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((K, G, hd), F32),
+                        pltpu.VMEM((K, G), F32),
+                        pltpu.VMEM((K, G), F32)],
+        interpret=interpret,
+    )(q, k, v, mask)

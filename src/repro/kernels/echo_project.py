@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused Gram reduction for the echo projection.
+
+The paper's worker computes x = (A^T A)^{-1} A^T g with A the d x |R| matrix
+of overheard gradients (d up to 10^7, |R| <= n). Forming the Moore-Penrose
+inverse explicitly materialises an |R| x d matrix — pointless data movement
+on TPU. The TPU-rethink (DESIGN.md §5): stream A (stored row-major, (n, d))
+and g through VMEM once, accumulating BOTH
+
+    G = A A^T   (n x n Gram)      and      b = A g   (n,)
+
+in a single pass, then solve the tiny ridge system G x = b on the host side
+of the op (jnp.linalg.solve on an (n, n) matrix). One kernel, one read of
+the gradients, MXU-shaped (n_pad x BLOCK_D) @ (BLOCK_D x n_pad) per tile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+DEFAULT_BLOCK_D = 1024
+
+
+def _gram_kernel(a_ref, g_ref, gram_ref, b_ref, gram_acc, b_acc):
+    """Grid (d_blocks,). gram += A_blk @ A_blk^T; b += A_blk @ g_blk."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_acc[...] = jnp.zeros_like(gram_acc)
+        b_acc[...] = jnp.zeros_like(b_acc)
+
+    a = a_ref[...].astype(F32)                       # (n, BLOCK_D)
+    g = g_ref[...].astype(F32)                       # (1, BLOCK_D)
+    gram_acc[...] += jax.lax.dot_general(
+        a, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=F32)                  # (n, n)
+    b_acc[...] += jnp.sum(a * g, axis=1, keepdims=True)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _done():
+        gram_ref[...] = gram_acc[...]
+        b_ref[...] = b_acc[...]
+
+
+def gram_and_proj(A: jax.Array, g: jax.Array,
+                  block_d: int = DEFAULT_BLOCK_D,
+                  interpret: bool = False):
+    """(A (n, d), g (d,)) -> (A A^T (n, n), A g (n,)), fp32, one pass."""
+    n, d = A.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    gram, b = pl.pallas_call(
+        _gram_kernel,
+        grid=(d // bd,),
+        in_specs=[pl.BlockSpec((n, bd), lambda i: (0, i)),
+                  pl.BlockSpec((1, bd), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((n, n), lambda i: (0, 0)),
+                   pl.BlockSpec((n, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, n), F32),
+                   jax.ShapeDtypeStruct((n, 1), F32)],
+        scratch_shapes=[pltpu.VMEM((n, n), F32), pltpu.VMEM((n, 1), F32)],
+        interpret=interpret,
+    )(A, g.reshape(1, d))
+    return gram, b[:, 0]

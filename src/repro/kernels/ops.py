@@ -1,0 +1,109 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels run compiled; everywhere else (this CPU
+container, unit tests) they run in interpret mode against the same
+BlockSpecs, keeping the contract identical to the ref.py oracles.
+
+These ops pad shapes to kernel-friendly multiples (n -> multiple of 8
+sublanes, d -> multiple of the d-block) and strip the padding afterwards,
+so callers can use arbitrary worker counts / dimensions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cgc_clip as _cgc
+from repro.kernels import decode_attention as _dec
+from repro.kernels import echo_project as _gram
+
+F32 = jnp.float32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
+def cgc_clip(G: jax.Array, f: int, block_d: int = 2048,
+             interpret: bool | None = None) -> jax.Array:
+    """Fused CGC filter (Eq. 8) on an (n, d) gradient stack."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = G.shape
+    bd = min(block_d, max(128, 1 << (d - 1).bit_length() if d < block_d
+                          else block_d))
+    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    sq = _cgc.row_sq_norms(Gp, bd, interpret)[:n]
+    norms = jnp.sqrt(sq)
+    thr = jnp.sort(norms)[n - f - 1]
+    scale = jnp.minimum(1.0, thr / jnp.maximum(norms, 1e-12))
+    scale_p = jnp.pad(scale, (0, Gp.shape[0] - n))
+    out = _cgc.scale_rows(Gp, scale_p, bd, interpret)
+    return out[:n, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cgc_norms(G: jax.Array, block_d: int = 2048,
+              interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = G.shape
+    bd = min(block_d, max(128, d))
+    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    return jnp.sqrt(_cgc.row_sq_norms(Gp, bd, interpret)[:n])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ridge", "block_d", "interpret"))
+def echo_project(A: jax.Array, mask: jax.Array, g: jax.Array,
+                 ridge: float = 1e-8, block_d: int = 1024,
+                 interpret: bool | None = None):
+    """Kernel-accelerated projection of g onto span(A[mask]).
+
+    Same contract as repro.core.echo.project_onto_span: returns (x, echo).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = A.shape
+    bd = min(block_d, max(128, d))
+    Am = A * mask[:, None]
+    Ap = _pad_to(_pad_to(Am, 8, 0), bd, 1)
+    gp = _pad_to(g[None], bd, 1)[0]
+    gram, b = _gram.gram_and_proj(Ap, gp, bd, interpret)
+    gram, b = gram[:n, :n], b[:n]
+    diag_scale = jnp.maximum(jnp.max(jnp.abs(jnp.diag(gram))), 1.0)
+    off = (~mask).astype(F32)
+    gram = gram + jnp.diag(off * diag_scale + ridge * diag_scale)
+    x = jnp.linalg.solve(gram, b) * mask
+    echo = x @ Am
+    return x, echo
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, block_t: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """Flash-decode GQA (see decode_attention.py); ref.decode_attention_ref
+    is the oracle."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, K, hd = k.shape
+    bt = min(block_t, T)
+    if T % bt:
+        k = _pad_to(k, bt, 1)
+        v = _pad_to(v, bt, 1)
+        mask = _pad_to(mask, bt, 1)
+    return _dec.decode_attention(q, k, v, mask, bt, interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the mathematically transparent implementation the kernels
+are tested against with ``jnp.allclose`` over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def cgc_norms_ref(G: jax.Array) -> jax.Array:
+    """Row L2 norms of an (n, d) gradient stack, fp32 accumulation."""
+    return jnp.sqrt(jnp.sum(G.astype(F32) ** 2, axis=-1))
+
+
+def cgc_clip_ref(G: jax.Array, f: int, eps: float = 1e-12) -> jax.Array:
+    """The full CGC filter (Eq. 8): clip top-f norms to the (n-f)-th norm."""
+    norms = cgc_norms_ref(G)
+    n = norms.shape[0]
+    thr = jnp.sort(norms)[n - f - 1]
+    scale = jnp.minimum(1.0, thr / jnp.maximum(norms, eps))
+    return (G.astype(F32) * scale[:, None]).astype(G.dtype)
+
+
+def gram_ref(A: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Echo projection inputs: (A A^T, A g) for row-stacked gradients.
+
+    A: (n, d) — the overheard reference gradients as rows; g: (d,).
+    Returns (G (n, n), b (n,)) in fp32. The worker then solves G x = b
+    instead of forming the Moore-Penrose pseudo-inverse explicitly.
+    """
+    Af = A.astype(F32)
+    return Af @ Af.T, Af @ g.astype(F32)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    """GQA single-token decode attention.
+
+    q: (B, H, hd); k/v: (B, T, K, hd) with H = K*G; mask: (B, T) bool
+    (True = attend). Returns (B, H, hd) in q.dtype, fp32 softmax.
+    """
+    B, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(F32)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k.astype(F32)) * hd ** -0.5
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(F32))
+    return out.reshape(B, H, hd).astype(q.dtype)

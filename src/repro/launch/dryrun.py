@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init). This module is the ONLY place that forces 512 host
+devices — smoke tests and benchmarks see the real single CPU device.
+
+For each pair this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds abstract params / optimizer state / inputs (ShapeDtypeStruct,
+     zero allocation),
+  3. jits the right step (train_step / prefill / serve_step) with explicit
+     in_shardings, .lower()s and .compile()s it,
+  4. records memory_analysis(), cost_analysis() and the per-collective byte
+     counts parsed from the compiled HLO -> JSON under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.dist import tree_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_params, batch_for,
+                                check_applicability, decode_specs,
+                                long_context_variant)
+from repro.launch.train import (TrainSettings, make_train_step,
+                                opt_state_shardings)
+from repro.launch.serve import make_prefill, make_serve_step
+from repro.models.nn import Param, split_params
+from repro.optim import adamw
+
+# one HLO op definition per line: "%name = <result shape(s)> <op>(...)"
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(?P<lhs>.*?)\s(?P<op>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+               "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,1024]{...}' or '(f32[..], f32[..])' (tuple) -> bytes."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes per collective kind (per-device module).
+
+    Wire-byte estimates use standard ring-algorithm factors: all-reduce
+    moves ~2x its buffer, all-gather/reduce-scatter ~1x the large buffer,
+    all-to-all / collective-permute ~1x.
+    """
+    per_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        if not any(op in line for op in COLLECTIVE_OPS):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("lhs"))       # sums all dtype[dims] on LHS
+        per_kind[op] = per_kind.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+    wire = 0.0
+    for op, b in per_kind.items():
+        wire += 2.0 * b if op == "all-reduce" else float(b)
+    return {"result_bytes": per_kind, "counts": counts, "wire_bytes": wire}
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in dict(ca).items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def dryrun_pair(arch: str, shape_name: str, multi_pod: bool,
+                moe_impl: str = "tp", microbatches: Optional[int] = None,
+                compile_: bool = True, variant: str = "baseline",
+                param_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """Lower+compile one (arch, shape, mesh, variant) -> record.
+
+    Variants (§Perf hillclimbs): "baseline"; "fsdp" (params+opt sharded over
+    data, blockwise-CGC reduce); "fsdp_savepsum" (fsdp + save_psum remat
+    policy); "echo_dp" (echo-compressed aggregation fast path).
+    ``param_dtype`` overrides the config's parameter dtype (e.g. bfloat16).
+    """
+    import dataclasses as _dc
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    if param_dtype:
+        cfg = _dc.replace(cfg, param_dtype=param_dtype)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "kind": shape.kind,
+                           "moe_impl": moe_impl, "variant": variant,
+                           "param_dtype": cfg.param_dtype}
+
+    skip = check_applicability(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    cfg = long_context_variant(cfg, shape)
+    rec["sliding_window"] = cfg.sliding_window
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(dict(mesh.shape).values())))
+    rec["chips"] = n_chips
+
+    params_abs = abstract_params(cfg)
+    values_abs, _ = split_params(params_abs)
+    pshard = tree_shardings(params_abs, mesh)
+    vshard, _ = split_params(
+        jax.tree.map(lambda p, s: Param(s, p.axes), params_abs, pshard,
+                     is_leaf=lambda x: isinstance(x, Param)))
+    rec["param_count"] = int(sum(np.prod(l.shape)
+                                 for l in jax.tree.leaves(values_abs)))
+    rec["param_bytes_global"] = _tree_bytes(values_abs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        sizes_chk = dict(mesh.shape)
+        dp_chk = sizes_chk.get("data", 1) * sizes_chk.get("pod", 1)
+        per_worker = shape.global_batch // dp_chk
+        if microbatches is not None and per_worker % microbatches:
+            raise ValueError(
+                f"microbatches={microbatches} must divide per-worker batch "
+                f"{per_worker} (zero-sized slices otherwise)")
+        if microbatches is None:
+            # heuristic: bound per-device tokens per microbatch so the
+            # remat-saved layer boundaries (L x tok x d_model x 2B) fit HBM.
+            sizes = dict(mesh.shape)
+            dp = sizes.get("data", 1) * sizes.get("pod", 1)
+            tok_per_dev = shape.global_batch * shape.seq_len // dp
+            budget = (8192 if cfg.d_model < 4096
+                      else 4096 if cfg.d_model < 8192 else 2048)
+            microbatches = max(1, tok_per_dev // budget)
+            # batch per worker must stay divisible
+            while (shape.global_batch // dp) % microbatches:
+                microbatches -= 1
+        rec["microbatches"] = microbatches
+        opt = adamw(1e-4)
+        opt_abs = jax.eval_shape(opt.init, values_abs)
+        settings = TrainSettings(
+            aggregator="cgc", f=1, microbatches=microbatches,
+            moe_impl=moe_impl, fsdp=variant.startswith("fsdp"),
+            remat="save_psum" if "savepsum" in variant else "full")
+        batch_abs_p = batch_for(cfg, shape)
+        batch_abs, _ = split_params(batch_abs_p)
+        bshard, _ = split_params(jax.tree.map(
+            lambda p, s: Param(s, p.axes), batch_abs_p,
+            tree_shardings(batch_abs_p, mesh),
+            is_leaf=lambda x: isinstance(x, Param)))
+        sshard = NamedSharding(mesh, P())
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        if variant.startswith("fsdp"):
+            from repro.launch.train import make_fsdp_train_step
+            step_fn, ctx, (vshard_f, plan) = make_fsdp_train_step(
+                cfg, opt, settings, mesh, shape.global_batch)
+            vshard_plain, _ = split_params(jax.tree.map(
+                lambda p, s: Param(s, p.axes), params_abs, vshard_f,
+                is_leaf=lambda x: isinstance(x, Param)))
+            oshard = opt_state_shardings(opt_abs, params_abs, mesh,
+                                         override=vshard_plain)
+            jitted = jax.jit(step_fn, in_shardings=(vshard_plain, oshard,
+                                                    bshard, sshard))
+            lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs)
+        elif variant == "echo_dp":
+            from repro.launch.train import make_echo_train_step
+            settings = _dc.replace(settings, echo_k=4, echo_r=0.9)
+            step_fn, ctx = make_echo_train_step(cfg, opt, settings, mesh,
+                                                shape.global_batch)
+            basis_abs = [jax.tree.map(
+                lambda v: jax.ShapeDtypeStruct(v.shape, jnp.float32),
+                values_abs) for _ in range(settings.echo_k)]
+            bshard_basis = [jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), values_abs)
+                for _ in range(settings.echo_k)]
+            oshard = opt_state_shardings(opt_abs, params_abs, mesh)
+            jitted = jax.jit(
+                step_fn, in_shardings=(vshard, oshard, bshard, sshard,
+                                       bshard_basis))
+            lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs,
+                                   basis_abs)
+        else:
+            step_fn, ctx = make_train_step(cfg, opt, settings, mesh,
+                                           shape.global_batch)
+            oshard = opt_state_shardings(opt_abs, params_abs, mesh)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(vshard, oshard, bshard, sshard))
+            lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs)
+    elif shape.kind == "prefill":
+        fn, ctx = make_prefill(cfg, mesh, shape.global_batch)
+        batch_abs_p = batch_for(cfg, shape)
+        batch_abs, _ = split_params(batch_abs_p)
+        bshard, _ = split_params(jax.tree.map(
+            lambda p, s: Param(s, p.axes), batch_abs_p,
+            tree_shardings(batch_abs_p, mesh),
+            is_leaf=lambda x: isinstance(x, Param)))
+        jitted = jax.jit(fn, in_shardings=(vshard, bshard))
+        lowered = jitted.lower(values_abs, batch_abs)
+    else:  # decode
+        fn, ctx = make_serve_step(cfg, mesh, shape.global_batch)
+        io_specs, cache_abs_p = decode_specs(cfg, shape)
+        cache_abs, _ = split_params(cache_abs_p)
+        cshard, _ = split_params(jax.tree.map(
+            lambda p, s: Param(s, p.axes), cache_abs_p,
+            tree_shardings(cache_abs_p, mesh),
+            is_leaf=lambda x: isinstance(x, Param)))
+        io_abs, _ = split_params(io_specs)
+        ioshard, _ = split_params(jax.tree.map(
+            lambda p, s: Param(s, p.axes), io_specs,
+            tree_shardings(io_specs, mesh),
+            is_leaf=lambda x: isinstance(x, Param)))
+        rec["cache_bytes_global"] = _tree_bytes(cache_abs)
+        jitted = jax.jit(fn, in_shardings=(vshard, cshard,
+                                           ioshard["token"], ioshard["pos"]))
+        lowered = jitted.lower(values_abs, cache_abs, io_abs["token"],
+                               io_abs["pos"])
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    if not compile_:
+        rec["status"] = "lowered"
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["memory_analysis"] = _mem_analysis(compiled)
+    rec["cost_analysis"] = _cost_analysis(compiled)
+    rec["collectives"] = collective_bytes(compiled.as_text())
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-impl", default="tp")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "fsdp", "fsdp_savepsum",
+                             "echo_dp"])
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in pairs:
+        tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
+        if args.variant != "baseline":
+            tag += f"__{args.variant}"
+        if args.moe_impl != "tp":
+            tag += f"__{args.moe_impl}"
+        if args.param_dtype:
+            tag += f"__{args.param_dtype}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as fh:
+                prev = json.load(fh)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached]  {tag}: {prev['status']}")
+                n_ok += prev["status"] == "ok"
+                n_skip += prev["status"] == "skipped"
+                continue
+        print(f"[dryrun]  {tag} ...", flush=True)
+        try:
+            rec = dryrun_pair(a, s, mp, moe_impl=args.moe_impl,
+                              compile_=not args.no_compile,
+                              variant=args.variant,
+                              param_dtype=args.param_dtype,
+                              microbatches=args.microbatches)
+        except Exception as e:
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=2)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skipped"
+        n_fail += st == "error"
+        extra = ""
+        if st == "ok":
+            ma = rec.get("memory_analysis", {})
+            if "temp_size_in_bytes" in ma:
+                extra = f" temp={ma['temp_size_in_bytes']/2**30:.2f}GiB"
+            extra += (f" lower={rec.get('lower_s')}s"
+                      f" compile={rec.get('compile_s')}s")
+        if st == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[{st:7s}] {tag}{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail} "
+          f"of {len(pairs)}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

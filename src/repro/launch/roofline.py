@@ -1,0 +1,292 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+    compute    = FLOPs / (chips x 197e12)          [bf16 peak, v5e]
+    memory     = HBM bytes / (chips x 819e9)
+    collective = wire bytes / (chips x 50e9)       [per-link ICI]
+
+FLOP/byte sources. ``compiled.cost_analysis()`` on XLA counts while-loop
+bodies ONCE — our layer scan, microbatch scan and q-chunk scans make the raw
+number a single-iteration cost, so the roofline uses an ANALYTIC model
+(formulas below, standard MFU accounting) as the primary source and records
+the compiled numbers alongside with their known trip-count caveat
+(EXPERIMENTS.md §Roofline documents the cross-check). Collective bytes come
+from the compiled HLO inventory (which collectives exist, at what shapes)
+with trip counts applied from the known static structure.
+
+All quantities are PER DEVICE per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import long_context_variant
+
+BF16 = 2
+F32 = 4
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward FLOPs per token (matmul-only, 2*m*n*k convention)
+# ---------------------------------------------------------------------------
+
+
+def _attn_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    """GQA/MLA projections + score/PV at average context length ``ctx``."""
+    d = cfg.d_model
+    if cfg.attn_type == "mla":
+        nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H, lora, qlora = cfg.num_heads, cfg.kv_lora_rank, cfg.q_lora_rank
+        q = 2 * (d * qlora + qlora * H * (nd + rd)) if qlora else \
+            2 * d * H * (nd + rd)
+        kv = 2 * (d * (lora + rd) + lora * H * (nd + vd))
+        o = 2 * H * vd * d
+        sc = 2 * H * (nd + rd) * ctx + 2 * H * vd * ctx
+        return q + kv + o + sc
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    proj = 2 * d * hd * (2 * H + 2 * K)
+    sc = 2 * H * hd * ctx * 2
+    return proj + sc
+
+
+def _ffn_flops_per_tok(cfg: ModelConfig, d_ff: int) -> float:
+    return 2 * 3 * cfg.d_model * d_ff
+
+
+def _moe_flops_per_tok(cfg: ModelConfig) -> float:
+    route = 2 * cfg.d_model * cfg.num_experts
+    expert = cfg.top_k * _ffn_flops_per_tok(cfg, cfg.moe_d_ff)
+    shared = _ffn_flops_per_tok(cfg, cfg.num_shared_experts * cfg.moe_d_ff) \
+        if cfg.num_shared_experts else 0.0
+    return route + expert + shared
+
+
+def _ssm_flops_per_tok(cfg: ModelConfig) -> float:
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    H = cfg.ssm_num_heads
+    Q = cfg.ssm_chunk
+    proj = 2 * d * (2 * di + 2 * N + H) + 2 * di * d
+    conv = 2 * cfg.conv_width * (di + 2 * N)
+    # SSD per token: CB row (Q x N), intra apply (Q x di), inter output
+    # (N x di), amortised state update (~3 N di / Q per token)
+    ssd = 2 * Q * N + 2 * Q * di + 2 * N * di + 6 * N * di / Q
+    return proj + conv + ssd
+
+
+def _xlstm_flops_per_tok(cfg: ModelConfig, kind: str, ctx: float) -> float:
+    d = cfg.d_model
+    if kind == "m":
+        ed = 2 * d
+        # up (d -> 2ed), qkv (3 x ed x ed), gates, down (ed -> d)
+        proj = 2 * d * 2 * ed + 3 * 2 * ed * ed + 2 * ed * d
+        sc = 2 * ed * ctx * 2              # scores + PV over context
+        return proj + sc
+    dh = d // cfg.num_heads
+    Fd = 4 * d // 3
+    # 4 gate input mats (d x d), block-diag recurrent (4 x d x dh), FFN
+    return 4 * 2 * d * d + 4 * 2 * d * dh + 2 * 3 * d * Fd
+
+
+def fwd_flops_per_token(cfg: ModelConfig, ctx: float) -> float:
+    """Average forward FLOPs per token across all layers + LM head."""
+    L = cfg.num_layers
+    total = 0.0
+    if cfg.family in ("dense", "vlm", "audio"):
+        total = L * (_attn_flops_per_tok(cfg, ctx)
+                     + _ffn_flops_per_tok(cfg, cfg.d_ff))
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        total = (nd * (_attn_flops_per_tok(cfg, ctx)
+                       + _ffn_flops_per_tok(cfg, cfg.d_ff))
+                 + (L - nd) * (_attn_flops_per_tok(cfg, ctx)
+                               + _moe_flops_per_tok(cfg)))
+    elif cfg.family == "hybrid":
+        n_attn = L // cfg.shared_attn_every
+        total = (L * _ssm_flops_per_tok(cfg)
+                 + n_attn * (_attn_flops_per_tok(cfg, ctx)
+                             + _ffn_flops_per_tok(cfg, cfg.d_ff)))
+    elif cfg.family == "ssm":
+        total = sum(_xlstm_flops_per_tok(cfg, k, ctx)
+                    for k in cfg.xlstm_pattern)
+    if not cfg.is_encoder:
+        total += 2 * cfg.d_model * cfg.padded_vocab     # LM head
+    return total
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: top-k + shared only)."""
+    d, L = cfg.d_model, cfg.num_layers
+    if cfg.attn_type == "mla":
+        nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        H, lora, qlora = cfg.num_heads, cfg.kv_lora_rank, cfg.q_lora_rank
+        attn = ((d * qlora + qlora * H * (nd + rd)) if qlora
+                else d * H * (nd + rd)) + d * (lora + rd) \
+            + lora * H * (nd + vd) + H * vd * d
+    else:
+        hd = cfg.resolved_head_dim
+        attn = d * hd * (2 * cfg.num_heads + 2 * cfg.num_kv_heads)
+    if cfg.family == "moe":
+        ffn = (cfg.top_k + cfg.num_shared_experts) * 3 * d * cfg.moe_d_ff \
+            + d * cfg.num_experts
+        nd_l = cfg.first_dense_layers
+        per_layer = attn + ffn
+        total = nd_l * (attn + 3 * d * cfg.d_ff) + (L - nd_l) * per_layer
+    elif cfg.family == "hybrid":
+        di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+        mamba = d * (2 * di + 2 * N + H) + di * d
+        n_attn = L // cfg.shared_attn_every
+        total = L * mamba + n_attn * (attn + 3 * d * cfg.d_ff)
+    elif cfg.family == "ssm":
+        total = sum((d * 4 * d + 4 * d * 2 + 2 * d * d * 2) if k == "m"
+                    else (4 * d * d + 3 * d * (4 * d // 3))
+                    for k in cfg.xlstm_pattern)
+    else:
+        total = L * (attn + 3 * d * cfg.d_ff)
+    total += d * cfg.padded_vocab * (1 if cfg.tie_embeddings or
+                                     cfg.is_encoder else 2)
+    return float(total)
+
+
+# ---------------------------------------------------------------------------
+# Per-device roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    hlo_flops_device: Optional[float]
+    useful_ratio: Optional[float]
+    fit_hbm: Optional[bool]
+    note: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cfg: ModelConfig, shape: ShapeConfig, chips: int, dp: int,
+            tp: int, dryrun_rec: Optional[Dict[str, Any]] = None
+            ) -> Roofline:
+    cfg = long_context_variant(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+
+    if kind == "decode":
+        tokens_global = B                       # one token per sequence
+        ctx = min(S, cfg.sliding_window or S)   # cache length read
+    else:
+        tokens_global = B * S
+        ctx = (min(S, cfg.sliding_window or S) / 2
+               if cfg.causal else min(S, cfg.sliding_window or S))
+
+    fwd_tok = fwd_flops_per_token(cfg, ctx)
+    mult = 3.0 if kind == "train" else 1.0      # fwd+bwd; remat excluded
+    flops_global = fwd_tok * tokens_global * mult
+    flops_dev = flops_global / chips
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+
+    # ---- memory term: parameter + state + activation traffic ----------
+    n_active = active_params(cfg)
+    p_total = dryrun_rec.get("param_bytes_global", n_active * F32) \
+        if dryrun_rec else n_active * F32
+    p_dev = p_total / tp                        # params sharded over model
+    tok_dev = tokens_global / (dp if kind != "decode" or B >= dp else 1)
+    if kind == "train":
+        micro = (dryrun_rec or {}).get("microbatches", 1) or 1
+        # params re-read every microbatch fwd+bwd, opt update 3x params,
+        # activation traffic ~24 bytes/elem-layer (bf16 in+out, few tensors)
+        bytes_dev = (p_dev * (2 * micro + 3)
+                     + tok_dev * cfg.d_model * cfg.num_layers * 24 * BF16 / 2)
+    elif kind == "prefill":
+        bytes_dev = p_dev / 2 + tok_dev * cfg.d_model * cfg.num_layers * 12
+    else:
+        cache = (dryrun_rec or {}).get("cache_bytes_global", 0) or \
+            _cache_bytes(cfg, B, S)
+        bytes_dev = p_dev / 2 + cache / chips
+    memory_s = bytes_dev / HBM_BW
+
+    # ---- collective term ----------------------------------------------
+    coll_dev = _collective_bytes(cfg, shape, dp, tp, kind,
+                                 (dryrun_rec or {}).get("microbatches", 1)
+                                 or 1, p_total, tokens_global)
+    collective_s = coll_dev / ICI_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    hlo = None
+    ratio = None
+    fit = None
+    if dryrun_rec and dryrun_rec.get("status") == "ok":
+        hlo = dryrun_rec.get("cost_analysis", {}).get("flops")
+        ma = dryrun_rec.get("memory_analysis", {})
+        if ma:
+            used = (ma.get("argument_size_in_bytes", 0)
+                    + ma.get("temp_size_in_bytes", 0))
+            fit = used <= 16 * 2 ** 30
+    model_flops = 6.0 * n_active * tokens_global if kind == "train" else \
+        2.0 * n_active * tokens_global
+    if flops_global:
+        ratio = model_flops / flops_global
+    return Roofline(
+        arch=cfg.name, shape=shape.name,
+        mesh=f"{dp}x{tp}" if chips == dp * tp else f"{chips}",
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_global=model_flops,
+        hlo_flops_device=hlo, useful_ratio=ratio, fit_hbm=fit)
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    T = min(S, cfg.sliding_window or S)
+    if cfg.family in ("ssm", "hybrid"):
+        di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                       cfg.ssm_head_dim)
+        per = B * (H * N * P * F32 + (cfg.conv_width - 1) * (di + 2 * N)
+                   * BF16)
+        base = cfg.num_layers * per
+        if cfg.family == "hybrid":
+            n_attn = cfg.num_layers // cfg.shared_attn_every
+            base += n_attn * B * T * 2 * cfg.num_kv_heads * \
+                cfg.resolved_head_dim * BF16
+        return base
+    if cfg.attn_type == "mla":
+        return cfg.num_layers * B * T * (cfg.kv_lora_rank
+                                         + cfg.qk_rope_head_dim) * BF16
+    return cfg.num_layers * B * T * 2 * cfg.num_kv_heads * \
+        cfg.resolved_head_dim * BF16
+
+
+def _collective_bytes(cfg: ModelConfig, shape: ShapeConfig, dp: int,
+                      tp: int, kind: str, micro: int, p_total: float,
+                      tokens_global: float) -> float:
+    """Analytic per-device wire bytes per step (ring-algorithm factors:
+    all-reduce ~ 2x its buffer; all-gathers of O(n) norms are negligible).
+
+      train : CGC gradient psum over the data axes (2 x local param shard)
+              + tensor-parallel activation psums (2/layer fwd, 2/layer bwd)
+      prefill/decode : tensor-parallel activation psums (2/layer)
+    """
+    coll = 0.0
+    if kind == "train" and dp > 1:
+        coll += 2.0 * (p_total / tp)             # CGC-filtered grad psum
+    if tp > 1:
+        tokens_dev = tokens_global / max(dp, 1)
+        act_dev = tokens_dev * cfg.d_model * BF16
+        psums_per_layer = 4 if kind == "train" else 2
+        coll += 2.0 * act_dev * psums_per_layer * cfg.num_layers
+    return coll

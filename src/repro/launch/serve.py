@@ -1,0 +1,55 @@
+"""Serving: batched single-token decode (serve_step) and prefill.
+
+``make_serve_step``/``make_prefill`` return jittable functions used by the
+dry-run, the decode benchmarks and the serving example.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import ShardCtx, make_shard_ctx
+from repro.models import model as M
+
+F32 = jnp.float32
+
+
+def make_serve_step(cfg: ModelConfig, mesh, global_batch: int,
+                    moe_impl: str = "tp") -> Tuple[Callable, ShardCtx]:
+    """serve_step(values, cache, token, pos) -> (logits, new_cache)."""
+    ctx = make_shard_ctx(mesh, global_batch, moe_impl)
+
+    def serve_step(values, cache, token, pos):
+        return M.decode_step(values, cfg, cache, token, pos,
+                             shard_ctx=ctx if mesh is not None else None)
+
+    return serve_step, ctx
+
+
+def make_prefill(cfg: ModelConfig, mesh, global_batch: int,
+                 moe_impl: str = "tp") -> Tuple[Callable, ShardCtx]:
+    """prefill(values, inputs) -> last-position logits (B, V)."""
+    ctx = make_shard_ctx(mesh, global_batch, moe_impl)
+
+    def prefill(values, inputs):
+        return M.prefill_logits(values, cfg, inputs,
+                                shard_ctx=ctx if mesh is not None else None)
+
+    return prefill, ctx
+
+
+def greedy_decode(cfg: ModelConfig, values, cache, first_token, start_pos,
+                  steps: int, serve_step):
+    """Greedy multi-token decode loop (example/benchmark helper)."""
+    def body(carry, _):
+        cache, tok, pos = carry
+        logits, cache = serve_step(values, cache, tok, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (cache, nxt, pos + 1), nxt[:, 0]
+
+    (cache, _, _), toks = jax.lax.scan(
+        body, (cache, first_token, start_pos), None, length=steps)
+    return jnp.moveaxis(toks, 0, 1), cache   # (B, steps)

@@ -1,0 +1,78 @@
+"""ShapeDtypeStruct input stand-ins for every (architecture x input shape).
+
+``input_specs`` returns a Param tree (ShapeDtypeStruct values + logical
+axes) — shardable, weak-type-correct, zero allocation. The dry-run lowers
+against these; the trainer/server build identical trees with real data.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.nn import Param
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _sds(shape, dtype, axes) -> Param:
+    return Param(jax.ShapeDtypeStruct(tuple(shape), dtype), tuple(axes))
+
+
+def long_context_variant(cfg: ModelConfig, shape: ShapeConfig
+                         ) -> ModelConfig:
+    """long_500k on attention archs uses the explicit sliding-window
+    variant (DESIGN.md §4); SSM/hybrid run natively."""
+    if shape.name == "long_500k" and cfg.attn_type != "none" \
+            and cfg.family not in ("ssm",) and cfg.sliding_window is None:
+        return cfg.with_sliding_window(8192)
+    return cfg
+
+
+def batch_for(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Param]:
+    """Training/prefill batch spec tree."""
+    B, S = shape.global_batch, shape.seq_len
+    sp: Dict[str, Param] = {}
+    if cfg.frontend == "audio":
+        sp["features"] = _sds((B, S, M.FRONTEND_DIM["audio"]), F32,
+                              ("batch", None, None))
+    else:
+        sp["tokens"] = _sds((B, S), I32, ("batch", None))
+    if cfg.frontend == "vision":
+        nv = min(cfg.num_vision_tokens, S)
+        sp["vision_embeds"] = _sds((B, nv, M.FRONTEND_DIM["vision"]), F32,
+                                   ("batch", None, None))
+        sp["mrope_positions"] = _sds((3, B, S), I32, (None, "batch", None))
+    if shape.kind == "train":
+        sp["labels"] = _sds((B, S), I32, ("batch", None))
+    return sp
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig
+                 ) -> Tuple[Dict[str, Param], Any]:
+    """(token/pos specs, cache spec tree) for a serve step."""
+    B, S = shape.global_batch, shape.seq_len
+    sp = {
+        "token": _sds((B, 1), I32, ("batch", None)),
+        "pos": _sds((B,), I32, ("batch",)),
+    }
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    return sp, cache
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Param tree of ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def check_applicability(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Optional[str]:
+    """None if the pair runs; otherwise the documented skip reason."""
+    if shape.kind == "decode" and not cfg.has_decode:
+        return "encoder-only: no autoregressive decode step (DESIGN.md §4)"
+    return None

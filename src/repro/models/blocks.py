@@ -1,0 +1,153 @@
+"""Per-layer blocks: transformer (GQA/MLA x MLP/MoE), Mamba2, xLSTM, and the
+Zamba2 shared-attention hybrid wiring."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.attention import (gqa_decode, gqa_forward, gqa_init_cache,
+                                    gqa_params, mla_decode, mla_forward,
+                                    mla_init_cache, mla_params)
+from repro.models.mlp import mlp_forward, mlp_params
+from repro.models.moe import MoEStats, moe_forward, moe_params
+from repro.models.ssm import (ssm_decode, ssm_forward, ssm_init_cache,
+                              ssm_params)
+from repro.models.xlstm import (mlstm_decode, mlstm_forward,
+                                mlstm_init_cache, mlstm_params, slstm_decode,
+                                slstm_forward, slstm_init_cache,
+                                slstm_params)
+
+ZERO_STATS = lambda: MoEStats(jnp.zeros(()), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (attention + MLP/MoE), pre-norm residual
+# ---------------------------------------------------------------------------
+
+
+def transformer_block_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype,
+                             moe: bool) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "ln_attn": nn.param(kg(), (cfg.d_model,), ("embed",), pdtype,
+                            zero=True),
+        "ln_mlp": nn.param(kg(), (cfg.d_model,), ("embed",), pdtype,
+                           zero=True),
+    }
+    if cfg.attn_type == "mla":
+        p["attn"] = mla_params(cfg, kg, pdtype)
+    else:
+        p["attn"] = gqa_params(cfg, kg, pdtype)
+    if moe:
+        p["moe"] = moe_params(cfg, kg, pdtype)
+    else:
+        p["mlp"] = mlp_params(cfg, kg, pdtype)
+    return p
+
+
+def transformer_block(p, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, *, moe: bool,
+                      mrope_pos: Optional[jax.Array] = None,
+                      shard_ctx=None, q_chunk: int = 512
+                      ) -> Tuple[jax.Array, MoEStats]:
+    from jax.ad_checkpoint import checkpoint_name
+    h = nn.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = mla_forward(p["attn"], cfg, h, positions, q_chunk)
+    else:
+        a = gqa_forward(p["attn"], cfg, h, positions, mrope_pos, q_chunk)
+    # names let the save_psum_outputs remat policy keep the post-all-reduce
+    # activations so TP collectives are not replayed in the backward pass
+    # (EXPERIMENTS.md §Perf HC2).
+    x = x + checkpoint_name(a, "attn_out")
+    h = nn.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if moe:
+        y, stats = moe_forward(p["moe"], cfg, h, shard_ctx)
+    else:
+        y, stats = mlp_forward(p["mlp"], h), ZERO_STATS()
+    return x + checkpoint_name(y, "mlp_out"), stats
+
+
+def transformer_block_decode(p, cfg: ModelConfig, x: jax.Array,
+                             pos: jax.Array, cache, *, moe: bool,
+                             mrope_pos=None, shard_ctx=None):
+    h = nn.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, cache = mla_decode(p["attn"], cfg, h, pos, cache)
+    else:
+        a, cache = gqa_decode(p["attn"], cfg, h, pos, cache, mrope_pos)
+    x = x + a
+    h = nn.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if moe:
+        y, _ = moe_forward(p["moe"], cfg, h, shard_ctx)
+    else:
+        y = mlp_forward(p["mlp"], h)
+    return x + y, cache
+
+
+def transformer_block_cache(cfg: ModelConfig, batch: int, max_len: int,
+                            dtype):
+    if cfg.attn_type == "mla":
+        return mla_init_cache(cfg, batch, max_len, dtype)
+    return gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+
+def mamba_block_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype):
+    return {
+        "ln": nn.param(kg(), (cfg.d_model,), ("embed",), pdtype, zero=True),
+        "ssm": ssm_params(cfg, kg, pdtype),
+    }
+
+
+def mamba_block(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    return x + ssm_forward(p["ssm"], cfg, h)
+
+
+def mamba_block_decode(p, cfg: ModelConfig, x: jax.Array, cache):
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssm_decode(p["ssm"], cfg, h, cache)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+
+def xlstm_block_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype, kind: str):
+    inner = mlstm_params(cfg, kg, pdtype) if kind == "m" else slstm_params(
+        cfg, kg, pdtype)
+    return {
+        "ln": nn.param(kg(), (cfg.d_model,), ("embed",), pdtype, zero=True),
+        "cell": inner,
+    }
+
+
+def xlstm_block(p, cfg: ModelConfig, x: jax.Array, kind: str) -> jax.Array:
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    y = (mlstm_forward(p["cell"], cfg, h) if kind == "m"
+         else slstm_forward(p["cell"], cfg, h))
+    return x + y
+
+
+def xlstm_block_decode(p, cfg: ModelConfig, x: jax.Array, cache, kind: str):
+    h = nn.rms_norm(x, p["ln"], cfg.norm_eps)
+    if kind == "m":
+        y, cache = mlstm_decode(p["cell"], cfg, h, cache)
+    else:
+        y, cache = slstm_decode(p["cell"], cfg, h, cache)
+    return x + y, cache
+
+
+def xlstm_block_cache(cfg: ModelConfig, batch: int, dtype, kind: str):
+    return (mlstm_init_cache(cfg, batch, dtype) if kind == "m"
+            else slstm_init_cache(cfg, batch, dtype))

@@ -1,0 +1,27 @@
+"""Dense SwiGLU / GELU MLP."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+
+def mlp_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype, d_ff: int = 0
+               ) -> Dict[str, Any]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    return {
+        "w_gate": nn.param(kg(), (D, F), ("embed", "mlp"), pdtype),
+        "w_up": nn.param(kg(), (D, F), ("embed", "mlp"), pdtype),
+        "w_down": nn.param(kg(), (F, D), ("mlp", "embed"), pdtype),
+    }
+
+
+def mlp_forward(p, x: jax.Array) -> jax.Array:
+    g = nn.dense(x, p["w_gate"].astype(x.dtype))
+    u = nn.dense(x, p["w_up"].astype(x.dtype))
+    return nn.dense(nn.swiglu(g, u), p["w_down"].astype(x.dtype))

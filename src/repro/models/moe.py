@@ -1,0 +1,158 @@
+"""Mixture-of-Experts layer: top-k token-choice routing, capacity dispatch.
+
+Dispatch is **sort-based** (dropless up to the capacity factor): token copies
+are ordered by expert id and scattered into an (E, C, D) buffer, so compute
+is a clean grouped matmul whose FLOPs are proportional to tokens x top_k —
+no (T, E, C) one-hot einsum blow-up (that would dominate cost_analysis and
+wreck the roofline's useful-FLOP ratio).
+
+Sharding modes (DESIGN.md §3):
+  * ``local``  — single-device; used by smoke tests and inside shard_map.
+  * ``tp``     — expert weights tensor-parallel over the model axis (every
+    device holds all experts with a 1/M slice of d_ff); dispatch stays local
+    to the device's tokens, one psum over 'model' combines. Robust default.
+  * ``ep``     — expert-parallel: experts sharded over the model axis,
+    token copies exchanged with all_to_all. Implemented in
+    ``repro.dist.expert_parallel`` and enabled per-config for the §Perf
+    hillclimb.
+
+The router always runs in fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.mlp import mlp_forward, mlp_params
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jax.Array        # load-balance loss (scalar)
+    dropped_frac: jax.Array    # fraction of token-copies over capacity
+
+
+def moe_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype) -> Dict[str, Any]:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p: Dict[str, Any] = {
+        "router": nn.param(kg(), (D, E), ("embed", None), jnp.float32,
+                           stddev=D ** -0.5),
+        "w_gate": nn.param(kg(), (E, D, F), ("expert", "embed", "mlp"),
+                           pdtype),
+        "w_up": nn.param(kg(), (E, D, F), ("expert", "embed", "mlp"),
+                         pdtype),
+        "w_down": nn.param(kg(), (E, F, D), ("expert", "mlp", "embed"),
+                           pdtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_params(
+            cfg, kg, pdtype, d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def router_topk(logits: jax.Array, top_k: int
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """fp32 softmax -> top-k (renormalised). Returns (weights, ids, probs)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    return top_w, top_i, probs
+
+
+def load_balance_loss(probs: jax.Array, top_i: jax.Array, E: int
+                      ) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    T, k = top_i.shape
+    counts = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f = counts / (T * k)
+    P = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * P)
+
+
+def dispatch_indices(top_i: jax.Array, capacity: int, E: int):
+    """Sort token copies by expert; compute each copy's slot in its expert.
+
+    Returns (token index, expert id, slot position, keep mask, sort order)
+    per sorted copy.
+    """
+    T, k = top_i.shape
+    TK = T * k
+    flat_e = top_i.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    st = flat_t[order]
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(TK) - starts[se]
+    keep = pos < capacity
+    return st, se, pos, keep, order
+
+
+def moe_local(p, cfg: ModelConfig, x: jax.Array,
+              f_slice: Optional[Tuple[int, int]] = None
+              ) -> Tuple[jax.Array, MoEStats]:
+    """Single-device MoE on flattened tokens x: (T, D) -> (T, D).
+
+    ``f_slice=(start, size)`` restricts expert hidden dims to a d_ff slice —
+    used by the tensor-parallel wrapper (caller psums the partial output).
+    """
+    T, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = int(max(8, round(T * k / E * cfg.capacity_factor)))
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    top_w, top_i, probs = router_topk(logits, k)
+    aux = load_balance_loss(probs, top_i, E)
+
+    st, se, pos, keep, order = dispatch_indices(top_i, C, E)
+    flat_w = top_w.reshape(-1)[order]
+
+    # Scatter kept copies into the (E*C, D) buffer (dummy row E*C for drops).
+    idx = jnp.where(keep, se * C + pos, E * C)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[idx].set(x[st])
+    buf = buf[:-1].reshape(E, C, D)
+
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if f_slice is not None:
+        s0, sz = f_slice
+        wg = jax.lax.dynamic_slice_in_dim(wg, s0, sz, 2)
+        wu = jax.lax.dynamic_slice_in_dim(wu, s0, sz, 2)
+        wd = jax.lax.dynamic_slice_in_dim(wd, s0, sz, 1)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(x.dtype))
+    h = nn.swiglu(g, u)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+
+    # Gather copies back, weight, and combine per token.
+    out_flat = out_buf.reshape(E * C, D)
+    y_copies = jnp.where(keep[:, None], out_flat[jnp.where(
+        keep, se * C + pos, 0)], 0.0)
+    y_copies = y_copies * flat_w[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[st].add(y_copies)
+
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (T * k)
+    return y, MoEStats(aux_loss=aux, dropped_frac=dropped)
+
+
+def moe_forward(p, cfg: ModelConfig, x: jax.Array, shard_ctx=None
+                ) -> Tuple[jax.Array, MoEStats]:
+    """MoE layer on (B, S, D). Routed experts + optional shared experts.
+
+    ``shard_ctx`` (repro.dist.ShardCtx) selects the distributed impl; None
+    runs the pure-local path (smoke tests / single device).
+    """
+    B, S, D = x.shape
+    x_flat = x.reshape(B * S, D)
+    if shard_ctx is None or shard_ctx.mesh is None:
+        y_flat, stats = moe_local(p, cfg, x_flat)
+    else:
+        from repro.dist import moe_sharded  # local import: avoid cycle
+        y_flat, stats = moe_sharded(p, cfg, x_flat, shard_ctx)
+    y = y_flat.reshape(B, S, D)
+    if cfg.num_shared_experts:
+        y = y + mlp_forward(p["shared"], x)
+    return y, stats

@@ -1,0 +1,147 @@
+"""Minimal functional NN toolkit: params with logical axes, norms, dense.
+
+Parameters are plain jnp arrays carried in nested dicts. During init each
+leaf is a ``Param(value, axes)`` where ``axes`` names the *logical* sharding
+axis of every dimension (e.g. ("embed", "mlp")); ``repro.dist.sharding``
+maps logical axes -> mesh axes. ``split_params`` separates the value tree
+from the (static) axes tree so compute functions see plain arrays.
+
+``Param`` registers ``axes`` as pytree aux-data, so ``jax.eval_shape`` over an
+init function yields the full (shapes + logical axes) tree without
+allocating anything — this is what the multi-pod dry-run uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis names used across the model zoo.
+# "embed"  : d_model           -> usually unsharded (or replicated)
+# "mlp"    : ffn hidden        -> model axis
+# "heads"  : attention heads   -> model axis
+# "kv_heads": kv heads         -> model axis when divisible, else replicated
+# "qkv"    : head_dim          -> unsharded
+# "vocab"  : vocabulary        -> model axis
+# "expert" : MoE experts       -> model axis (expert-parallel) or unsharded
+# "layers" : stacked scan axis -> unsharded
+# None     : replicated
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def split_params(tree):
+    """Param tree -> (value tree, axes tree). Axes tree is pure python."""
+    leaves_is_param = lambda x: isinstance(x, Param)
+    values = jax.tree.map(lambda p: p.value, tree,
+                          is_leaf=leaves_is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=leaves_is_param)
+    return values, axes
+
+
+def merge_params(values, axes):
+    return jax.tree.map(lambda v, a: Param(v, a), values, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, stddev):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def param(key, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+          dtype=jnp.float32, stddev: Optional[float] = None,
+          zero: bool = False, ones: bool = False) -> Param:
+    """Create one parameter. Default init: truncated-normal-ish fan-in."""
+    assert len(shape) == len(axes), (shape, axes)
+    if zero:
+        v = jnp.zeros(shape, dtype)
+    elif ones:
+        v = jnp.ones(shape, dtype)
+    else:
+        if stddev is None:
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+            stddev = fan_in ** -0.5
+        v = normal_init(key, shape, dtype, stddev)
+    return Param(v, tuple(axes))
+
+
+class KeyGen:
+    """Splitting helper: kg = KeyGen(key); k1 = kg(); k2 = kg()."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+# ---------------------------------------------------------------------------
+# Compute primitives (operate on plain value trees)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None
+          ) -> jax.Array:
+    """x @ w contracting the last dim of x with the first of w."""
+    y = jnp.tensordot(x, w, axes=((-1,), (0,)))
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def embed_lookup(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Token embedding lookup (tokens int32 -> (..., d))."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid positions; logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def count_params(values) -> int:
+    return sum(int(v.size) for v in jax.tree.leaves(values))

@@ -1,0 +1,64 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    """Inverse frequencies for the rotary half-dim (head_dim must be even)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4
+               ) -> jax.Array:
+    """Standard RoPE. x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    Uses the "rotate half" convention: pairs (x[..., :half], x[..., half:]).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (half,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int,
+                 sections: Sequence[int], theta: float = 1e4
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): 3-axis positions (t, h, w) -> (cos, sin).
+
+    positions: (3, ..., S). ``sections`` splits the rotary half-dim into
+    temporal/height/width bands (sums to head_dim // 2). Text tokens carry
+    identical (t, h, w) so M-RoPE degenerates to standard RoPE there.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)                 # (half,)
+    # angles per axis: (3, ..., S, half)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    # select which position axis drives each frequency band
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=half)        # (half,)
+    sel = jax.nn.one_hot(idx, 3, dtype=jnp.float32)   # (half, 3)
+    ang = jnp.einsum("a...h,ha->...h", ang, sel)      # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array,
+                sections: Sequence[int], theta: float = 1e4) -> jax.Array:
+    """Apply M-RoPE to x: (..., S, H, hd), positions: (3, ..., S)."""
+    cos, sin = mrope_angles(positions, x.shape[-1], sections, theta)
+    cos = cos[..., None, :]                           # (..., S, 1, half)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

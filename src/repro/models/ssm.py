@@ -1,0 +1,171 @@
+"""Mamba2 block (SSD — state-space duality form), JAX implementation.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic
+attention-like form + cross-chunk recurrence over the (H, P, N) state,
+scanned over chunks — O(S/Q * (Q^2 + Q N P)) work, never materialising the
+full (S, S) kernel. Decode is the single-step recurrence with a
+(B, H, P, N) state and a causal-conv ring cache.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim (P), state N,
+single B/C group (ngroups=1, as in Zamba2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+F32 = jnp.float32
+
+
+def ssm_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    di = cfg.ssm_d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_num_heads
+    conv_dim = di + 2 * N
+    return {
+        # in_proj -> [z(di), x(di), B(N), C(N), dt(H)]
+        "w_in": nn.param(kg(), (D, 2 * di + 2 * N + H), ("embed", "mlp"),
+                         pdtype),
+        "conv_w": nn.param(kg(), (cfg.conv_width, conv_dim), (None, "mlp"),
+                           pdtype, stddev=cfg.conv_width ** -0.5),
+        "conv_b": nn.param(kg(), (conv_dim,), ("mlp",), pdtype, zero=True),
+        "A_log": nn.param(kg(), (H,), (None,), jnp.float32, ones=True),
+        "dt_bias": nn.param(kg(), (H,), (None,), jnp.float32, zero=True),
+        "D_skip": nn.param(kg(), (H,), (None,), jnp.float32, ones=True),
+        "norm": nn.param(kg(), (di,), ("mlp",), pdtype, zero=True),
+        "w_out": nn.param(kg(), (di, D), ("mlp", "embed"), pdtype),
+    }
+
+
+def _split_in(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:2 * di]
+    Bc = zxbcdt[..., 2 * di:2 * di + N]
+    Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with width-k filter (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float
+                ) -> jax.Array:
+    return nn.rms_norm(y * jax.nn.silu(z), scale, eps)
+
+
+def ssm_forward(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Train/prefill Mamba2 on (B, S, D) via chunked SSD."""
+    Bsz, S, D = x.shape
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads
+    P = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nC = S // Q
+
+    zxbcdt = nn.dense(x, p["w_in"].astype(x.dtype))
+    z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt)
+    xbc = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                       p["conv_b"].astype(x.dtype))
+    xc, Bc, Cc = xbc[..., :di], xbc[..., di:di + N], xbc[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])        # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                    # (H,) < 0
+    a = dt * A                                                  # log-decay
+    xh = xc.reshape(Bsz, S, H, P).astype(F32)
+    xdt = xh * dt[..., None]                                    # dt-weighted
+
+    # chunk views
+    def chunk(t):
+        return t.reshape((Bsz, nC, Q) + t.shape[2:])
+
+    # One scan over chunks carries the (B, H, N, P) state and computes both
+    # the intra-chunk quadratic term and the inter-chunk contribution — peak
+    # memory is a single chunk's (B, Q, Q, H) kernel, not all nC at once.
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]     # (1,Q,Q,1)
+
+    def scan_fn(h, inp):
+        a_q, x_q, B_q, C_q = inp       # (B,Q,H), (B,Q,H,P), (B,Q,N), (B,Q,N)
+        A_cum = jnp.cumsum(a_q, axis=1)                         # (B,Q,H)
+        # intra: L[i,j] = exp(A_cum_i - A_cum_j), j <= i. Mask BEFORE exp:
+        # masked entries have diff > 0 and would overflow to inf, poisoning
+        # the backward pass through the where.
+        diff = A_cum[:, :, None, :] - A_cum[:, None, :, :]      # (B,Q,Q,H)
+        L = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+        CB = jnp.einsum("bin,bjn->bij", C_q, B_q)               # (B,Q,Q)
+        Y_intra = jnp.einsum("bijh,bjhp->bihp", CB[..., None] * L, x_q)
+        # inter: contribution of the carried state
+        inter_decay = jnp.exp(A_cum)                            # (B,Q,H)
+        Y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", C_q, inter_decay, h)
+        # state update
+        decay_to_end = jnp.exp(A_cum[:, -1:, :] - A_cum)        # (B,Q,H)
+        S_chunk = jnp.einsum("bqn,bqh,bqhp->bhnp", B_q, decay_to_end, x_q)
+        h_new = h * jnp.exp(A_cum[:, -1, :])[:, :, None, None] + S_chunk
+        return h_new, Y_intra + Y_inter
+
+    h0 = jnp.zeros((Bsz, H, N, P), F32)
+    xs = (jnp.moveaxis(chunk(a), 1, 0), jnp.moveaxis(chunk(xdt), 1, 0),
+          jnp.moveaxis(chunk(Bc.astype(F32)), 1, 0),
+          jnp.moveaxis(chunk(Cc.astype(F32)), 1, 0))
+    _, Y = jax.lax.scan(scan_fn, h0, xs)                        # (nC,B,Q,H,P)
+    Y = jnp.moveaxis(Y, 0, 1).reshape(Bsz, S, H, P)
+    Y = Y + p["D_skip"][:, None] * xh
+    Y = Y.reshape(Bsz, S, di).astype(x.dtype)
+    Y = _gated_norm(Y, z, p["norm"], cfg.norm_eps)
+    return nn.dense(Y, p["w_out"].astype(x.dtype))
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                   cfg.ssm_head_dim)
+    conv_dim = di + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, N, P), F32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict[str, Any]
+               ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Single-token recurrence. x: (B, 1, D)."""
+    Bsz = x.shape[0]
+    di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_num_heads,
+                   cfg.ssm_head_dim)
+    zxbcdt = nn.dense(x[:, 0], p["w_in"].astype(x.dtype))       # (B, ...)
+    z, xc, Bc, Cc, dt = _split_in(cfg, zxbcdt[:, None])
+    xbc_new = jnp.concatenate([xc, Bc, Cc], axis=-1)[:, 0]      # (B, conv)
+
+    # causal-conv ring: window = [cache, new]
+    win = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    out = jnp.sum(win * w[None], axis=1) + p["conv_b"].astype(x.dtype)
+    xbc = jax.nn.silu(out)
+    xc1, Bc1, Cc1 = xbc[:, :di], xbc[:, di:di + N], xbc[:, di + N:]
+    conv_cache = win[:, 1:]
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt1 * A)                                      # (B,H)
+    xh = xc1.reshape(Bsz, H, P).astype(F32)
+    h = (cache["h"] * dec[..., None, None]
+         + jnp.einsum("bn,bh,bhp->bhnp", Bc1.astype(F32), dt1, xh))
+    y = jnp.einsum("bn,bhnp->bhp", Cc1.astype(F32), h)
+    y = y + p["D_skip"][:, None] * xh
+    y = y.reshape(Bsz, di).astype(x.dtype)
+    y = _gated_norm(y[:, None], z, p["norm"], cfg.norm_eps)
+    out = nn.dense(y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": conv_cache}

@@ -1,0 +1,246 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating. Training/prefill uses
+the parallel (attention-like) form with a log-space stabiliser; decode uses
+the recurrence over (C, n, m) states. Quadratic scores are query-chunked.
+
+sLSTM — scalar-memory LSTM with block-diagonal recurrent weights; it is
+inherently sequential, so training scans over time (the paper's cuda kernel
+does the same, fused). Decode is the same single-step cell.
+
+Both blocks carry their own projections (config d_ff = 0): mLSTM up-projects
+by pf=2 and runs the cell in the inner dim; sLSTM runs the cell at d_model
+followed by a pf=4/3 gated FFN, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    ed = 2 * D                      # pf = 2 up-projection
+    H = cfg.num_heads
+    dh = ed // H
+    return {
+        "w_up": nn.param(kg(), (D, 2 * ed), ("embed", "mlp"), pdtype),
+        "wq": nn.param(kg(), (ed, H, dh), ("mlp", "heads", None), pdtype),
+        "wk": nn.param(kg(), (ed, H, dh), ("mlp", "heads", None), pdtype),
+        "wv": nn.param(kg(), (ed, H, dh), ("mlp", "heads", None), pdtype),
+        "w_if": nn.param(kg(), (ed, 2 * H), ("mlp", None), jnp.float32,
+                         stddev=ed ** -0.5),
+        "b_if": nn.param(kg(), (2 * H,), (None,), jnp.float32, zero=True),
+        "norm": nn.param(kg(), (ed,), ("mlp",), pdtype, zero=True),
+        "w_down": nn.param(kg(), (ed, D), ("mlp", "embed"), pdtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg: ModelConfig, x: jax.Array):
+    up = nn.dense(x, p["w_up"].astype(x.dtype))
+    ed = up.shape[-1] // 2
+    x_in, z = up[..., :ed], up[..., ed:]
+    q = jnp.einsum("bsd,dhk->bshk", x_in, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x_in, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x_in, p["wv"].astype(x.dtype))
+    gates = x_in.astype(F32) @ p["w_if"] + p["b_if"]       # (B,S,2H)
+    H = q.shape[2]
+    log_i = gates[..., :H]                                  # pre-act i gate
+    log_f = jax.nn.log_sigmoid(gates[..., H:])              # log f in (-inf,0)
+    return q, k, v, log_i, log_f, z, x_in
+
+
+def mlstm_forward(p, cfg: ModelConfig, x: jax.Array, q_chunk: int = 512
+                  ) -> jax.Array:
+    """Parallel stabilised form. x: (B, S, D)."""
+    B, S, D = x.shape
+    q, k, v, log_i, log_f, z, _ = _mlstm_qkvif(p, cfg, x)
+    H, dh = q.shape[2], q.shape[3]
+    scale = dh ** -0.5
+
+    F_cum = jnp.cumsum(log_f, axis=1)                       # (B,S,H)
+    # log D[i,j] = F_i - F_j + log i_j  (j <= i); row stabiliser
+    # m_i = max_{j<=i} (log i_j - F_j) + F_i  — running max over the prefix.
+    gmax = jax.lax.cummax(log_i - F_cum, axis=1)            # (B,S,H)
+    m = gmax + F_cum
+
+    def attend(q_c, Fq_c, m_c, sl):
+        # q_c: (B,qc,H,dh); scores vs all keys
+        logD = (Fq_c[:, :, None, :] - F_cum[:, None, :, :]
+                + log_i[:, None, :, :] - m_c[:, :, None, :])  # (B,qc,S,H)
+        ii = sl[:, None] >= jnp.arange(S)[None, :]
+        logD = jnp.where(ii[None, :, :, None], logD, -jnp.inf)
+        Dm = jnp.exp(logD)
+        scores = jnp.einsum("bqhk,bshk->bqsh", q_c, k,
+                            preferred_element_type=F32) * scale
+        Sm = scores * Dm                                     # (B,qc,S,H)
+        norm = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=2)),
+                           jnp.exp(-m_c))                    # (B,qc,H)
+        out = jnp.einsum("bqsh,bshk->bqhk", Sm, v.astype(F32))
+        return out / norm[..., None]
+
+    if S <= q_chunk or S % q_chunk != 0:
+        out = attend(q, F_cum, m, jnp.arange(S))
+    else:
+        nc = S // q_chunk
+        qs = jnp.moveaxis(q.reshape(B, nc, q_chunk, H, dh), 1, 0)
+        Fs = jnp.moveaxis(F_cum.reshape(B, nc, q_chunk, H), 1, 0)
+        ms = jnp.moveaxis(m.reshape(B, nc, q_chunk, H), 1, 0)
+        sls = jnp.arange(S).reshape(nc, q_chunk)
+
+        def body(_, xs_):
+            q_c, F_c, m_c, sl = xs_
+            return None, attend(q_c, F_c, m_c, sl)
+
+        _, outs = jax.lax.scan(body, None, (qs, Fs, ms, sls))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)
+
+    ed = H * dh
+    y = out.reshape(B, S, ed).astype(x.dtype)
+    y = nn.rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return nn.dense(y, p["w_down"].astype(x.dtype))
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    ed = 2 * D
+    H = cfg.num_heads
+    dh = ed // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), F32),
+        "n": jnp.zeros((batch, H, dh), F32),
+        "m": jnp.full((batch, H), -jnp.inf, F32),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jax.Array, cache: Dict[str, Any]
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Single-token recurrence. x: (B, 1, D)."""
+    B = x.shape[0]
+    q, k, v, log_i, log_f, z, _ = _mlstm_qkvif(p, cfg, x)
+    H, dh = q.shape[2], q.shape[3]
+    scale = dh ** -0.5
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                 # (B,H)
+
+    m_prev = cache["m"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_sc = jnp.exp(log_f + m_prev - m_new)                  # (B,H)
+    i_sc = jnp.exp(log_i - m_new)
+
+    kf = k[:, 0].astype(F32)
+    vf = v[:, 0].astype(F32)
+    C = (cache["C"] * f_sc[..., None, None]
+         + i_sc[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf, vf))
+    n = cache["n"] * f_sc[..., None] + i_sc[..., None] * kf
+
+    qf = q[:, 0].astype(F32) * scale
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))
+    out = num / den[..., None]                              # (B,H,dh)
+    ed = H * dh
+    y = out.reshape(B, 1, ed).astype(x.dtype)
+    y = nn.rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    y = nn.dense(y, p["w_down"].astype(x.dtype))
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg: ModelConfig, kg: nn.KeyGen, pdtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    Fd = 4 * D // 3 // 2 * 2        # pf = 4/3 gated FFN, even
+    return {
+        # four gates (z, i, f, o), input weights + block-diag recurrent
+        "w_gates": nn.param(kg(), (D, 4, D), ("embed", None, "mlp"), pdtype),
+        "r_gates": nn.param(kg(), (4, H, dh, dh), (None, "heads", None, None),
+                            pdtype, stddev=dh ** -0.5),
+        "b_gates": nn.param(kg(), (4, D), (None, "mlp"), jnp.float32,
+                            zero=True),
+        "norm": nn.param(kg(), (D,), ("embed",), pdtype, zero=True),
+        "ffn_gate": nn.param(kg(), (D, Fd), ("embed", "mlp"), pdtype),
+        "ffn_up": nn.param(kg(), (D, Fd), ("embed", "mlp"), pdtype),
+        "ffn_down": nn.param(kg(), (Fd, D), ("mlp", "embed"), pdtype),
+    }
+
+
+def slstm_cell(p, cfg: ModelConfig, wx: jax.Array, state
+               ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """One sLSTM step. wx: (B, 4, D) precomputed input contributions."""
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+
+    hh = h.reshape(-1, H, dh)
+    rec = jnp.einsum("bhk,ghkl->bghl", hh, p["r_gates"].astype(h.dtype))
+    pre = (wx + rec.reshape(-1, 4, D)).astype(F32) + p["b_gates"]
+    z_t = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o_t = jax.nn.sigmoid(pre[:, 3])
+
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_sc = jnp.exp(log_i - m_new)
+    f_sc = jnp.exp(log_f + m - m_new)
+    c_new = f_sc * c + i_sc * z_t
+    n_new = f_sc * n + i_sc
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    D = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, D), F32),
+        "n": jnp.zeros((batch, D), F32),
+        "m": jnp.full((batch, D), -jnp.inf, F32),
+        "h": jnp.zeros((batch, D), F32),
+    }
+
+
+def _slstm_ffn(p, cfg: ModelConfig, y: jax.Array) -> jax.Array:
+    g = nn.dense(y, p["ffn_gate"].astype(y.dtype))
+    u = nn.dense(y, p["ffn_up"].astype(y.dtype))
+    return nn.dense(nn.swiglu(g, u), p["ffn_down"].astype(y.dtype))
+
+
+def slstm_forward(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Sequential scan over time. x: (B, S, D)."""
+    B, S, D = x.shape
+    wx = jnp.einsum("bsd,dgk->bsgk", x, p["w_gates"].astype(x.dtype))
+    state = slstm_init_cache(cfg, B, x.dtype)
+
+    def step(st, wx_t):
+        st, h = slstm_cell(p, cfg, wx_t, st)
+        return st, h
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)               # (B,S,D)
+    y = nn.rms_norm(y, p["norm"], cfg.norm_eps)
+    return _slstm_ffn(p, cfg, y)
+
+
+def slstm_decode(p, cfg: ModelConfig, x: jax.Array, cache
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+    wx = jnp.einsum("bsd,dgk->bsgk", x, p["w_gates"].astype(x.dtype))[:, 0]
+    cache, h = slstm_cell(p, cfg, wx, cache)
+    y = nn.rms_norm(h[:, None].astype(x.dtype), p["norm"], cfg.norm_eps)
+    return _slstm_ffn(p, cfg, y), cache

@@ -1,0 +1,6 @@
+from .optimizers import (Optimizer, adamw, clip_by_global_norm, sgd,
+                         sgd_momentum)
+from .schedule import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "clip_by_global_norm", "constant",
+           "cosine_decay", "linear_warmup_cosine", "sgd", "sgd_momentum"]

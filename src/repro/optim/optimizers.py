@@ -1,0 +1,118 @@
+"""Optimizers as pure pytree transforms (no optax dependency).
+
+An :class:`Optimizer` is an (init, update) pair over arbitrary pytrees:
+
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = tree_map(lambda p, u: p + u, params, updates)
+
+The paper's algorithm is plain SGD (w <- w - eta * g, Eq. 2); AdamW is the
+production default for the LM trainer. Optimizer states follow the sharding
+of their parameters (same tree structure), so ZeRO-style placement is a
+sharding-rule decision, not an optimizer change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, F32)
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD — exactly the paper's update (Eq. 2)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        updates = jax.tree.map(lambda g: (-eta * g.astype(F32)).astype(
+            g.dtype), grads)
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr, momentum: float = 0.9, nesterov: bool = False
+                 ) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, F32), params)
+
+    def update(grads, m, params, step):
+        eta = sched(step)
+        m = jax.tree.map(lambda b, g: momentum * b + g.astype(F32), m, grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda b, g: -eta * (momentum * b + g.astype(F32)), m, grads)
+        else:
+            upd = jax.tree.map(lambda b: -eta * b, m)
+        upd = jax.tree.map(lambda u, p: u.astype(p.dtype), upd, params)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, F32)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(F32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(F32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(F32)), state.nu, grads)
+
+        def upd(m, v, p):
+            u = -eta * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u - eta * weight_decay * p.astype(F32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Standard global-norm gradient clip (returns clipped tree + norm)."""
+    sq = sum(jnp.sum(g.astype(F32) ** 2) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), norm

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, F32)
+
+
+def cosine_decay(peak: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(F32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+    return sched
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(peak, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(step):
+        s = step.astype(F32)
+        warm = peak * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, warm, cos(s - warmup_steps))
+    return sched

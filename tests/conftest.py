@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun.py forces the
+# 512-device placeholder topology (see the system brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,60 @@
+"""Baseline robust aggregators (Krum, medians, trimmed mean)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregators as agg
+
+
+def _grads_with_outliers(n=10, d=8, n_byz=2, seed=0, spread=0.1):
+    key = jax.random.PRNGKey(seed)
+    center = jnp.ones((d,))
+    honest = center + spread * jax.random.normal(key, (n - n_byz, d))
+    byz = -50.0 * jnp.ones((n_byz, d))
+    return jnp.concatenate([honest, byz]), center
+
+
+def test_krum_selects_honest():
+    G, center = _grads_with_outliers()
+    out = agg.krum(G, f=2)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_multi_krum_averages_honest():
+    G, center = _grads_with_outliers()
+    out = agg.multi_krum(G, f=2)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_median_robust():
+    G, center = _grads_with_outliers()
+    out = agg.coordinate_median(G, 2)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_trimmed_mean_robust_and_validates():
+    G, center = _grads_with_outliers()
+    out = agg.trimmed_mean(G, f=2)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+    with pytest.raises(ValueError):
+        agg.trimmed_mean(G, f=5)              # n <= 2f
+
+
+def test_geometric_median_robust():
+    G, center = _grads_with_outliers()
+    out = agg.geometric_median(G, 2)
+    assert float(jnp.linalg.norm(out - center)) < 1.0
+
+
+def test_mean_not_robust():
+    # sanity: the fault-intolerant baseline IS pulled away by the attack
+    G, center = _grads_with_outliers()
+    out = agg.mean(G, 2)
+    assert float(jnp.linalg.norm(out - center)) > 5.0
+
+
+def test_cgc_sum_scale():
+    G, _ = _grads_with_outliers(n_byz=0)
+    np.testing.assert_allclose(np.asarray(agg.cgc_mean(G, 0)),
+                               np.asarray(agg.mean(G, 0)), rtol=1e-6)

@@ -1,0 +1,80 @@
+"""CGC filter (Eq. 8) unit + invariant tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cgc import (cgc_aggregate, cgc_filter, cgc_scales,
+                            cgc_threshold)
+
+
+def _rand(n, d, seed=0, scale_spread=True):
+    key = jax.random.PRNGKey(seed)
+    G = jax.random.normal(key, (n, d))
+    if scale_spread:
+        G = G * jnp.arange(1, n + 1)[:, None]
+    return G
+
+
+def test_threshold_is_nf_smallest():
+    norms = jnp.array([5.0, 1.0, 3.0, 2.0, 4.0])
+    # n=5, f=2 -> (n-f)=3rd smallest = 3.0
+    assert float(cgc_threshold(norms, 2)) == 3.0
+
+
+def test_filter_clips_top_f_only():
+    G = _rand(8, 16)
+    f = 3
+    out = cgc_filter(G, f)
+    norms = jnp.linalg.norm(G, axis=1)
+    out_norms = jnp.linalg.norm(out, axis=1)
+    thr = cgc_threshold(norms, f)
+    # every filtered norm <= threshold (+eps)
+    assert np.all(np.asarray(out_norms) <= float(thr) * (1 + 1e-5))
+    # gradients under the threshold are untouched
+    keep = norms <= thr
+    np.testing.assert_allclose(np.asarray(out[keep]), np.asarray(G[keep]),
+                               rtol=1e-6)
+
+
+def test_directions_preserved():
+    G = _rand(6, 32, seed=1)
+    out = cgc_filter(G, 2)
+    for i in range(6):
+        g, o = np.asarray(G[i]), np.asarray(out[i])
+        cos = g @ o / (np.linalg.norm(g) * np.linalg.norm(o))
+        assert cos == pytest.approx(1.0, abs=1e-5)
+
+
+def test_f_zero_is_identity():
+    G = _rand(5, 10, seed=2)
+    np.testing.assert_allclose(np.asarray(cgc_filter(G, 0)),
+                               np.asarray(G), rtol=1e-6)
+
+
+def test_permutation_equivariance():
+    G = _rand(7, 12, seed=3)
+    perm = jnp.array([3, 1, 6, 0, 2, 5, 4])
+    out1 = cgc_filter(G, 2)[perm]
+    out2 = cgc_filter(G[perm], 2)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+def test_aggregate_bounds_byzantine_influence():
+    # A huge Byzantine gradient contributes at most threshold-norm.
+    n, d, f = 10, 20, 2
+    key = jax.random.PRNGKey(4)
+    honest = jax.random.normal(key, (n - 1, d))
+    byz = 1e6 * jnp.ones((1, d))
+    G = jnp.concatenate([honest, byz])
+    agg = cgc_aggregate(G, f)
+    norms = jnp.linalg.norm(G, axis=1)
+    thr = cgc_threshold(norms, f)
+    honest_sum = jnp.sum(cgc_filter(G, f)[:-1], axis=0)
+    assert float(jnp.linalg.norm(agg - honest_sum)) <= float(thr) * 1.0001
+
+
+def test_zero_rows_survive():
+    G = jnp.zeros((4, 8)).at[0].set(1.0)
+    out = cgc_filter(G, 1)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,72 @@
+"""Checkpoint save/restore round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+
+
+def _tree(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "layers": {"w": jax.random.normal(key, (4, 8)),
+                   "b": jnp.zeros(8)},
+        "head": [jnp.ones(3), jnp.arange(5, dtype=jnp.int32)],
+        "step_scale": jnp.asarray(2.5),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t, extra={"note": "unit"})
+    restored, step = ck.restore(str(tmp_path), t)
+    assert step == 7
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), t, restored)
+
+
+def test_latest_step_and_multiple(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 12, t)
+    assert ck.latest_step(str(tmp_path)) == 12
+    _, step = ck.restore(str(tmp_path), t)
+    assert step == 12
+    _, step1 = ck.restore(str(tmp_path), t, step=1)
+    assert step1 == 1
+
+
+def test_missing_key_raises(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 0, {"only": t["head"]})
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), t)
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore(str(tmp_path / "nope"), _tree())
+
+
+def test_training_resume_equivalence(tmp_path):
+    """Save at step k, restore, continue — identical to uninterrupted run."""
+    from repro.optim import adamw
+    opt = adamw(0.05)
+    params = {"w": jnp.ones(6) * 3.0}
+    state = opt.init(params)
+
+    def run(params, state, start, steps):
+        for s in range(start, start + steps):
+            g = jax.grad(lambda p: 0.5 * jnp.sum(p["w"] ** 2))(params)
+            upd, state = opt.update(g, state, params, jnp.asarray(s))
+            params = jax.tree.map(lambda p, u: p + u, params, upd)
+        return params, state
+
+    pA, sA = run(params, state, 0, 10)
+    pB, sB = run(params, state, 0, 5)
+    ck.save(str(tmp_path), 5, {"params": pB, "opt": sB})
+    blob, _ = ck.restore(str(tmp_path), {"params": pB, "opt": sB})
+    pB2, sB2 = run(blob["params"], blob["opt"], 5, 5)
+    np.testing.assert_allclose(np.asarray(pA["w"]), np.asarray(pB2["w"]),
+                               rtol=1e-6)

@@ -1,0 +1,57 @@
+"""Cost-function oracles: constants (L, mu), optimality, Assumptions 4/5."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costfns
+
+
+def test_quadratic_constants_and_optimum():
+    key = jax.random.PRNGKey(0)
+    c = costfns.quadratic(key, d=24, mu=0.5, L=2.0, sigma=0.1)
+    assert c.mu == 0.5 and c.L == 2.0
+    # grad(w*) = 0 and Q(w*) minimal
+    assert float(jnp.linalg.norm(c.grad(c.w_star))) < 1e-4
+    w = c.w_star + 0.1
+    assert float(c.value(w)) > float(c.value(c.w_star))
+    # L-Lipschitz and mu-strong convexity on random pairs (Assumptions 2/3)
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (24,))
+    w2 = jax.random.normal(k2, (24,))
+    dg = c.grad(w1) - c.grad(w2)
+    dw = w1 - w2
+    assert float(jnp.linalg.norm(dg)) <= c.L * float(
+        jnp.linalg.norm(dw)) * (1 + 1e-5)
+    assert float(dg @ dw) >= c.mu * float(dw @ dw) * (1 - 1e-5)
+
+
+def test_quadratic_stochastic_assumptions():
+    key = jax.random.PRNGKey(1)
+    sigma = 0.2
+    c = costfns.quadratic(key, d=16, sigma=sigma)
+    w = jnp.ones(16) * 2.0
+    g = c.grad(w)
+    keys = jax.random.split(key, 4000)
+    gs = jax.vmap(lambda k: c.stoch_grad(k, w))(keys)
+    # Assumption 4: unbiased
+    bias = jnp.linalg.norm(jnp.mean(gs, 0) - g) / jnp.linalg.norm(g)
+    assert float(bias) < 0.02
+    # Assumption 5 with equality by construction
+    rel = jnp.mean(jnp.sum((gs - g) ** 2, -1)) / jnp.sum(g ** 2)
+    assert float(rel) == pytest.approx(sigma ** 2, rel=0.1)
+
+
+def test_least_squares_optimum_and_sigma():
+    key = jax.random.PRNGKey(2)
+    c = costfns.least_squares(key, n_data=256, d=10, batch=16)
+    assert float(jnp.linalg.norm(c.grad(c.w_star))) < 1e-3
+    assert c.L >= c.mu > 0
+    assert c.sigma > 0
+
+
+def test_logistic_newton_optimum():
+    key = jax.random.PRNGKey(3)
+    c = costfns.logistic_l2(key, n_data=200, d=8, l2=0.1)
+    assert float(jnp.linalg.norm(c.grad(c.w_star))) < 1e-4
+    assert c.mu == pytest.approx(0.1)

@@ -1,0 +1,62 @@
+"""Synthetic data pipeline: determinism, structure, modality stubs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data import SyntheticConfig, synthetic_batch, train_inputs
+from repro.data.synthetic import make_batch_iterator
+
+
+def test_deterministic():
+    cfg = SyntheticConfig(vocab_size=100, seq_len=32, global_batch=4)
+    key = jax.random.PRNGKey(0)
+    b1 = synthetic_batch(key, cfg)
+    b2 = synthetic_batch(key, cfg)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = SyntheticConfig(vocab_size=50, seq_len=16, global_batch=2)
+    b = synthetic_batch(jax.random.PRNGKey(1), cfg)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_tokens_in_range():
+    cfg = SyntheticConfig(vocab_size=37, seq_len=64, global_batch=3)
+    b = synthetic_batch(jax.random.PRNGKey(2), cfg)
+    t = np.asarray(b["tokens"])
+    assert t.min() >= 0 and t.max() < 37
+
+
+def test_learnable_structure():
+    """The deterministic grammar makes bigrams predictable more often than
+    chance — the signal the example training runs learn."""
+    cfg = SyntheticConfig(vocab_size=64, seq_len=512, global_batch=8,
+                          copy_prob=0.5)
+    b = synthetic_batch(jax.random.PRNGKey(3), cfg)
+    t = np.asarray(b["tokens"])
+    follow = (7 * t[:, :-1] + 13) % 64
+    hit = (t[:, 1:] == follow).mean()
+    assert hit > 0.3
+
+
+def test_modality_stubs():
+    audio = reduced(get_config("hubert-xlarge"))
+    b = train_inputs(jax.random.PRNGKey(0), audio, 2, 16)
+    assert b["features"].shape == (2, 16, 512)
+    assert "tokens" not in b
+    vlm = reduced(get_config("qwen2-vl-72b"))
+    b = train_inputs(jax.random.PRNGKey(0), vlm, 2, 16)
+    assert b["vision_embeds"].shape[0] == 2
+    assert b["mrope_positions"].shape == (3, 2, 16)
+
+
+def test_iterator_advances():
+    cfg = reduced(get_config("qwen3-0.6b"))
+    it = make_batch_iterator(cfg, 2, 8, seed=1)
+    a = next(it)["tokens"]
+    b = next(it)["tokens"]
+    assert not np.array_equal(np.asarray(a), np.asarray(b))

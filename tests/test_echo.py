@@ -1,0 +1,88 @@
+"""Echo mechanism: projection, decision rule, server reconstruction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.echo import (echo_decision, is_linearly_independent,
+                             project_onto_span, reconstruct_echo)
+
+
+def _setup(n=6, d=40, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    R = jax.random.normal(key, (n, d))
+    mask = jnp.arange(n) < k
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    return R, mask, g
+
+
+def test_projection_is_least_squares():
+    R, mask, g = _setup()
+    x, echo = project_onto_span(R, mask, g)
+    # residual orthogonal to the span
+    res = g - echo
+    for i in range(3):
+        assert float(jnp.abs(R[i] @ res)) < 1e-3
+    # coefficients vanish outside the mask
+    assert np.all(np.asarray(x[3:]) == 0)
+
+
+def test_projection_exact_for_in_span_vector():
+    R, mask, _ = _setup()
+    coeffs = jnp.array([0.5, -1.2, 2.0, 0, 0, 0])
+    g = coeffs @ (R * mask[:, None])
+    x, echo = project_onto_span(R, mask, g)
+    np.testing.assert_allclose(np.asarray(echo), np.asarray(g), rtol=1e-4,
+                               atol=1e-5)
+    dec = echo_decision(R, mask, g, r=1e-3)
+    assert bool(dec.send_echo)
+    assert float(dec.residual) < 1e-3 * float(jnp.linalg.norm(g))
+
+
+def test_echo_decision_rejects_orthogonal():
+    d = 30
+    R = jnp.zeros((4, d)).at[0, 0].set(1.0).at[1, 1].set(1.0)
+    mask = jnp.array([True, True, False, False])
+    g = jnp.zeros((d,)).at[5].set(1.0)       # orthogonal to span
+    dec = echo_decision(R, mask, g, r=0.5)
+    assert not bool(dec.send_echo)
+
+
+def test_empty_reference_never_echoes():
+    R, _, g = _setup()
+    mask = jnp.zeros(6, bool)
+    dec = echo_decision(R, mask, g, r=1e9)
+    assert not bool(dec.send_echo)
+
+
+def test_reconstruction_preserves_norm():
+    # server reconstructs g~ = k A x with ||g~|| = ||g|| (paper Sec. 4.2)
+    R, mask, g = _setup(seed=2)
+    dec = echo_decision(R, mask, g, r=10.0)   # force echo
+    assert bool(dec.send_echo)
+    g_rec = reconstruct_echo(R, mask, dec.k, dec.x)
+    assert float(jnp.linalg.norm(g_rec)) == pytest.approx(
+        float(jnp.linalg.norm(g)), rel=1e-4)
+    # direction == echo direction
+    cos = float((g_rec @ dec.echo) /
+                (jnp.linalg.norm(g_rec) * jnp.linalg.norm(dec.echo)))
+    assert cos == pytest.approx(1.0, abs=1e-5)
+
+
+def test_reconstruction_masks_extra_coefficients():
+    R, mask, g = _setup(seed=3)
+    x = jnp.ones((6,))                        # junk outside mask
+    g1 = reconstruct_echo(R, mask, 1.0, x)
+    g2 = reconstruct_echo(R, mask, 1.0, x * mask)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-6)
+
+
+def test_linear_independence_detection():
+    R, mask, _ = _setup()
+    dep = 2.0 * R[0] - R[1]                   # in span
+    assert not bool(is_linearly_independent(R, mask, dep, tol=1e-4))
+    key = jax.random.PRNGKey(9)
+    indep = jax.random.normal(key, (40,))
+    assert bool(is_linearly_independent(R, mask, indep, tol=1e-4))
+    # empty reference set accepts anything
+    assert bool(is_linearly_independent(R, jnp.zeros(6, bool), dep))

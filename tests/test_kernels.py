@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.echo import project_onto_span
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("n", [4, 13, 32])
+@pytest.mark.parametrize("d", [128, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cgc_clip_sweep(n, d, dtype):
+    G = (jax.random.normal(KEY, (n, d)) *
+         jnp.arange(1, n + 1)[:, None]).astype(dtype)
+    f = max(1, n // 4)
+    out = ops.cgc_clip(G, f)
+    exp = ref.cgc_clip_ref(G, f)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,d", [(4, 256), (8, 1000), (16, 2048)])
+def test_cgc_norms_sweep(n, d):
+    G = jax.random.normal(jax.random.fold_in(KEY, d), (n, d))
+    np.testing.assert_allclose(np.asarray(ops.cgc_norms(G)),
+                               np.asarray(ref.cgc_norms_ref(G)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,k,d", [(6, 3, 512), (12, 7, 1000), (16, 16, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_echo_project_sweep(n, k, d, dtype):
+    key = jax.random.fold_in(KEY, n * d)
+    A = jax.random.normal(key, (n, d)).astype(dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,)).astype(dtype)
+    mask = jnp.arange(n) < k
+    x, echo = ops.echo_project(A, mask, g)
+    x2, echo2 = project_onto_span(A.astype(jnp.float32), mask,
+                                  g.astype(jnp.float32))
+    tol = 1e-3 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x2), rtol=tol,
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(echo), np.asarray(echo2),
+                               rtol=tol, atol=tol)
+
+
+def test_echo_project_gram_matches_ref():
+    A = jax.random.normal(KEY, (8, 1024))
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), (1024,))
+    from repro.kernels.echo_project import gram_and_proj
+    gram, b = gram_and_proj(A, g, 256, interpret=True)
+    gram_e, b_e = ref.gram_ref(A, g)
+    np.testing.assert_allclose(np.asarray(gram), np.asarray(gram_e),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(b_e), rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,K,T", [(2, 8, 4, 256), (1, 16, 2, 300),
+                                     (4, 4, 4, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, K, T, dtype):
+    hd = 64
+    key = jax.random.fold_in(KEY, B * T)
+    q = jax.random.normal(key, (B, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, T, K, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, T, K, hd)).astype(dtype)
+    mask = jax.random.uniform(jax.random.fold_in(key, 3), (B, T)) < 0.8
+    out = ops.decode_attention(q, k, v, mask)
+    exp = ref.decode_attention_ref(q, k, v, mask)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_decode_attention_fully_masked_row_safe():
+    B, H, K, T, hd = 1, 4, 2, 128, 32
+    q = jax.random.normal(KEY, (B, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, K, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, K, hd))
+    mask = jnp.zeros((B, T), bool).at[:, 0].set(True)
+    out = ops.decode_attention(q, k, v, mask)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,111 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.cgc import cgc_filter, cgc_scales, cgc_threshold
+from repro.core.echo import echo_decision, project_onto_span
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def _matrix(n, d, seed, spread):
+    key = jax.random.PRNGKey(seed)
+    G = jax.random.normal(key, (n, d))
+    return G * (1 + spread * jnp.arange(n)[:, None])
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(3, 24), d=st.integers(2, 64), seed=st.integers(0, 99),
+       spread=st.floats(0.0, 5.0))
+def test_cgc_scales_bounded(n, d, seed, spread):
+    G = _matrix(n, d, seed, spread)
+    f = n // 3
+    s = np.asarray(cgc_scales(jnp.linalg.norm(G, axis=1), f))
+    assert np.all(s <= 1.0 + 1e-6)
+    assert np.all(s > 0)
+    # exactly at most f gradients are scaled down
+    assert int(np.sum(s < 1.0 - 1e-6)) <= f
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(3, 16), d=st.integers(3, 32), seed=st.integers(0, 99))
+def test_cgc_filtered_norms_capped(n, d, seed):
+    G = _matrix(n, d, seed, 2.0)
+    f = max(1, n // 4)
+    out = cgc_filter(G, f)
+    thr = float(cgc_threshold(jnp.linalg.norm(G, axis=1), f))
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    assert np.all(norms <= thr * (1 + 1e-4))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 12), d=st.integers(4, 48), k=st.integers(1, 8),
+       seed=st.integers(0, 99))
+def test_projection_never_longer_than_g(n, d, k, seed):
+    """||proj g|| <= ||g|| — projections are contractions."""
+    k = min(k, n)
+    key = jax.random.PRNGKey(seed)
+    R = jax.random.normal(key, (n, d))
+    mask = jnp.arange(n) < k
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    _, echo = project_onto_span(R, mask, g)
+    # exact projections contract; the ridge-regularised fp32 solve can
+    # overshoot by ~1e-4 relative when span(R) is nearly full-rank (k ~ d),
+    # so the invariant is asserted with a 1e-3 numerical allowance.
+    assert float(jnp.linalg.norm(echo)) <= float(
+        jnp.linalg.norm(g)) * (1 + 1e-3)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 12), d=st.integers(4, 48), seed=st.integers(0, 99),
+       r=st.floats(0.01, 2.0))
+def test_echo_decision_residual_consistent(n, d, seed, r):
+    key = jax.random.PRNGKey(seed)
+    R = jax.random.normal(key, (n, d))
+    mask = jnp.arange(n) < max(1, n // 2)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    dec = echo_decision(R, mask, g, r)
+    res_ok = float(dec.residual) <= r * float(jnp.linalg.norm(g)) + 1e-6
+    assert bool(dec.send_echo) == res_ok or not res_ok
+    if bool(dec.send_echo):
+        # Eq. 7 holds
+        assert res_ok
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 200), x=st.floats(0.01, 0.12),
+       sigma=st.floats(0.0, 0.09), mu_over_L=st.floats(0.6, 1.0))
+def test_rho_valid_whenever_resilience_holds(n, x, sigma, mu_over_L):
+    f = max(int(x * n), 0)
+    L, mu = 1.0, mu_over_L
+    if not theory.resilience_condition(n, f, L, mu):
+        return
+    r, eta, b, g, rho = theory.pick_r_eta(n, f, L, mu, sigma)
+    assert r > 0 and eta > 0
+    assert 0.0 <= rho < 1.0
+
+
+@settings(**SETTINGS)
+@given(sigma=st.floats(0.01, 0.12), x=st.floats(0.01, 0.1),
+       n=st.integers(20, 400))
+def test_comm_ratio_nonnegative_and_blows_up_at_xmax(sigma, x, n):
+    C = theory.comm_ratio_C(sigma, x, 1.0, n)
+    assert C >= 0.0
+    xm = theory.x_max(sigma, 1.0, n)
+    if x < 0.9 * xm:
+        assert np.isfinite(C)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(4, 32), d=st.integers(64, 512),
+       seed=st.integers(0, 20))
+def test_kernel_cgc_matches_ref_property(n, d, seed):
+    from repro.kernels import ops, ref
+    G = _matrix(n, d, seed, 1.0)
+    f = max(1, n // 4)
+    np.testing.assert_allclose(np.asarray(ops.cgc_clip(G, f)),
+                               np.asarray(ref.cgc_clip_ref(G, f)),
+                               rtol=2e-4, atol=2e-4)

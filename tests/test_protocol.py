@@ -1,0 +1,157 @@
+"""End-to-end Echo-CGC protocol behaviour (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import byzantine, costfns, theory
+from repro.core.protocol import (communication_phase, echo_cgc_round,
+                                 pointwise_round, run_training)
+from repro.core.types import MSG_RAW, ProtocolConfig, raw_bits
+
+
+def _cfg(n=12, f=1, r=0.3, eta=0.01):
+    return ProtocolConfig(n=n, f=f, r=r, eta=eta)
+
+
+def _identical_grads(n=12, d=24, seed=0):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    return jnp.tile(g, (n, 1))
+
+
+def _no_plan(n, d):
+    return byzantine.no_attack(jax.random.PRNGKey(1),
+                               jnp.zeros((n, d)), jnp.zeros(n, bool),
+                               None, None)
+
+
+def test_slot0_always_raw_rest_echo_when_identical():
+    n, d = 12, 24
+    grads = _identical_grads(n, d)
+    cfg = _cfg(n=n)
+    plan = _no_plan(n, d)
+    server, stats = communication_phase(cfg, grads, jnp.zeros(n, bool), plan)
+    assert not bool(stats.echo_sent[0])       # empty R -> raw (line 15)
+    assert int(stats.n_echo) == n - 1         # everyone else echoes
+    assert int(stats.rank_R) == 1             # identical grads: rank 1
+    # server reconstruction is exact for every echo
+    np.testing.assert_allclose(np.asarray(server.G), np.asarray(grads),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_bits_accounting():
+    n, d = 10, 50
+    grads = _identical_grads(n, d)
+    cfg = _cfg(n=n)
+    server, stats = communication_phase(cfg, grads, jnp.zeros(n, bool),
+                                        _no_plan(n, d))
+    total = float(jnp.sum(stats.bits_sent))
+    p2p = n * raw_bits(d)
+    assert total < 0.35 * p2p                 # large saving when echoing
+    # raw slot costs exactly 32 d
+    assert float(stats.bits_sent[0]) == raw_bits(d)
+
+
+def test_reconstruction_matches_local_gradient_norm():
+    # For every honest echoing worker: ||g~_j|| == ||g_j|| (paper invariant)
+    n, d = 10, 30
+    key = jax.random.PRNGKey(3)
+    base = jax.random.normal(key, (d,))
+    grads = base + 0.05 * jax.random.normal(jax.random.fold_in(key, 1),
+                                            (n, d))
+    cfg = _cfg(n=n, r=0.5)
+    server, stats = communication_phase(cfg, grads, jnp.zeros(n, bool),
+                                        _no_plan(n, d))
+    gn = np.linalg.norm(np.asarray(grads), axis=1)
+    rn = np.linalg.norm(np.asarray(server.G), axis=1)
+    np.testing.assert_allclose(rn, gn, rtol=1e-4)
+
+
+def test_forged_echo_detected():
+    n, d, f = 10, 16, 3
+    grads = _identical_grads(n, d, seed=4)
+    byz_mask = jnp.zeros(n, bool).at[jnp.array([4, 7, 9])].set(True)
+    plan = byzantine.forged_echo(jax.random.PRNGKey(0), grads, byz_mask,
+                                 None, None)
+    cfg = _cfg(n=n, f=f)
+    server, stats = communication_phase(cfg, grads, byz_mask, plan)
+    assert int(stats.n_detected) == 3         # self-reference caught
+    # detected workers contribute the zero vector (line 37)
+    for j in (4, 7, 9):
+        assert float(jnp.linalg.norm(server.G[j])) == 0.0
+
+
+def test_crash_workers_ignored():
+    n, d = 8, 12
+    grads = _identical_grads(n, d, seed=5)
+    byz_mask = jnp.zeros(n, bool).at[2].set(True)
+    plan = byzantine.crash(jax.random.PRNGKey(0), grads, byz_mask, None,
+                           None)
+    cfg = _cfg(n=n, f=2)
+    server, stats = communication_phase(cfg, grads, byz_mask, plan)
+    assert not bool(server.received[2])
+    assert float(jnp.linalg.norm(server.G[2])) == 0.0
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "large_norm", "mean_shift",
+                                    "poisoned_echo"])
+def test_convergence_under_attack(attack):
+    """Theorem 9: Echo-CGC converges despite f Byzantine workers."""
+    key = jax.random.PRNGKey(0)
+    d, n, f = 24, 16, 2
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    r, eta, *_ = theory.pick_r_eta(n, f, cost.L, cost.mu, cost.sigma)
+    cfg = ProtocolConfig(n=n, f=f, r=r, eta=eta)
+    byz_mask = jnp.zeros(n, bool).at[:f].set(True)
+    trace = run_training(cfg, cost, byzantine.ATTACKS[attack], byz_mask,
+                         key, jnp.zeros(d), rounds=60)
+    d0, dT = float(trace["dist2"][0]), float(trace["dist2"][-1])
+    assert dT < 1e-2 * d0, (attack, d0, dT)
+
+
+def test_rate_within_proven_bound():
+    """Average contraction factor <= rho (the proven worst-case rate)."""
+    key = jax.random.PRNGKey(1)
+    d, n, f = 16, 16, 2
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    r, eta, b, g, rho = theory.pick_r_eta(n, f, cost.L, cost.mu, cost.sigma)
+    cfg = ProtocolConfig(n=n, f=f, r=r, eta=eta)
+    byz_mask = jnp.zeros(n, bool).at[:f].set(True)
+    trace = run_training(cfg, cost, byzantine.ATTACKS["sign_flip"],
+                         byz_mask, key, jnp.ones(d) * 3.0, rounds=40)
+    dist2 = np.asarray(trace["dist2"])
+    measured = (dist2[-1] / dist2[0]) ** (1.0 / (len(dist2) - 1))
+    assert measured <= rho + 0.02, (measured, rho)
+
+
+def test_echo_cgc_matches_pointwise_cgc_without_echoes():
+    """With r=0 no one echoes: Echo-CGC == plain CGC [11] on raw gradients."""
+    key = jax.random.PRNGKey(2)
+    d, n, f = 12, 8, 1
+    cost = costfns.quadratic(key, d=d, sigma=0.3)
+    w = jnp.ones(d)
+    keys = jax.random.split(key, n)
+    grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys)
+    byz = jnp.zeros(n, bool)
+    plan = _no_plan(n, d)
+    cfg0 = ProtocolConfig(n=n, f=f, r=0.0, eta=0.05)
+    w1, server, stats = echo_cgc_round(cfg0, w, grads, byz, plan)
+    assert int(stats.n_echo) == 0
+    w2, _ = pointwise_round(cfg0, w, grads, byz, plan)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5)
+
+
+def test_echo_fraction_meets_theory_bound():
+    """Measured echo rate >= p = 1 - (1+2/r)^2 sigma^2 (Sec. 4.3)."""
+    key = jax.random.PRNGKey(7)
+    d, n = 40, 24
+    sigma = 0.05
+    cost = costfns.quadratic(key, d=d, sigma=sigma)
+    r = 0.5
+    cfg = ProtocolConfig(n=n, f=0, r=r, eta=0.01)
+    byz = jnp.zeros(n, bool)
+    trace = run_training(cfg, cost, byzantine.no_attack, byz, key,
+                         jnp.ones(d), rounds=30, aggregator="cgc")
+    p = theory.echo_probability(r, sigma)
+    echo_frac = float(jnp.mean(trace["n_echo"] / (n - 1)))
+    assert echo_frac >= p - 0.1, (echo_frac, p)

@@ -1,0 +1,85 @@
+"""End-to-end behaviour of the full system (paper protocol + LM substrate).
+
+The headline reproduction checks live here: Echo-CGC (i) converges under
+Byzantine attack where plain averaging fails, (ii) transmits a small
+fraction of the baseline bits, (iii) detects forged echoes — all on the
+faithful radio-network simulation. The LM-side check trains a small model
+end-to-end and requires the loss to drop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import byzantine, costfns, theory
+from repro.core.protocol import run_training
+from repro.core.types import ProtocolConfig
+
+
+@pytest.fixture(scope="module")
+def setting():
+    key = jax.random.PRNGKey(0)
+    d, n, f = 30, 20, 2
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    r, eta, b, g, rho = theory.pick_r_eta(n, f, cost.L, cost.mu, cost.sigma)
+    cfg = ProtocolConfig(n=n, f=f, r=r, eta=eta)
+    byz = jnp.zeros(n, bool).at[:f].set(True)
+    return key, cost, cfg, byz, rho
+
+
+def test_echo_cgc_converges_where_mean_fails(setting):
+    key, cost, cfg, byz, _ = setting
+    w0 = jnp.ones(cost.d) * 2.0
+    tr_cgc = run_training(cfg, cost, byzantine.ATTACKS["large_norm"], byz,
+                          key, w0, rounds=50, aggregator="cgc")
+    tr_mean = run_training(cfg, cost, byzantine.ATTACKS["large_norm"], byz,
+                           key, w0, rounds=50, aggregator="mean",
+                           use_radio=False)
+    assert float(tr_cgc["dist2"][-1]) < 1e-3 * float(tr_cgc["dist2"][0])
+    assert float(tr_mean["dist2"][-1]) > float(tr_cgc["dist2"][-1]) * 10
+
+
+def test_communication_savings_against_p2p(setting):
+    """Headline claim: large savings when sigma is small (Sec. 4.3)."""
+    key, cost, cfg, byz, _ = setting
+    w0 = jnp.ones(cost.d)
+    tr = run_training(cfg, cost, byzantine.ATTACKS["sign_flip"], byz, key,
+                      w0, rounds=20)
+    bits_echo = float(jnp.sum(tr["bits"]))
+    bits_p2p = 20 * cfg.n * 32 * cost.d
+    saving = 1 - bits_echo / bits_p2p
+    assert saving > 0.5, saving
+
+
+def test_detection_counts(setting):
+    key, cost, cfg, byz, _ = setting
+    tr = run_training(cfg, cost, byzantine.ATTACKS["forged_echo"], byz, key,
+                      jnp.ones(cost.d), rounds=5)
+    # every Byzantine forging an invalid echo is provably detected
+    assert int(tr["n_detected"][-1]) == int(jnp.sum(byz))
+
+
+def test_lm_training_loss_drops():
+    """examples/train_lm driver logic: tiny LM, loss decreases."""
+    from repro.configs import get_config, reduced
+    from repro.data import make_batch_iterator
+    from repro.launch.train import TrainSettings, make_train_step
+    from repro.models import model as M
+    from repro.models.nn import split_params
+    from repro.optim import adamw
+
+    cfg = reduced(get_config("qwen3-0.6b"), layers=2, d_model=128)
+    opt = adamw(1e-3)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    values, _ = split_params(params)
+    state = opt.init(values)
+    step_fn, _ = make_train_step(cfg, opt, TrainSettings(), None, 8)
+    it = make_batch_iterator(cfg, 8, 64, seed=0)
+    losses = []
+    step_jit = jax.jit(step_fn)
+    for s in range(30):
+        values, state, metrics = step_jit(values, state, next(it),
+                                          jnp.asarray(s))
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses[:5]

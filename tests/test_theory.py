@@ -1,0 +1,84 @@
+"""Closed-form theory (paper Sec. 4) against its own stated numbers."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def test_k_star_matches_paper():
+    # Lemma 2: k* ~= 1.12, supremum near x ~= 1.91
+    ks = theory.k_star(400001, 30.0)
+    assert abs(ks - 1.1157) < 2e-3
+    assert abs(theory.K_STAR - ks) < 2e-3
+
+
+def test_k_x_properties():
+    xs = np.linspace(1, 100, 500)
+    k = theory.k_x(xs)
+    assert np.all(np.diff(k) > 0)            # increasing (used in Lemma 3)
+    assert k[0] == pytest.approx(1.0)        # k_1 = 1
+    assert np.all(k <= theory.K_STAR * np.sqrt(xs) + 1e-9)  # Lemma 2
+
+
+def test_r_max_positive_iff_resilience():
+    n, L, mu, sigma = 50, 1.0, 1.0, 0.1
+    f_ok = 5
+    assert theory.resilience_condition(n, f_ok, L, mu)
+    assert theory.r_max_lemma4(n, f_ok, L, mu, sigma) > 0
+    f_bad = int(n * mu / ((3 + theory.K_STAR) * L)) + 1
+    assert not theory.resilience_condition(n, f_bad, L, mu)
+
+
+def test_lemma4_implies_lemma3():
+    # r satisfying Eq. 15 must satisfy Eq. 14 under Assumption 6.
+    n, f, L, mu = 64, 6, 1.2, 0.9
+    sigma = 0.9 / np.sqrt(n)                 # sigma < 1/sqrt(n)
+    r4 = theory.r_max_lemma4(n, f, L, mu, sigma)
+    r3 = theory.r_max_lemma3(n, f, L, mu, sigma)
+    assert 0 < r4 < r3
+
+
+def test_beta_positive_for_admissible_r():
+    n, f, L, mu, sigma = 40, 4, 1.0, 0.8, 0.1
+    r = 0.9 * theory.r_max_lemma4(n, f, L, mu, sigma)
+    b = theory.beta(n, f, n - f, f, L, mu, r, sigma)
+    assert b > 0                             # Lemma 4
+
+
+def test_rho_in_unit_interval():
+    n, f, L, mu, sigma = 30, 3, 1.0, 1.0, 0.1
+    r, eta, b, g, rho = theory.pick_r_eta(n, f, L, mu, sigma)
+    assert 0 <= rho < 1                      # Theorem 5
+    # eta* minimises rho; doubling eta stays < 1 (open interval bound)
+    rho2 = theory.rho(1.99 * eta, b, g)
+    assert rho2 < 1.0
+
+
+def test_comm_ratio_headline():
+    # Sec 4.3: sigma=0.1, x=0.1, mu/L=1, n=100 -> save > 75%
+    C = theory.comm_ratio_C(0.1, 0.1, 1.0, 100)
+    assert C < 0.25
+    # Fig 1c: x < 0.15 -> C < 0.45 (paper: "as x<0.15, C<0.4")
+    assert theory.comm_ratio_C(0.1, 0.14, 1.0, 100) < 0.45
+    # blow-up at x_max
+    xm = theory.x_max(0.1, 1.0, 100)
+    assert theory.comm_ratio_C(0.1, xm + 0.01, 1.0, 100) == float("inf")
+
+
+def test_comm_ratio_monotonic_in_sigma():
+    Cs = [theory.comm_ratio_C(s, 0.1, 1.0, 100)
+          for s in (0.02, 0.05, 0.08, 0.1)]
+    assert all(a < b for a, b in zip(Cs, Cs[1:]))
+
+
+def test_echo_probability():
+    assert theory.echo_probability(0.5, 0.1) == pytest.approx(0.75)
+    assert theory.echo_probability(1e9, 0.0) == pytest.approx(1.0)
+
+
+def test_expected_bits_reduction():
+    n, d = 100, 10 ** 6
+    p = 0.9
+    ours = theory.expected_bits_per_round(n, d, p)
+    prior = theory.prior_bits_per_round(n, d)
+    assert ours / prior < (1 - p) + 0.02     # ~ C = 1 - p
