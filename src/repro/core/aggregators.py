@@ -8,8 +8,9 @@ protocol simulator and the benchmarks can swap them freely:
     aggregate(G: (n, d) gradients, f: int) -> (d,) update direction
 
 Conventions: CGC returns the filtered *sum* (paper line 44); the others
-return a mean-scale vector. ``repro/dist`` re-exposes these inside shard_map
-for the TPU trainer.
+return a mean-scale vector. ``repro.dist.collectives.AGG_FNS`` re-derives
+the same aggregators (same name, same scale) as shard_map collectives over
+the worker axes for the distributed trainer.
 """
 from __future__ import annotations
 

@@ -71,15 +71,18 @@ def project_onto_span(
     return x, echo
 
 
-def echo_decision(
-    R: jax.Array,
+def echo_decision_from_projection(
+    x: jax.Array,
+    echo: jax.Array,
     mask: jax.Array,
     g: jax.Array,
     r: float,
-    ridge: float = 1e-8,
 ) -> EchoDecision:
-    """Full slot-time computation of worker j (paper lines 18-24)."""
-    x, echo = project_onto_span(R, mask, g, ridge)
+    """Eq. 7 decision given a precomputed projection (x, echo) of g.
+
+    Factored out so the slot loop can run the Gram solve once and derive
+    both this decision and the independence test from it.
+    """
     g_norm = jnp.linalg.norm(g)
     echo_norm = jnp.linalg.norm(echo)
     residual = jnp.linalg.norm(echo - g)
@@ -89,6 +92,33 @@ def echo_decision(
     return EchoDecision(send_echo=ok, k=k, x=x, echo=echo, residual=residual)
 
 
+def echo_decision(
+    R: jax.Array,
+    mask: jax.Array,
+    g: jax.Array,
+    r: float,
+    ridge: float = 1e-8,
+) -> EchoDecision:
+    """Full slot-time computation of worker j (paper lines 18-24)."""
+    x, echo = project_onto_span(R, mask, g, ridge)
+    return echo_decision_from_projection(x, echo, mask, g, r)
+
+
+def independent_from_projection(
+    echo: jax.Array,
+    mask: jax.Array,
+    g: jax.Array,
+    tol: float = 1e-6,
+) -> jax.Array:
+    """Appendix-D test given a precomputed projection of g onto span(R).
+
+    Relative-residual form: independent iff ||A A^+ g - g|| > tol ||g||;
+    an empty R always accepts g.
+    """
+    res = jnp.linalg.norm(echo - g)
+    return (res > tol * jnp.linalg.norm(g)) | (~jnp.any(mask))
+
+
 def is_linearly_independent(
     R: jax.Array,
     mask: jax.Array,
@@ -96,14 +126,9 @@ def is_linearly_independent(
     tol: float = 1e-6,
     ridge: float = 1e-8,
 ) -> jax.Array:
-    """Appendix-D test (line 29): g independent of R iff A A^+ g != g.
-
-    In floating point we use a *relative residual* test: independent iff
-    ||A A^+ g - g|| > tol * ||g||. An empty R always accepts g.
-    """
+    """Appendix-D test (line 29): g independent of R iff A A^+ g != g."""
     _, proj = project_onto_span(R, mask, g, ridge)
-    res = jnp.linalg.norm(proj - g)
-    return (res > tol * jnp.linalg.norm(g)) | (~jnp.any(mask))
+    return independent_from_projection(proj, mask, g, tol)
 
 
 def reconstruct_echo(

@@ -26,8 +26,8 @@ import jax.numpy as jnp
 from . import aggregators as agg_lib
 from .byzantine import AttackPlan
 from .cgc import cgc_aggregate
-from .echo import (echo_decision, is_linearly_independent, project_onto_span,
-                   reconstruct_echo)
+from .echo import (echo_decision_from_projection, independent_from_projection,
+                   project_onto_span, reconstruct_echo)
 from .types import (MSG_ECHO, MSG_RAW, MSG_SILENT, ProtocolConfig, RoundStats,
                     ServerState, echo_bits, raw_bits)
 
@@ -53,11 +53,17 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     is_byz = byz_mask[i]
 
     # --- Worker i decides what to broadcast (lines 14-24) ----------------
-    dec = echo_decision(st.R, st.rmask, g_i, cfg.r, cfg.ridge)
+    # One Gram solve serves both the echo decision (Eq. 7) and the
+    # independence test (line 29): project the broadcast vector once.
+    # For honest workers raw_msg == g_i, so the decision is the paper's;
+    # for Byzantine workers every dec field is overridden by the plan.
+    raw_msg = jnp.where(is_byz, plan.raw[i], g_i)
+    x_proj, proj = project_onto_span(st.R, st.rmask, raw_msg, cfg.ridge)
+    dec = echo_decision_from_projection(x_proj, proj, st.rmask, raw_msg,
+                                        cfg.r)
     honest_mode = jnp.where(dec.send_echo, MSG_ECHO, MSG_RAW)
     mode = jnp.where(is_byz, plan.mode[i], honest_mode).astype(jnp.int32)
 
-    raw_msg = jnp.where(is_byz, plan.raw[i], g_i)
     echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
     echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
     echo_ref = jnp.where(is_byz, plan.echo_ref[i], st.rmask)
@@ -78,8 +84,8 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     detected = st.detected.at[i].set(detected_i)
 
     # --- All later workers overhear raw broadcasts (lines 26-31) ---------
-    indep = is_linearly_independent(st.R, st.rmask, raw_msg, cfg.indep_tol,
-                                    cfg.ridge)
+    indep = independent_from_projection(proj, st.rmask, raw_msg,
+                                        cfg.indep_tol)
     add = is_raw & indep
     R = jnp.where(add, st.R.at[i].set(raw_msg), st.R)
     rmask = st.rmask.at[i].set(add | st.rmask[i])

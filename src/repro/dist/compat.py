@@ -1,0 +1,103 @@
+"""jax version compatibility for the distribution layer.
+
+The repo targets the modern jax surface (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.set_mesh``, positional
+``AbstractMesh(sizes, names)``). The pinned toolchain ships jax 0.4.37,
+where those spell differently:
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and takes
+    ``check_rep`` / ``auto`` instead of ``check_vma`` / ``axis_names``;
+  * partial-manual mode (``auto``) raises NotImplementedError, so
+    ``axis_names`` degrades to a fully-manual shard_map over the whole
+    mesh — unnamed axes are simply never referenced by the specs, which
+    is equivalent for replicated-over-model programs (the CPU test
+    topologies) but forgoes compiler-driven tensor parallelism inside
+    the region;
+  * ``AbstractMesh`` takes a single ``((name, size), ...)`` tuple;
+  * there is no mesh context manager under ``jax.set_mesh``.
+
+``install()`` (called on ``repro.dist`` import) adds the missing modern
+names onto the ``jax`` namespace so library code and test snippets can be
+written against one API. On a jax that already has them it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import AbstractMesh
+
+
+def abstract_mesh(axis_sizes: Tuple[int, ...],
+                  axis_names: Tuple[str, ...]) -> AbstractMesh:
+    """``AbstractMesh(sizes, names)`` on every supported jax version."""
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis name: size} for Mesh and AbstractMesh alike."""
+    shape = getattr(mesh, "shape", None)
+    if isinstance(shape, dict):
+        return dict(shape)
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _compat_shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=None, check_rep=None,
+                      auto=None):
+    """``jax.shard_map``-alike on jax 0.4.37 (see module docstring)."""
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if f is None:                                    # curried usage
+        return functools.partial(
+            _compat_shard_map, mesh=mesh, in_specs=in_specs,
+            out_specs=out_specs, axis_names=axis_names,
+            check_vma=check_vma, check_rep=check_rep, auto=auto)
+    check = True
+    if check_vma is not None:
+        check = check_vma
+    if check_rep is not None:
+        check = check_rep
+    # ``axis_names``/``auto`` request partial-manual mode; 0.4.37's ``auto``
+    # is not implemented, so run fully manual: axes outside ``axis_names``
+    # are untouched by the specs and stay effectively replicated.
+    del axis_names, auto
+    return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+@contextlib.contextmanager
+def _compat_set_mesh(mesh):
+    """``jax.set_mesh``-alike: enter the physical mesh context if possible.
+
+    Every shard_map / NamedSharding in this repo names its mesh explicitly,
+    so on old jax the default-mesh context only needs to not interfere.
+    """
+    if hasattr(mesh, "__enter__"):
+        with mesh:
+            yield mesh
+    else:                                            # AbstractMesh
+        yield mesh
+
+
+def install() -> None:
+    """Add modern aliases onto the jax namespace when missing (idempotent)."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _compat_shard_map
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _compat_set_mesh
+
+
+def partial_manual_supported() -> bool:
+    """True when jax.shard_map honors ``axis_names`` (partial-manual mode).
+
+    The 0.4.37 shim degrades to fully-manual, so shard_maps cannot nest
+    — callers that need a nested region (EP inside the worker shard_map)
+    should fail fast when this is False.
+    """
+    return getattr(jax, "shard_map", None) is not _compat_shard_map

@@ -95,6 +95,9 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer,
                     settings: TrainSettings, mesh, global_batch: int
                     ) -> Tuple[Callable, ShardCtx]:
     """Build the jittable (values, opt_state, batch, step) -> ... step."""
+    if settings.aggregator not in AGG_FNS:
+        raise ValueError(f"unknown aggregator {settings.aggregator!r}; "
+                         f"known: {sorted(AGG_FNS)}")
     ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
     data_axes = ctx.batch_axes
 
@@ -102,6 +105,13 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer,
         # expert parallelism runs a NESTED shard_map over the model axis
         # (disjoint from the worker's manual data axes): batch is already
         # local, so batch_axes=() inside.
+        from repro.dist.compat import partial_manual_supported
+        if data_axes and not partial_manual_supported():
+            raise ValueError(
+                "moe_impl='ep' inside the worker shard_map needs "
+                "partial-manual shard_map (jax >= 0.6); this jax only "
+                "supports EP at the pjit level (serve/prefill) — use "
+                "moe_impl='tp' for training")
         inner_ctx = ShardCtx(mesh=mesh, batch_axes=(), model_axis="model",
                              moe_impl="ep", remat=settings.remat)
     else:
@@ -182,11 +192,16 @@ def make_fsdp_train_step(cfg: ModelConfig, opt: Optimizer,
     """
     import dataclasses as _dc
 
-    from repro.dist.fsdp import (aggregate_rest_cgc, fsdp_manual_specs,
-                                 fsdp_tree_shardings, make_gather_fn,
-                                 plan_fsdp)
+    from repro.dist.fsdp import (aggregate_rest_cgc, clip_fsdp_global_norm,
+                                 fsdp_manual_specs, fsdp_tree_shardings,
+                                 make_gather_fn, plan_fsdp)
     from repro.launch.specs import abstract_params
 
+    if settings.aggregator not in ("cgc", "mean"):
+        raise ValueError(
+            f"FSDP trainer supports aggregator 'cgc' or 'mean' (the "
+            f"reduction happens inside the gather VJP), got "
+            f"{settings.aggregator!r}")
     ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
     data_axes = ctx.batch_axes
     if not data_axes:
@@ -223,13 +238,17 @@ def make_fsdp_train_step(cfg: ModelConfig, opt: Optimizer,
         loss, metrics, grads = _microbatched_grads(
             loss_fn, values, batch, settings.microbatches)
         # fsdp leaves: already blockwise-clipped + reduce-scattered in the
-        # gather VJP; the replicated remainder gets the exact CGC psum.
-        grads = aggregate_rest_cgc(grads, plan, data_axes, settings.f)
+        # gather VJP; the replicated remainder gets the exact matching psum.
+        grads = aggregate_rest_cgc(grads, plan, data_axes, settings.f,
+                                   use_cgc=use_cgc)
         loss = jax.lax.pmean(loss, data_axes)
         metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes),
                                metrics)
         if settings.clip_norm:
-            grads, gnorm = clip_by_global_norm(grads, settings.clip_norm)
+            # layout-aware: planned leaves are shards, rest is replicated
+            grads, gnorm = clip_fsdp_global_norm(grads, plan, data_axes,
+                                                 settings.clip_norm)
+            metrics = dict(metrics, grad_global_norm=gnorm)
         updates, opt_state = opt.update(grads, opt_state, values, step)
         values = jax.tree.map(lambda p, u: p + u.astype(p.dtype), values,
                               updates)
@@ -304,6 +323,9 @@ def make_echo_train_step(cfg: ModelConfig, opt: Optimizer,
         loss = jax.lax.pmean(loss, data_axes)
         metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes),
                                metrics)
+        if settings.clip_norm:
+            agg, gnorm = clip_by_global_norm(agg, settings.clip_norm)
+            diags = dict(diags, grad_global_norm=gnorm)
         updates, opt_state = opt.update(agg, opt_state, values, step)
         values = jax.tree.map(lambda p, u: p + u.astype(p.dtype), values,
                               updates)
@@ -403,19 +425,41 @@ def main(argv=None):
                              n_byz=args.n_byz)
     opt = adamw(args.lr)
 
+    # Use every host device as a data-parallel worker when possible; the
+    # robust-aggregation flags are no-ops without a worker axis.
+    from repro.launch.mesh import make_host_mesh
+    n_dev = len(jax.devices())
+    mesh = (make_host_mesh() if n_dev > 1 and args.batch % n_dev == 0
+            else None)
+    if args.n_byz and mesh is None:
+        raise SystemExit(
+            "--n-byz needs >1 data-parallel workers: run with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N and a "
+            "--batch divisible by N")
+    if mesh is None and (args.f or args.aggregator != "mean"):
+        print("warning: single worker — no aggregation runs, so "
+              "--aggregator/--f are inactive (force multiple host devices "
+              "via XLA_FLAGS to exercise them)")
+
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     values, _ = split_params(params)
     opt_state = opt.init(values)
-    step_fn, ctx = make_train_step(cfg, opt, settings, mesh=None,
+    step_fn, ctx = make_train_step(cfg, opt, settings, mesh=mesh,
                                    global_batch=args.batch)
+    if mesh is not None:
+        step_fn = jax.jit(step_fn)
 
     it = make_batch_iterator(cfg, args.batch, args.seq)
-    for step in range(args.steps):
-        batch = next(it)
-        values, opt_state, metrics = step_fn(values, opt_state, batch,
-                                             jnp.asarray(step))
-        if step % 5 == 0 or step == args.steps - 1:
-            print(f"step {step:4d} loss={float(metrics['loss']):.4f}")
+    import contextlib
+    mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+    with mesh_ctx:
+        for step in range(args.steps):
+            batch = next(it)
+            values, opt_state, metrics = step_fn(values, opt_state, batch,
+                                                 jnp.asarray(step))
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:4d} loss={float(metrics['loss']):.4f}")
     if args.ckpt_dir:
         ckpt_lib.save(args.ckpt_dir, args.steps, values)
         print("checkpoint saved to", args.ckpt_dir)

@@ -13,8 +13,8 @@ Sharding modes (DESIGN.md §3):
     to the device's tokens, one psum over 'model' combines. Robust default.
   * ``ep``     — expert-parallel: experts sharded over the model axis,
     token copies exchanged with all_to_all. Implemented in
-    ``repro.dist.expert_parallel`` and enabled per-config for the §Perf
-    hillclimb.
+    ``repro.dist.moe_sharding`` (``moe_sharded`` dispatches on
+    ``ShardCtx.moe_impl``) and enabled per-config for the §Perf hillclimb.
 
 The router always runs in fp32.
 """

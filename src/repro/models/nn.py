@@ -2,8 +2,9 @@
 
 Parameters are plain jnp arrays carried in nested dicts. During init each
 leaf is a ``Param(value, axes)`` where ``axes`` names the *logical* sharding
-axis of every dimension (e.g. ("embed", "mlp")); ``repro.dist.sharding``
-maps logical axes -> mesh axes. ``split_params`` separates the value tree
+axis of every dimension (e.g. ("embed", "mlp"));
+``repro.dist.sharding.spec_for`` / ``tree_shardings`` map logical axes ->
+mesh PartitionSpecs. ``split_params`` separates the value tree
 from the (static) axes tree so compute functions see plain arrays.
 
 ``Param`` registers ``axes`` as pytree aux-data, so ``jax.eval_shape`` over an

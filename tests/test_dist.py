@@ -11,12 +11,14 @@ import textwrap
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.dist import DEFAULT_RULES, EP_RULES, spec_for
+# abstract_mesh: version-compat constructor (current jax rejects the
+# positional AbstractMesh((16, 16), ("data", "model")) form).
+from repro.dist import DEFAULT_RULES, EP_RULES, abstract_mesh, spec_for
 
-MESH1 = AbstractMesh((16, 16), ("data", "model"))
-MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_rules_basic():
@@ -108,6 +110,36 @@ def test_cgc_aggregation_collective():
         assert abs(float(mean[0]) - 1.0) > 5.0, float(mean[0])
         err = abs(float(cgc[0]) - 1.0)
         assert err < 0.5, float(cgc[0])
+        print("OK")
+    """)
+
+
+def test_agg_fns_cgc_matches_gathered_reference():
+    """AGG_FNS["cgc"] inside shard_map == core.aggregators.cgc_sum on the
+    gathered (n, d) table (same filtered-sum convention, paper line 44)."""
+    _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.aggregators import cgc_sum
+        from repro.dist import AGG_FNS
+        from repro.dist.collectives import worker_index
+
+        n, d, f = 8, 96, 2
+        table = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        table = table * (1.0 + 3.0 * jnp.arange(n)[:, None])  # norm spread
+
+        def step(rows):
+            g = {"w": rows[0, :64], "b": rows[0, 64:]}   # pytree split of g
+            agg, diags = AGG_FNS["cgc"](g, ("data",), f)
+            return jnp.concatenate([agg["w"], agg["b"]])
+
+        mesh = jax.make_mesh((n,), ("data",))
+        sm = jax.shard_map(step, mesh=mesh, in_specs=P("data", None),
+                           out_specs=P(), check_vma=False)
+        got = jax.jit(sm)(table)
+        want = cgc_sum(table, f)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
         print("OK")
     """)
 

@@ -1,7 +1,14 @@
-"""Hypothesis property-based tests on the system's invariants."""
+"""Hypothesis property-based tests on the system's invariants.
+
+``hypothesis`` is an optional test dependency (declared under the
+``test`` extra in pyproject.toml); the module skips cleanly without it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import theory
