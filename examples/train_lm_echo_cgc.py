@@ -5,17 +5,18 @@
     PYTHONPATH=src python examples/train_lm_echo_cgc.py \
         --preset 100m --steps 200            # ~100M params (slow on CPU)
 
-The trainer is the production path from repro.launch.train: data-parallel
-workers (simulated in-process on CPU; mesh shards on real hardware), CGC
-aggregation over per-worker gradients, AdamW, checkpointing, deterministic
-synthetic data. ``--byz K`` makes K workers Byzantine to demonstrate the
-filter on a real model. With a single host device the "workers" collapse to
-one — pass --devices 8 to fork 8 CPU devices for true multi-worker DP.
+The trainer is the production path from repro.launch.engine: a Trainer
+driver over the replicated strategy — data-parallel workers (simulated
+in-process on CPU; mesh shards on real hardware), CGC aggregation over
+per-worker gradients, AdamW, complete (values, opt_state, step)
+checkpoints, deterministic synthetic data. ``--byz K`` makes K workers
+Byzantine to demonstrate the filter on a real model. With a single host
+device the "workers" collapse to one — pass --devices 8 to fork 8 CPU
+devices for true multi-worker DP.
 """
 import argparse
-import dataclasses
+import contextlib
 import os
-import sys
 import time
 
 
@@ -31,6 +32,8 @@ def main():
     ap.add_argument("--byz", type=int, default=0)
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics", default=None,
+                    help="jsonl per-round metrics sink")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -39,12 +42,10 @@ def main():
             f"--xla_force_host_platform_device_count={args.devices}")
 
     import jax
-    import jax.numpy as jnp
 
-    from repro import checkpoint as ckpt_lib
     from repro.configs.base import ModelConfig
     from repro.data import make_batch_iterator
-    from repro.launch.train import TrainSettings, make_train_step
+    from repro.launch.engine import Trainer, TrainerConfig, TrainSettings
     from repro.models import model as M
     from repro.models.nn import count_params, split_params
     from repro.optim import adamw, linear_warmup_cosine
@@ -73,32 +74,30 @@ def main():
           f"devices={args.devices} aggregator={args.aggregator} "
           f"f={args.f} byz={args.byz}")
 
-    state = opt.init(values)
     settings = TrainSettings(aggregator=args.aggregator, f=args.f,
                              n_byz=args.byz, byz_mode="large_norm")
-    step_fn, ctx = make_train_step(cfg, opt, settings, mesh, args.batch)
-    step_jit = jax.jit(step_fn)
+    trainer = Trainer("replicated", cfg, opt, settings, mesh, args.batch,
+                      TrainerConfig(log_every=args.log_every,
+                                    ckpt_dir=args.ckpt_dir,
+                                    metrics_path=args.metrics))
+    state = trainer.init_state(values)
     it = make_batch_iterator(cfg, args.batch, args.seq, seed=0)
 
     t0 = time.time()
-    losses = []
-    for s in range(args.steps):
-        batch = next(it)
-        values, state, metrics = step_jit(values, state, batch,
-                                          jnp.asarray(s))
-        losses.append(float(metrics["loss"]))
-        if s % args.log_every == 0 or s == args.steps - 1:
-            dt = time.time() - t0
-            tok_s = (s + 1) * args.batch * args.seq / dt
-            print(f"step {s:5d}  loss {losses[-1]:.4f}  "
-                  f"({tok_s:,.0f} tok/s)", flush=True)
-    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f}) "
-          f"in {time.time() - t0:.1f}s")
+    mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+    with mesh_ctx:
+        state, summary = trainer.fit(state, it, args.steps)
+    trainer.close()
+    dt = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"final loss {summary['final_loss']:.4f} "
+          f"(from {summary['first_loss']:.4f}) in {dt:.1f}s "
+          f"({tok_s:,.0f} tok/s)")
     if args.ckpt_dir:
-        ckpt_lib.save(args.ckpt_dir, args.steps,
-                      {"params": values, "opt": state})
         print("checkpoint written to", args.ckpt_dir)
-    assert losses[-1] < losses[0], "loss did not improve"
+    assert summary["final_loss"] < summary["first_loss"], \
+        "loss did not improve"
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-from .ckpt import latest_step, restore, save
+from .ckpt import (TRAIN_STATE_FORMAT, latest_step, restore,
+                   restore_train_state, save, save_train_state)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["TRAIN_STATE_FORMAT", "latest_step", "restore",
+           "restore_train_state", "save", "save_train_state"]

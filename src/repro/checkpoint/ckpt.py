@@ -87,3 +87,92 @@ def restore(directory: str, like, step: Optional[int] = None,
     else:
         tree = jax.tree.map(jax.numpy.asarray, tree)
     return tree, step
+
+
+# ---------------------------------------------------------------------------
+# Complete training snapshots: (values, opt_state, step, extras)
+# ---------------------------------------------------------------------------
+
+TRAIN_STATE_FORMAT = "train-state-v1"
+
+
+def save_train_state(directory: str, step: int, values, opt_state,
+                     extra_state: Optional[Dict] = None,
+                     extra: Optional[Dict] = None) -> str:
+    """Write a complete training snapshot under one step file.
+
+    ``extra_state`` carries strategy extras (e.g. the echo reference
+    basis, ``{"basis": [...]}``); ``extra`` is free-form sidecar-json
+    metadata. Use :func:`restore_train_state` to read it back — a resume
+    restores optimizer moments and the basis, not just the weights.
+    """
+    tree = {"values": values, "opt_state": opt_state}
+    if extra_state:
+        tree["extra"] = extra_state
+    meta = {"format": TRAIN_STATE_FORMAT}
+    meta.update(extra or {})
+    return save(directory, step, tree, extra=meta)
+
+
+def _snapshot_keys(directory: str, step: Optional[int]):
+    """(stored flat keys, resolved step) of one checkpoint file."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        return set(data.files), step
+
+
+def restore_train_state(directory: str, values_like, opt_state_like,
+                        extra_like=None, step: Optional[int] = None,
+                        shardings=None):
+    """Restore a training snapshot -> (values, opt_state, extra_state,
+    step, complete).
+
+    ``complete`` reports whether optimizer state was restored. Two
+    degradation paths keep resumes working across formats/strategies:
+
+    * a pre-v1 checkpoint (a bare values tree, as the old trainer CLI
+      wrote) restores the values only — ``opt_state`` and
+      ``extra_state`` come back as the passed templates (fresh state)
+      and ``complete`` is False so the caller can reset what it must;
+    * a v1 checkpoint whose extras are absent or shaped differently
+      from ``extra_like`` (e.g. a replicated snapshot resumed under
+      echo_dp, or a changed basis size) restores values + opt_state and
+      returns ``extra_like`` untouched.
+
+    ``shardings`` (optional) must match the ``{"values", "opt_state"
+    [, "extra"]}`` tree and is applied on the v1 paths.
+    """
+    stored, step = _snapshot_keys(directory, step)
+    if not any(k == "values" or k.startswith("values/") for k in stored):
+        # pre-v1: the whole file is the values tree
+        values, at = restore(directory, values_like, step=step)
+        return values, opt_state_like, extra_like, at, False
+    base = {"values": values_like, "opt_state": opt_state_like}
+    if extra_like is not None:
+        # Extras restore only on an EXACT key-set match — a subset match
+        # would silently hand back a stale prefix (e.g. the oldest
+        # basis entries after shrinking echo_k).
+        expected = set(_flatten_with_paths({"extra": extra_like}))
+        stored_extra = {k for k in stored if k.startswith("extra/")}
+        if expected == stored_extra:
+            tree, at = restore(directory, dict(base, extra=extra_like),
+                               step=step, shardings=shardings)
+            shapes_ok = all(
+                tuple(a.shape) == tuple(getattr(b, "shape", ()))
+                for a, b in zip(jax.tree.leaves(tree["extra"]),
+                                jax.tree.leaves(extra_like)))
+            if shapes_ok:
+                return (tree["values"], tree["opt_state"], tree["extra"],
+                        at, True)
+            return tree["values"], tree["opt_state"], extra_like, at, True
+    base_shardings = shardings
+    if isinstance(shardings, dict) and "extra" in shardings:
+        base_shardings = {k: v for k, v in shardings.items()
+                          if k != "extra"}
+    tree, at = restore(directory, base, step=step,
+                       shardings=base_shardings)
+    return tree["values"], tree["opt_state"], extra_like, at, True

@@ -98,10 +98,15 @@ def decode_inputs(key, mcfg: ModelConfig, batch: int, pos_value: int
 
 
 def make_batch_iterator(mcfg: ModelConfig, batch: int, seq: int,
-                        seed: int = 0) -> Iterator[Dict[str, jax.Array]]:
-    """Infinite deterministic batch iterator (host-side jitted generator)."""
+                        seed: int = 0, start: int = 0
+                        ) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite deterministic batch iterator (host-side jitted generator).
+
+    ``start`` skips the first batches without generating them, so a
+    resumed run continues the data stream where the checkpoint left it.
+    """
     gen = jax.jit(lambda k: train_inputs(k, mcfg, batch, seq))
-    step = 0
+    step = start
     while True:
         yield gen(jax.random.fold_in(jax.random.PRNGKey(seed), step))
         step += 1

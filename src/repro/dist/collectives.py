@@ -22,6 +22,10 @@ re-derives the same math from collectives over the worker axes:
 filtered *sum* (paper line 44), everything else is mean-scale — the CPU
 test asserts ``AGG_FNS["cgc"]`` matches ``core.aggregators.cgc_sum`` on
 the gathered table to ~1e-5 (reduction order differs, so not bitwise).
+
+The norm hot path (``tree_norm``, feeding every CGC/echo/FSDP
+aggregation here) dispatches through ``kernels.ops.tree_sq_norm`` to the
+fused Pallas streaming pass on TPU (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -99,10 +103,17 @@ def inject_byzantine(grads, wid: jax.Array, n_byz: int, mode: str,
 
 
 def tree_norm(grads) -> jax.Array:
-    """Global L2 norm of a gradient pytree (fp32 accumulation)."""
-    sq = sum(jnp.sum(jnp.square(g.astype(F32)))
-             for g in jax.tree.leaves(grads))
-    return jnp.sqrt(sq)
+    """Global L2 norm of a gradient pytree (fp32 accumulation).
+
+    The sum of squares dispatches through ``kernels.ops.tree_sq_norm``
+    — on TPU that is the fused Pallas streaming pass
+    (``cgc_clip.row_sq_norms``) instead of a per-leaf jnp reduction
+    chain, so every CGC/echo/FSDP norm in this module rides the kernel
+    (backend switch: ``kernels.ops.set_norm_backend`` /
+    ``REPRO_NORM_BACKEND``).
+    """
+    from repro.kernels.ops import tree_sq_norm
+    return jnp.sqrt(tree_sq_norm(grads))
 
 
 def aggregate_pytree_cgc_sum(grads, axes: Sequence[str], f: int):

@@ -20,8 +20,13 @@ worker rebuilds it locally from the shared basis. Per-round collective
 traffic drops from O(d) to O(n*K + n).
 
 When any worker fails the test the round's metrics flag all_echo=False
-and the driver re-runs the standard full-gradient CGC step, then rolls
-the basis with the returned aggregate (``roll_basis``).
+and the driver (``repro.launch.engine.Trainer``) re-runs the standard
+full-gradient CGC step, then rolls the basis with the returned raw
+aggregate (``roll_basis``). Successful echo rounds leave the basis
+unchanged by default — the reconstructed aggregate lies in span(basis)
+and adds no information, mirroring the paper's reference set R, which
+only ever contains overheard RAW gradients (``TrainerConfig.roll_policy``
+flips this to roll every round).
 """
 from __future__ import annotations
 

@@ -11,6 +11,7 @@ so callers can use arbitrary worker counts / dimensions.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,62 @@ F32 = jnp.float32
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Norm backend switch (DESIGN.md §5): the CGC hot path in
+# dist/collectives.py computes gradient-pytree norms through
+# ``tree_sq_norm`` below, which dispatches either to the fused Pallas
+# streaming pass (cgc_clip.row_sq_norms — one kernel over the raveled
+# gradient instead of a per-leaf reduction chain) or to plain jnp.
+# ---------------------------------------------------------------------------
+
+_NORM_BACKENDS = ("auto", "jnp", "pallas")
+_norm_backend = os.environ.get("REPRO_NORM_BACKEND", "auto")
+
+
+def set_norm_backend(name: str) -> None:
+    """Select the sq-norm backend: "auto" | "jnp" | "pallas".
+
+    The choice is read at TRACE time: set it (or ``REPRO_NORM_BACKEND``)
+    before the first jit compile of a train step — already-compiled
+    executables keep the backend they were traced with until
+    ``jax.clear_caches()``.
+    """
+    global _norm_backend
+    if name not in _NORM_BACKENDS:
+        raise ValueError(f"unknown norm backend {name!r}; "
+                         f"known: {_NORM_BACKENDS}")
+    _norm_backend = name
+
+
+def norm_backend() -> str:
+    """The resolved backend: "auto" means pallas on TPU, jnp elsewhere
+    (interpret-mode pallas is correct anywhere but only wins on TPU)."""
+    if _norm_backend == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    return _norm_backend
+
+
+def tree_sq_norm(tree, block_d: int = 2048) -> jax.Array:
+    """fp32 sum of squares over every leaf of ``tree`` (or leaf list).
+
+    The "pallas" backend concatenates the raveled leaves into one (1, d)
+    row and streams it through ``cgc_clip.row_sq_norms`` in
+    (8, block_d) VMEM tiles — the fused pass robust aggregation uses at
+    model scale. Safe inside shard_map (interpret mode off-TPU).
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((), F32)
+    if norm_backend() == "jnp":
+        return sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves)
+    flat = [g.astype(F32).reshape(-1) for g in leaves]
+    v = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+    d = v.shape[0]
+    bd = min(block_d, max(128, d))
+    G = _pad_to(_pad_to(v[None, :], 8, 0), bd, 1)
+    return _cgc.row_sq_norms(G, bd, not _on_tpu())[0]
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:

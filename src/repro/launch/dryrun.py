@@ -18,7 +18,14 @@ For each pair this:
 
 Usage:
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+      --variant echo_dp            # or fsdp / fsdp_savepsum / all
   python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Train-step variants build through the engine strategies
+(repro.launch.engine.STRATEGIES); ``--variant all`` sweeps
+baseline+fsdp+echo_dp so the per-variant collective byte counts land
+side by side in the records.
 """
 import argparse
 import json
@@ -38,8 +45,8 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (abstract_params, batch_for,
                                 check_applicability, decode_specs,
                                 long_context_variant)
-from repro.launch.train import (TrainSettings, make_train_step,
-                                opt_state_shardings)
+from repro.launch.engine import (STRATEGIES, TrainSettings,
+                                 opt_state_shardings)
 from repro.launch.serve import make_prefill, make_serve_step
 from repro.models.nn import Param, split_params
 from repro.optim import adamw
@@ -205,6 +212,8 @@ def dryrun_pair(arch: str, shape_name: str, multi_pod: bool,
             aggregator="cgc", f=1, microbatches=microbatches,
             moe_impl=moe_impl, fsdp=variant.startswith("fsdp"),
             remat="save_psum" if "savepsum" in variant else "full")
+        if variant == "echo_dp":
+            settings = _dc.replace(settings, echo_k=4, echo_r=0.9)
         batch_abs_p = batch_for(cfg, shape)
         batch_abs, _ = split_params(batch_abs_p)
         bshard, _ = split_params(jax.tree.map(
@@ -213,41 +222,30 @@ def dryrun_pair(arch: str, shape_name: str, multi_pod: bool,
             is_leaf=lambda x: isinstance(x, Param)))
         sshard = NamedSharding(mesh, P())
         step_abs = jax.ShapeDtypeStruct((), jnp.int32)
-        if variant.startswith("fsdp"):
-            from repro.launch.train import make_fsdp_train_step
-            step_fn, ctx, (vshard_f, plan) = make_fsdp_train_step(
-                cfg, opt, settings, mesh, shape.global_batch)
-            vshard_plain, _ = split_params(jax.tree.map(
-                lambda p, s: Param(s, p.axes), params_abs, vshard_f,
-                is_leaf=lambda x: isinstance(x, Param)))
-            oshard = opt_state_shardings(opt_abs, params_abs, mesh,
-                                         override=vshard_plain)
-            jitted = jax.jit(step_fn, in_shardings=(vshard_plain, oshard,
-                                                    bshard, sshard))
-            lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs)
-        elif variant == "echo_dp":
-            from repro.launch.train import make_echo_train_step
-            settings = _dc.replace(settings, echo_k=4, echo_r=0.9)
-            step_fn, ctx = make_echo_train_step(cfg, opt, settings, mesh,
-                                                shape.global_batch)
+        strategy = ("fsdp" if variant.startswith("fsdp")
+                    else "echo_dp" if variant == "echo_dp"
+                    else "replicated")
+        bundle = STRATEGIES[strategy]().build(cfg, opt, settings, mesh,
+                                              shape.global_batch)
+        vsh = (bundle.value_shardings
+               if bundle.value_shardings is not None else vshard)
+        oshard = opt_state_shardings(opt_abs, params_abs, mesh,
+                                     override=bundle.value_shardings)
+        if bundle.needs_basis:
             basis_abs = [jax.tree.map(
                 lambda v: jax.ShapeDtypeStruct(v.shape, jnp.float32),
                 values_abs) for _ in range(settings.echo_k)]
             bshard_basis = [jax.tree.map(
                 lambda _: NamedSharding(mesh, P()), values_abs)
                 for _ in range(settings.echo_k)]
-            oshard = opt_state_shardings(opt_abs, params_abs, mesh)
             jitted = jax.jit(
-                step_fn, in_shardings=(vshard, oshard, bshard, sshard,
-                                       bshard_basis))
+                bundle.fn, in_shardings=(vsh, oshard, bshard, sshard,
+                                         bshard_basis))
             lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs,
                                    basis_abs)
         else:
-            step_fn, ctx = make_train_step(cfg, opt, settings, mesh,
-                                           shape.global_batch)
-            oshard = opt_state_shardings(opt_abs, params_abs, mesh)
-            jitted = jax.jit(step_fn,
-                             in_shardings=(vshard, oshard, bshard, sshard))
+            jitted = jax.jit(bundle.fn,
+                             in_shardings=(vsh, oshard, bshard, sshard))
             lowered = jitted.lower(values_abs, opt_abs, batch_abs, step_abs)
     elif shape.kind == "prefill":
         fn, ctx = make_prefill(cfg, mesh, shape.global_batch)
@@ -303,7 +301,9 @@ def main(argv=None):
     ap.add_argument("--moe-impl", default="tp")
     ap.add_argument("--variant", default="baseline",
                     choices=["baseline", "fsdp", "fsdp_savepsum",
-                             "echo_dp"])
+                             "echo_dp", "all"],
+                    help="'all' sweeps baseline+fsdp+echo_dp on train "
+                         "shapes (non-train shapes run baseline only)")
     ap.add_argument("--param-dtype", default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--out", default="experiments/dryrun")
@@ -315,17 +315,22 @@ def main(argv=None):
     shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
         else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    variants = (["baseline", "fsdp", "echo_dp"] if args.variant == "all"
+                else [args.variant])
     for a in archs:
         for s in shapes:
             for mp in meshes:
-                pairs.append((a, s, mp))
+                for v in variants:
+                    if v != "baseline" and INPUT_SHAPES[s].kind != "train":
+                        continue   # step variants only exist for training
+                    pairs.append((a, s, mp, v))
 
     os.makedirs(args.out, exist_ok=True)
     n_ok = n_skip = n_fail = 0
-    for a, s, mp in pairs:
+    for a, s, mp, variant in pairs:
         tag = f"{a}__{s}__{'2x16x16' if mp else '16x16'}"
-        if args.variant != "baseline":
-            tag += f"__{args.variant}"
+        if variant != "baseline":
+            tag += f"__{variant}"
         if args.moe_impl != "tp":
             tag += f"__{args.moe_impl}"
         if args.param_dtype:
@@ -343,7 +348,7 @@ def main(argv=None):
         try:
             rec = dryrun_pair(a, s, mp, moe_impl=args.moe_impl,
                               compile_=not args.no_compile,
-                              variant=args.variant,
+                              variant=variant,
                               param_dtype=args.param_dtype,
                               microbatches=args.microbatches)
         except Exception as e:

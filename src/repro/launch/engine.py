@@ -1,0 +1,763 @@
+"""Strategy-based training engine + the real driver loop (DESIGN.md §6).
+
+``launch/train.py`` used to carry three ~120-line ``make_*_train_step``
+builders whose shard_map plumbing, microbatch accumulation, batch specs
+and metrics handling were copy-pasted. This module factors that stack:
+
+    TrainStrategy       protocol: builds specs + the worker_fn body
+    ReplicatedStrategy  params replicated over the worker axes, AGG_FNS
+                        (CGC / Krum / median / trimmed-mean) aggregation
+    FsdpStrategy        params + opt state sharded over the worker axes,
+                        blockwise-CGC reduce-scatter in the gather VJP
+    EchoDpStrategy      coefficient-space optimistic aggregation (the
+                        paper's echo idea as a DP fast path)
+    Trainer             the driver: echo-DP optimistic rounds with
+                        ``all_echo`` fallback to the exact CGC step,
+                        basis bookkeeping, checkpoint/resume of
+                        (values, opt_state, step, basis), a pluggable
+                        metrics sink (jsonl + stdout), and per-round bit
+                        accounting (``core.types.echo_bits``/``raw_bits``)
+                        so the paper's communication-savings curve falls
+                        out of a training run.
+
+All strategies share ONE shard_map wrapper, ONE microbatch/grad-
+accumulation path, ONE batch-spec helper and ONE metrics contract:
+``step(values, opt_state, batch, step[, basis]) -> (values, opt_state,
+metrics[, aggregate])`` where ``metrics`` always contains ``loss`` plus
+per-strategy diagnostics (``all_echo``, ``cgc_threshold``, ...).
+
+The CLI (``python -m repro.launch.train --strategy {replicated,fsdp,
+echo_dp}``) is a thin shell over :class:`Trainer`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
+                    Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt_lib
+from repro.core.types import echo_bits, raw_bits
+from repro.dist import (AGG_FNS, ShardCtx, inject_byzantine, make_shard_ctx,
+                        tree_shardings)
+from repro.dist.echo_dp import (basis_gram, echo_dp_aggregate, init_basis,
+                                roll_basis)
+from repro.models import model as M
+from repro.optim import Optimizer, clip_by_global_norm
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    aggregator: str = "cgc"        # mean | cgc | trimmed_mean | ...
+    f: int = 0                     # CGC clip count (max Byzantine workers)
+    n_byz: int = 0                 # simulated Byzantine workers (testing)
+    byz_mode: str = "sign_flip"
+    microbatches: int = 1
+    clip_norm: float = 0.0         # 0 = off
+    moe_impl: str = "tp"
+    return_aggregate: bool = False  # emit the aggregated grads (echo basis)
+    echo_k: int = 4                # echo-DP: reference basis size
+    echo_r: float = 0.5            # echo-DP: deviation ratio (Eq. 7)
+    fsdp: bool = False             # shard params+opt over the data axes
+                                   # (blockwise CGC in the gather VJP)
+    remat: str = "full"            # "full" | "save_psum" (§Perf HC2)
+
+
+# ---------------------------------------------------------------------------
+# Shared plumbing: microbatching, batch specs, shard_map wrapper
+# ---------------------------------------------------------------------------
+
+
+def _slice_batch(batch: Dict[str, jax.Array], i, n_micro: int):
+    """The i-th of n_micro slices (mrope_positions has batch at dim 1)."""
+    out = {}
+    for k, x in batch.items():
+        dim = 1 if k == "mrope_positions" else 0
+        mb = x.shape[dim] // n_micro
+        out[k] = jax.lax.dynamic_slice_in_dim(x, i * mb, mb, dim)
+    return out
+
+
+def microbatched_grads(loss_fn, values, batch, n_micro: int):
+    """Gradient accumulation over n_micro slices of the local batch.
+
+    ``loss_fn(values, batch) -> (loss, metrics)``; the metrics zeros are
+    derived with eval_shape, so any metrics pytree works (one contract
+    for LM losses and the scalar cost functions used in tests).
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(values, batch)
+        return loss, metrics, grads
+
+    def body(carry, i):
+        g_acc, l_acc, m_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            values, _slice_batch(batch, i, n_micro))
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+        m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+        return (g_acc, l_acc + loss, m_acc), None
+
+    zeros_g = jax.tree.map(lambda v: jnp.zeros(v.shape, F32), values)
+    m_abs = jax.eval_shape(loss_fn, values, _slice_batch(batch, 0, n_micro))
+    zero_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_abs[1])
+    (g, loss, metrics), _ = jax.lax.scan(
+        body, (zeros_g, jnp.zeros((), F32), zero_m), jnp.arange(n_micro))
+    inv = 1.0 / n_micro
+    return (loss * inv,
+            jax.tree.map(lambda m: m * inv, metrics),
+            jax.tree.map(lambda x: x * inv, g))
+
+
+def batch_partition_spec(name: str, data_axes: Sequence[str]) -> P:
+    """Spec of one batch entry: sharded over the worker axes on dim 0
+    (dim 1 for mrope_positions)."""
+    axes = tuple(data_axes)
+    bspec = axes if len(axes) > 1 else axes[0]
+    return P(None, bspec) if name == "mrope_positions" else P(bspec)
+
+
+def batch_specs(batch: Dict[str, Any], data_axes: Sequence[str]
+                ) -> Dict[str, P]:
+    return {k: batch_partition_spec(k, data_axes) for k in batch}
+
+
+def replicated_specs(tree) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def mirror_opt_specs(vspecs, opt_state) -> Any:
+    """Mirror parameter specs onto mirroring optimizer-state subtrees.
+
+    Optimizer states that stack N param-shaped trees (Adam's mu/nu) get
+    the param specs repeated; anything else is replicated.
+    """
+    leaves, treedef = jax.tree.flatten(opt_state)
+    vleaves = jax.tree.leaves(vspecs)
+    if vleaves and len(leaves) % len(vleaves) == 0:
+        reps = len(leaves) // len(vleaves)
+        return jax.tree.unflatten(treedef, vleaves * reps)
+    return replicated_specs(opt_state)
+
+
+# ---------------------------------------------------------------------------
+# Strategy protocol + shared build skeleton
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A built train step and everything the driver needs to run it."""
+
+    name: str
+    fn: Callable                    # (values, opt_state, batch, step[, basis])
+    ctx: ShardCtx
+    settings: TrainSettings
+    needs_basis: bool = False       # fn takes a trailing basis list
+    returns_aggregate: bool = False  # fn emits the aggregate pytree
+    value_shardings: Any = None     # placement shardings (FSDP) or None
+    plan: Any = None                # FSDP shard plan or None
+
+
+class TrainStrategy(Protocol):
+    """Builds the per-worker step body + its shard_map specs."""
+
+    name: str
+    needs_basis: bool
+
+    def build(self, cfg, opt: Optimizer, settings: TrainSettings, mesh,
+              global_batch: int) -> StepBundle: ...
+
+
+class _StrategyBase:
+    """Template build(): one worker body, one spec path, one wrapper.
+
+    Subclasses override the hooks (validate / prepare / make_loss_fn /
+    aggregate / clip / value_specs / opt_specs); the shard_map wrapping,
+    microbatching, Byzantine injection, loss/metrics pmean, gradient
+    clipping and optimizer update live here exactly once.
+
+    ``loss_fn`` (constructor) overrides the LM loss with any
+    ``(values, batch) -> (loss, metrics)`` callable — the driver tests
+    run the full engine on quadratic costs this way.
+    """
+
+    name = "base"
+    needs_basis = False
+
+    def __init__(self, loss_fn: Optional[Callable] = None):
+        self.loss_override = loss_fn
+
+    # --- hooks -------------------------------------------------------
+
+    def validate(self, settings: TrainSettings, ctx: ShardCtx, mesh):
+        pass
+
+    def prepare(self, cfg, opt, settings, mesh, ctx) -> Dict[str, Any]:
+        return {}
+
+    def make_loss_fn(self, cfg, settings, mesh, ctx, env) -> Callable:
+        raise NotImplementedError
+
+    def aggregate(self, env, grads, settings, data_axes, extra
+                  ) -> Tuple[Any, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def clip(self, env, grads, settings, data_axes):
+        return clip_by_global_norm(grads, settings.clip_norm)
+
+    def value_specs(self, env, values):
+        return replicated_specs(values)
+
+    def opt_specs(self, env, opt_state, vspecs):
+        return replicated_specs(opt_state)
+
+    # --- template ----------------------------------------------------
+
+    def build(self, cfg, opt: Optimizer, settings: TrainSettings, mesh,
+              global_batch: int) -> StepBundle:
+        ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
+        data_axes = ctx.batch_axes
+        self.validate(settings, ctx, mesh)
+        env = self.prepare(cfg, opt, settings, mesh, ctx)
+        loss_fn = self.loss_override or self.make_loss_fn(
+            cfg, settings, mesh, ctx, env)
+        ret_agg = self.needs_basis or settings.return_aggregate
+
+        def worker_fn(values, opt_state, batch, step, *extra):
+            loss, metrics, grads = microbatched_grads(
+                loss_fn, values, batch, settings.microbatches)
+            if settings.n_byz and data_axes:
+                from repro.dist.collectives import worker_index
+                grads = inject_byzantine(grads, worker_index(data_axes),
+                                         settings.n_byz, settings.byz_mode)
+            agg, diags = self.aggregate(env, grads, settings, data_axes,
+                                        extra)
+            if data_axes:
+                loss = jax.lax.pmean(loss, data_axes)
+                metrics = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, data_axes), metrics)
+            if settings.clip_norm:
+                agg, gnorm = self.clip(env, agg, settings, data_axes)
+                diags = dict(diags, grad_global_norm=gnorm)
+            updates, opt_state = opt.update(agg, opt_state, values, step)
+            values = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  values, updates)
+            metrics = dict(metrics, loss=loss, **diags)
+            if ret_agg:
+                return values, opt_state, metrics, agg
+            return values, opt_state, metrics
+
+        if mesh is None or not data_axes:
+            return StepBundle(self.name, worker_fn, ctx, settings,
+                              returns_aggregate=ret_agg)
+
+        def stepped(values, opt_state, batch, step, *extra):
+            vspecs = self.value_specs(env, values)
+            ospecs = self.opt_specs(env, opt_state, vspecs)
+            in_specs = (vspecs, ospecs, batch_specs(batch, data_axes), P(),
+                        *[replicated_specs(b) for b in extra])
+            out_specs = (vspecs, ospecs, P()) + (
+                (replicated_specs(values),) if ret_agg else ())
+            fn = jax.shard_map(worker_fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs,
+                               axis_names=set(data_axes), check_vma=False)
+            return fn(values, opt_state, batch, step, *extra)
+
+        if self.needs_basis:
+            def step_fn(values, opt_state, batch, step, basis):
+                return stepped(values, opt_state, batch, step, *basis)
+        else:
+            step_fn = stepped
+
+        return StepBundle(self.name, step_fn, ctx, settings,
+                          needs_basis=self.needs_basis,
+                          returns_aggregate=ret_agg,
+                          value_shardings=env.get("value_shardings"),
+                          plan=env.get("plan"))
+
+
+class ReplicatedStrategy(_StrategyBase):
+    """Params replicated over the worker axes; AGG_FNS aggregation.
+
+    Exactly the paper's setup: each data shard is one Byzantine-fault-
+    containment unit, aggregation is CGC (or any ``AGG_FNS`` entry) over
+    the worker axes, every worker applies the identical update.
+    """
+
+    name = "replicated"
+
+    def validate(self, settings, ctx, mesh):
+        if settings.aggregator not in AGG_FNS:
+            raise ValueError(f"unknown aggregator {settings.aggregator!r}; "
+                             f"known: {sorted(AGG_FNS)}")
+
+    def prepare(self, cfg, opt, settings, mesh, ctx):
+        data_axes = ctx.batch_axes
+        if settings.moe_impl == "ep" and mesh is not None:
+            # expert parallelism runs a NESTED shard_map over the model
+            # axis (disjoint from the worker's manual data axes): batch
+            # is already local, so batch_axes=() inside.
+            from repro.dist.compat import partial_manual_supported
+            if data_axes and not partial_manual_supported():
+                raise ValueError(
+                    "moe_impl='ep' inside the worker shard_map needs "
+                    "partial-manual shard_map (jax >= 0.6); this jax only "
+                    "supports EP at the pjit level (serve/prefill) — use "
+                    "moe_impl='tp' for training")
+            inner = ShardCtx(mesh=mesh, batch_axes=(), model_axis="model",
+                             moe_impl="ep", remat=settings.remat)
+        else:
+            inner = (ShardCtx(remat=settings.remat)
+                     if settings.remat != "full" else None)
+        return {"inner_ctx": inner}
+
+    def make_loss_fn(self, cfg, settings, mesh, ctx, env):
+        inner = env["inner_ctx"]
+        # inside the worker shard_map the batch is already local -> the
+        # MoE layer dispatches locally (model axis auto) unless EP.
+        return lambda values, batch: M.train_loss(values, cfg, batch,
+                                                  shard_ctx=inner)
+
+    def aggregate(self, env, grads, settings, data_axes, extra):
+        if not data_axes:
+            return grads, {}
+        return AGG_FNS[settings.aggregator](grads, data_axes, settings.f)
+
+
+class FsdpStrategy(_StrategyBase):
+    """FSDP (§Perf HC1): params + opt state sharded over the data axes,
+    per-layer just-in-time gathers, blockwise CGC on the reduce-scatter
+    (dist/fsdp.py). ``value_shardings`` on the bundle carries the
+    NamedShardings the driver must place operands with (params are
+    LOGICALLY global; FSDP is purely a placement + spec concern).
+    """
+
+    name = "fsdp"
+
+    def validate(self, settings, ctx, mesh):
+        if settings.aggregator not in ("cgc", "mean"):
+            raise ValueError(
+                f"FSDP trainer supports aggregator 'cgc' or 'mean' (the "
+                f"reduction happens inside the gather VJP), got "
+                f"{settings.aggregator!r}")
+        if not ctx.batch_axes:
+            raise ValueError("FSDP needs a data-parallel axis")
+        if settings.n_byz:
+            raise ValueError("Byzantine injection is incompatible with FSDP "
+                             "(per-worker grads never materialise whole); "
+                             "use the replicated trainer to exercise attacks")
+        if settings.return_aggregate:
+            raise ValueError("return_aggregate is incompatible with FSDP: "
+                             "planned gradient leaves are shard-local after "
+                             "the reduce-scatter, so no replicated aggregate "
+                             "pytree exists to emit")
+
+    def prepare(self, cfg, opt, settings, mesh, ctx):
+        from repro.dist.fsdp import (fsdp_manual_specs, fsdp_tree_shardings,
+                                     make_gather_fn, plan_fsdp)
+        from repro.launch.specs import abstract_params
+
+        data_axes = ctx.batch_axes
+        params_abs = abstract_params(cfg)
+        plan = plan_fsdp(params_abs, mesh, dp_axes=data_axes)
+        # layers subtree gathers inside the scan; everything else up-front.
+        plan_top = dict(plan)
+        layer_plan = plan_top.pop("layers", None)
+        top_plan_full = dict(plan_top)
+        if layer_plan is not None:
+            top_plan_full["layers"] = jax.tree.map(
+                lambda _: None, layer_plan, is_leaf=lambda x: x is None)
+        use_cgc = settings.aggregator == "cgc"
+        gather_top = make_gather_fn(top_plan_full, data_axes, settings.f,
+                                    use_cgc)
+        layer_gf = (make_gather_fn(layer_plan, data_axes, settings.f,
+                                   use_cgc, strip_layer_dim=True)
+                    if layer_plan is not None else None)
+        inner_ctx = dataclasses.replace(ShardCtx(), layer_gather=layer_gf,
+                                        remat=settings.remat)
+        return {
+            "plan": plan,
+            "use_cgc": use_cgc,
+            "gather_top": gather_top,
+            "inner_ctx": inner_ctx,
+            "vspecs": fsdp_manual_specs(params_abs, plan, data_axes),
+            "value_shardings": fsdp_tree_shardings(params_abs, mesh, plan,
+                                                   dp_axes=data_axes),
+        }
+
+    def make_loss_fn(self, cfg, settings, mesh, ctx, env):
+        gather_top, inner = env["gather_top"], env["inner_ctx"]
+        return lambda values, batch: M.train_loss(gather_top(values), cfg,
+                                                  batch, shard_ctx=inner)
+
+    def aggregate(self, env, grads, settings, data_axes, extra):
+        # fsdp leaves: already blockwise-clipped + reduce-scattered in the
+        # gather VJP; the replicated remainder gets the exact matching psum.
+        from repro.dist.fsdp import aggregate_rest_cgc
+        return aggregate_rest_cgc(grads, env["plan"], data_axes, settings.f,
+                                  use_cgc=env["use_cgc"]), {}
+
+    def clip(self, env, grads, settings, data_axes):
+        # layout-aware: planned leaves are shards, rest is replicated
+        from repro.dist.fsdp import clip_fsdp_global_norm
+        return clip_fsdp_global_norm(grads, env["plan"], data_axes,
+                                     settings.clip_norm)
+
+    def value_specs(self, env, values):
+        return env["vspecs"]
+
+    def opt_specs(self, env, opt_state, vspecs):
+        return mirror_opt_specs(vspecs, opt_state)
+
+
+class EchoDpStrategy(_StrategyBase):
+    """Echo-compressed DP step (dist/echo_dp.py — §Perf HC3).
+
+    ``step(values, opt_state, batch, step, basis) -> (values, opt_state,
+    metrics, aggregate)`` where ``basis`` is a list of echo_k reference
+    pytrees (recent raw-round aggregates, replicated on every worker).
+    ``metrics["all_echo"]`` reports whether the fast path was valid —
+    the :class:`Trainer` re-runs the round with the exact CGC step when
+    it is not, and rolls ``basis`` with that raw aggregate.
+    """
+
+    name = "echo_dp"
+    needs_basis = True
+
+    def validate(self, settings, ctx, mesh):
+        if not ctx.batch_axes:
+            raise ValueError("echo-DP aggregation needs a data-parallel axis")
+
+    def make_loss_fn(self, cfg, settings, mesh, ctx, env):
+        return lambda values, batch: M.train_loss(values, cfg, batch,
+                                                  shard_ctx=None)
+
+    def aggregate(self, env, grads, settings, data_axes, extra):
+        basis = list(extra)
+        gram = basis_gram(basis)
+        agg, all_echo, diags = echo_dp_aggregate(
+            grads, basis, gram, data_axes, settings.f, settings.echo_r)
+        return agg, dict(diags, all_echo=all_echo)
+
+
+STRATEGIES: Dict[str, Callable[..., _StrategyBase]] = {
+    "replicated": ReplicatedStrategy,
+    "fsdp": FsdpStrategy,
+    "echo_dp": EchoDpStrategy,
+}
+
+
+# ---------------------------------------------------------------------------
+# Shardings for the step operands (shared sharding helpers)
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(params_tree, mesh, rules=None):
+    return tree_shardings(params_tree, mesh, rules)
+
+
+def batch_shardings(batch_specs_tree, mesh, rules=None):
+    return tree_shardings(batch_specs_tree, mesh, rules)
+
+
+def opt_state_shardings(opt_state_abs, params_tree, mesh, rules=None,
+                        override=None):
+    """Mirror parameter shardings onto the optimizer state by path suffix.
+
+    ``override``: a plain sharding tree (e.g. FSDP shardings) to mirror
+    instead of the default rule-derived one. The lookup is a dict keyed
+    by the param paths, probed with progressively shorter "/"-suffixes
+    of each opt-state path — O(depth) per leaf instead of the old
+    O(params) scan, and longest-suffix-first instead of insertion order.
+    """
+    from repro.checkpoint.ckpt import _flatten_with_paths, _path_str
+    pshard = override if override is not None else tree_shardings(
+        params_tree, mesh, rules)
+    by_path = _flatten_with_paths(pshard)
+    rep = NamedSharding(mesh, P())
+
+    leaves = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(opt_state_abs)[0]:
+        parts = [_path_str(p) for p in path]
+        sh = rep
+        for i in range(len(parts)):
+            cand = "/".join(parts[i:])
+            if cand in by_path:
+                sh = by_path[cand]
+                break
+        leaves.append(sh)
+    treedef = jax.tree_util.tree_structure(opt_state_abs)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Metrics sink
+# ---------------------------------------------------------------------------
+
+
+class MetricsSink:
+    """Per-round metrics writer: jsonl file (every round) + stdout
+    (every ``log_every`` rounds). ``printer`` is pluggable for tests."""
+
+    def __init__(self, path: Optional[str] = None, log_every: int = 5,
+                 printer: Optional[Callable[[str], None]] = None):
+        self.log_every = max(int(log_every), 1)
+        if path and os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._fh = open(path, "a") if path else None
+        self._print = (lambda s: print(s, flush=True)) \
+            if printer is None else printer
+
+    def emit(self, record: Dict[str, Any]) -> None:
+        if self._fh is not None:
+            self._fh.write(json.dumps(record) + "\n")
+            self._fh.flush()
+        step = record.get("step", 0)
+        if step % self.log_every == 0 or record.get("final"):
+            parts = [f"step {step:5d}", f"loss={record.get('loss', 0.0):.4f}"]
+            if "all_echo" in record:
+                parts.append(f"all_echo={record['all_echo']}")
+            if "bits_cumulative" in record:
+                parts.append(f"bits={record['bits_cumulative']:.3e}")
+            self._print("  ".join(parts))
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# Trainer: the driver loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    log_every: int = 5
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0             # 0: checkpoint only at the end of fit()
+    resume: bool = False
+    metrics_path: Optional[str] = None  # jsonl sink
+    # When the echo basis rolls: "raw" (only after raw/fallback rounds —
+    # the paper's reference set R holds overheard RAW gradients; echo
+    # aggregates lie in span(basis) and add no information) or "always".
+    roll_policy: str = "raw"
+
+
+@dataclasses.dataclass
+class TrainState:
+    """Everything a resume needs: (values, opt_state, step, basis)."""
+
+    values: Any
+    opt_state: Any
+    step: int = 0
+    basis: Optional[List[Any]] = None
+
+
+class Trainer:
+    """Owns the real training loop over a built :class:`StepBundle`.
+
+    For :class:`EchoDpStrategy` each round first runs the optimistic
+    coefficient-space step; when any worker fails the echo test (Eq. 7)
+    the round is re-run with the exact CGC step (``ReplicatedStrategy``
+    with ``return_aggregate=True``) and the basis rolls with the raw
+    aggregate. Per-round bit accounting follows the paper: an echo
+    attempt costs ``n * echo_bits(n, K)``; a raw (fallback) round adds
+    ``n * raw_bits(d)`` on top; the all-raw baseline is
+    ``n * raw_bits(d)`` every round.
+    """
+
+    def __init__(self, strategy, cfg, opt: Optimizer,
+                 settings: TrainSettings, mesh, global_batch: int,
+                 config: TrainerConfig = TrainerConfig(),
+                 loss_fn: Optional[Callable] = None,
+                 printer: Optional[Callable[[str], None]] = None):
+        if isinstance(strategy, str):
+            strategy = STRATEGIES[strategy](loss_fn=loss_fn)
+        self.strategy = strategy
+        self.opt = opt
+        self.settings = settings
+        self.config = config
+        self.mesh = mesh
+        self.bundle = strategy.build(cfg, opt, settings, mesh, global_batch)
+        self.step_fn = jax.jit(self.bundle.fn)
+        self.fallback_fn = None
+        if self.bundle.needs_basis:
+            fb = ReplicatedStrategy(
+                loss_fn=getattr(strategy, "loss_override", None))
+            fb_settings = dataclasses.replace(settings,
+                                              return_aggregate=True)
+            self.fallback_bundle = fb.build(cfg, opt, fb_settings, mesh,
+                                            global_batch)
+            self.fallback_fn = jax.jit(self.fallback_bundle.fn)
+        self.sink = MetricsSink(config.metrics_path, config.log_every,
+                                printer)
+        self.n_workers = self.bundle.ctx.num_workers
+        self._d: Optional[int] = None
+        self.n_rounds = 0
+        self.n_echo = 0
+        self.bits_sent = 0
+        self.bits_baseline = 0
+        self._first_loss: Optional[float] = None
+        self._last_loss: Optional[float] = None
+
+    # --- state management -------------------------------------------
+
+    def init_state(self, values, opt_state=None) -> TrainState:
+        """Fresh state (placed per the strategy's shardings); resumes
+        from ``config.ckpt_dir`` when ``config.resume`` is set and a
+        checkpoint exists."""
+        if self.bundle.value_shardings is not None:
+            values = jax.device_put(values, self.bundle.value_shardings)
+        if opt_state is None:
+            opt_state = self.opt.init(values)
+        basis = (init_basis(values, self.settings.echo_k)
+                 if self.bundle.needs_basis else None)
+        state = TrainState(values, opt_state, 0, basis)
+        cfg = self.config
+        if cfg.resume and cfg.ckpt_dir \
+                and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
+            state = self.restore(state)
+        return state
+
+    def restore(self, like: TrainState, step: Optional[int] = None
+                ) -> TrainState:
+        extra_like = {"basis": like.basis} if like.basis is not None else None
+        values, opt_state, extra, at, complete = ckpt_lib.restore_train_state(
+            self.config.ckpt_dir, like.values, like.opt_state,
+            extra_like=extra_like, step=step)
+        if self.bundle.value_shardings is not None:
+            values = jax.device_put(values, self.bundle.value_shardings)
+            oshard = opt_state_shardings(
+                opt_state, None, self.mesh,
+                override=self.bundle.value_shardings)
+            opt_state = jax.device_put(opt_state, oshard)
+        if not complete:
+            # pre-v1 checkpoint: values only — keep the fresh opt/basis.
+            opt_state = self.opt.init(values)
+        basis = (extra or {}).get("basis", like.basis) \
+            if extra is not None else like.basis
+        return TrainState(values, opt_state, at, basis)
+
+    def save(self, state: TrainState) -> Optional[str]:
+        if not self.config.ckpt_dir:
+            return None
+        extra_state = ({"basis": state.basis}
+                       if state.basis is not None else None)
+        return ckpt_lib.save_train_state(
+            self.config.ckpt_dir, state.step, state.values, state.opt_state,
+            extra_state=extra_state,
+            extra={"strategy": self.bundle.name})
+
+    # --- the loop ----------------------------------------------------
+
+    def _grad_dim(self, values) -> int:
+        if self._d is None:
+            self._d = int(sum(v.size for v in jax.tree.leaves(values)))
+        return self._d
+
+    def run_round(self, state: TrainState, batch
+                  ) -> Tuple[TrainState, Dict[str, Any]]:
+        """One driver round; returns (new_state, metrics record)."""
+        step_arr = jnp.asarray(state.step)
+        n = self.n_workers
+        d = self._grad_dim(state.values)
+        raw_round = n * raw_bits(d)
+        record: Dict[str, Any] = {"step": state.step,
+                                  "strategy": self.bundle.name}
+
+        if self.bundle.needs_basis:
+            K = self.settings.echo_k
+            echo_round = n * int(echo_bits(n, K))
+            v, o, m, agg = self.step_fn(state.values, state.opt_state,
+                                        batch, step_arr, state.basis)
+            all_echo = bool(m["all_echo"])
+            if all_echo:
+                bits = echo_round
+                rolled = self.config.roll_policy == "always"
+                basis = roll_basis(state.basis, agg) if rolled \
+                    else state.basis
+            else:
+                # optimistic round invalid: fall back to the exact CGC
+                # step and roll the basis with the raw aggregate.
+                v, o, m, agg = self.fallback_fn(
+                    state.values, state.opt_state, batch, step_arr)
+                bits = echo_round + raw_round
+                basis = roll_basis(state.basis, agg)
+                rolled = True
+            self.n_echo += int(all_echo)
+            record.update(all_echo=all_echo, basis_rolled=rolled)
+            new_state = TrainState(v, o, state.step + 1, basis)
+        else:
+            out = self.step_fn(state.values, state.opt_state, batch,
+                               step_arr)
+            v, o, m = out[0], out[1], out[2]
+            bits = raw_round
+            new_state = TrainState(v, o, state.step + 1, None)
+
+        self.n_rounds += 1
+        self.bits_sent += bits
+        self.bits_baseline += raw_round
+        loss = float(m["loss"])
+        if self._first_loss is None:
+            self._first_loss = loss
+        self._last_loss = loss
+        record.update(loss=loss, bits=bits,
+                      bits_cumulative=self.bits_sent,
+                      bits_baseline_cumulative=self.bits_baseline)
+        for k in ("echo_frac", "grad_global_norm", "cgc_threshold",
+                  "cgc_clipped_frac"):
+            if k in m:
+                record[k] = float(m[k])
+        self.sink.emit(record)
+        return new_state, record
+
+    def fit(self, state: TrainState, batches: Iterator, steps: int
+            ) -> Tuple[TrainState, Dict[str, Any]]:
+        """Run rounds until ``state.step`` reaches ``steps`` (absolute —
+        a resumed state continues from its checkpointed step)."""
+        cfg = self.config
+        t0 = time.time()
+        while state.step < steps:
+            state, _ = self.run_round(state, next(batches))
+            if cfg.ckpt_dir and cfg.ckpt_every \
+                    and state.step % cfg.ckpt_every == 0 \
+                    and state.step < steps:
+                self.save(state)
+        if cfg.ckpt_dir:
+            self.save(state)
+        summary = self.summary()
+        summary["wall_s"] = round(time.time() - t0, 2)
+        return state, summary
+
+    def close(self) -> None:
+        """Release the metrics sink (call when done with the Trainer —
+        fit() can be called again to continue, so it never closes)."""
+        self.sink.close()
+
+    def summary(self) -> Dict[str, Any]:
+        s: Dict[str, Any] = {
+            "strategy": self.bundle.name,
+            "rounds": self.n_rounds,
+            "workers": self.n_workers,
+            "bits_sent": self.bits_sent,
+            "bits_baseline": self.bits_baseline,
+            "first_loss": self._first_loss,
+            "final_loss": self._last_loss,
+        }
+        if self.bundle.needs_basis and self.n_rounds:
+            s["echo_rounds"] = self.n_echo
+            s["echo_rate"] = self.n_echo / self.n_rounds
+            s["bits_saving"] = 1.0 - self.bits_sent / max(
+                self.bits_baseline, 1)
+        return s

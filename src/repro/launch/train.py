@@ -1,413 +1,88 @@
-"""Distributed trainer: per-worker gradients + Byzantine-tolerant aggregation.
+"""Distributed trainer CLI — a thin shell over ``repro.launch.engine``.
 
-The train step is a shard_map whose MANUAL axes are the data axes (each data
-shard = one Echo-CGC "worker") and whose model axis stays AUTOMATIC (tensor
-parallelism inside each worker is handled by pjit sharding propagation).
-Inside the shard_map each worker:
+The step builders that used to live here (three copies of the same
+shard_map/batch-spec/microbatch plumbing) are now strategies in
+``launch/engine.py``; this module keeps back-compat ``make_*_train_step``
+wrappers and the script entry point:
 
-    local grads (microbatched)  ->  optional Byzantine injection
-    -> CGC aggregation (norm all-gather + clipped psum, DESIGN.md §3.2)
-    -> identical optimizer update on every worker (params stay replicated
-       over the data axes, sharded over model).
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --strategy echo_dp
 
-Run as a script for a real (CPU-scale) training session:
-    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke ...
+runs the real driver loop (engine.Trainer): echo-DP optimistic rounds
+with ``all_echo`` fallback to the exact CGC step, periodic checkpoints of
+(values, opt_state, step, basis) with ``--resume``, a jsonl metrics sink,
+and per-round bit accounting against the all-raw baseline. ``--strategy
+replicated|fsdp`` run through the same Trainer. On CPU-only hosts the
+CLI forces ``--devices`` fake host devices (default 8) before jax
+initialises, so the worker axes exist; pass ``--devices 0`` on real
+accelerators.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+import os
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
-from repro.dist import (AGG_FNS, ShardCtx, inject_byzantine, make_shard_ctx,
-                        tree_shardings, tree_specs)
-from repro.models import model as M
-from repro.models.nn import Param, split_params
-from repro.optim import Optimizer, adamw, clip_by_global_norm, sgd
-
-F32 = jnp.float32
-
-
-@dataclasses.dataclass(frozen=True)
-class TrainSettings:
-    aggregator: str = "cgc"        # mean | cgc | trimmed_mean
-    f: int = 0                     # CGC clip count (max Byzantine workers)
-    n_byz: int = 0                 # simulated Byzantine workers (testing)
-    byz_mode: str = "sign_flip"
-    microbatches: int = 1
-    clip_norm: float = 0.0         # 0 = off
-    moe_impl: str = "tp"
-    return_aggregate: bool = False  # emit the aggregated grads (echo basis)
-    echo_k: int = 4                # echo-DP: reference basis size
-    echo_r: float = 0.5            # echo-DP: deviation ratio (Eq. 7)
-    fsdp: bool = False             # shard params+opt over the data axes
-                                   # (blockwise CGC in the gather VJP)
-    remat: str = "full"            # "full" | "save_psum" (§Perf HC2)
-
-
-def _microbatched_grads(loss_fn, values, batch, n_micro: int):
-    """Gradient accumulation over n_micro slices of the local batch."""
-    if n_micro <= 1:
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(values, batch)
-        return loss, metrics, grads
-
-    def slice_batch(b, i):
-        def cut(x):
-            mb = x.shape[0] // n_micro if x.ndim >= 1 else None
-            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0)
-        # mrope_positions has batch at dim 1
-        out = {}
-        for k_, x in b.items():
-            if k_ == "mrope_positions":
-                mb = x.shape[1] // n_micro
-                out[k_] = jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 1)
-            else:
-                out[k_] = cut(x)
-        return out
-
-    def body(carry, i):
-        g_acc, l_acc, m_acc = carry
-        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
-            values, slice_batch(batch, i))
-        g_acc = jax.tree.map(jnp.add, g_acc, g)
-        m_acc = jax.tree.map(jnp.add, m_acc, metrics)
-        return (g_acc, l_acc + loss, m_acc), None
-
-    zeros_g = jax.tree.map(lambda v: jnp.zeros(v.shape, F32), values)
-    zero_m = {"ce_loss": jnp.zeros((), F32), "moe_aux": jnp.zeros((), F32),
-              "moe_dropped": jnp.zeros((), F32)}
-    (g, loss, metrics), _ = jax.lax.scan(
-        body, (zeros_g, jnp.zeros((), F32), zero_m),
-        jnp.arange(n_micro))
-    inv = 1.0 / n_micro
-    return (loss * inv,
-            jax.tree.map(lambda m: m * inv, metrics),
-            jax.tree.map(lambda x: (x * inv), g))
-
-
-def make_train_step(cfg: ModelConfig, opt: Optimizer,
-                    settings: TrainSettings, mesh, global_batch: int
-                    ) -> Tuple[Callable, ShardCtx]:
-    """Build the jittable (values, opt_state, batch, step) -> ... step."""
-    if settings.aggregator not in AGG_FNS:
-        raise ValueError(f"unknown aggregator {settings.aggregator!r}; "
-                         f"known: {sorted(AGG_FNS)}")
-    ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
-    data_axes = ctx.batch_axes
-
-    if settings.moe_impl == "ep" and mesh is not None:
-        # expert parallelism runs a NESTED shard_map over the model axis
-        # (disjoint from the worker's manual data axes): batch is already
-        # local, so batch_axes=() inside.
-        from repro.dist.compat import partial_manual_supported
-        if data_axes and not partial_manual_supported():
-            raise ValueError(
-                "moe_impl='ep' inside the worker shard_map needs "
-                "partial-manual shard_map (jax >= 0.6); this jax only "
-                "supports EP at the pjit level (serve/prefill) — use "
-                "moe_impl='tp' for training")
-        inner_ctx = ShardCtx(mesh=mesh, batch_axes=(), model_axis="model",
-                             moe_impl="ep", remat=settings.remat)
-    else:
-        inner_ctx = (ShardCtx(remat=settings.remat)
-                     if settings.remat != "full" else None)
-
-    def loss_fn(values, batch):
-        # inside the worker shard_map the batch is already local ->
-        # the MoE layer dispatches locally (model axis auto) unless EP.
-        return M.train_loss(values, cfg, batch, shard_ctx=inner_ctx)
-
-    def worker_fn(values, opt_state, batch, step):
-        loss, metrics, grads = _microbatched_grads(
-            loss_fn, values, batch, settings.microbatches)
-        if settings.n_byz and data_axes:
-            from repro.dist.collectives import worker_index
-            wid = worker_index(data_axes)
-            grads = inject_byzantine(grads, wid, settings.n_byz,
-                                     settings.byz_mode)
-        if data_axes:
-            agg_fn = AGG_FNS[settings.aggregator]
-            grads, diags = agg_fn(grads, data_axes, settings.f)
-            loss = jax.lax.pmean(loss, data_axes)
-            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes),
-                                   metrics)
-        else:
-            diags = {}
-        if settings.clip_norm:
-            grads, gnorm = clip_by_global_norm(grads, settings.clip_norm)
-            diags = dict(diags, grad_global_norm=gnorm)
-        updates, opt_state = opt.update(grads, opt_state, values, step)
-        values = jax.tree.map(lambda p, u: p + u.astype(p.dtype), values,
-                              updates)
-        metrics = dict(metrics, loss=loss, **diags)
-        if settings.return_aggregate:
-            return values, opt_state, metrics, grads
-        return values, opt_state, metrics
-
-    if mesh is None or not data_axes:
-        return jax.jit(worker_fn), ctx
-
-    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
-
-    def batch_spec(name: str):
-        return P(None, bspec) if name == "mrope_positions" else P(bspec)
-
-    def wrapped(values, opt_state, batch, step):
-        in_specs = (
-            jax.tree.map(lambda _: P(), values),
-            jax.tree.map(lambda _: P(), opt_state),
-            {k_: batch_spec(k_) for k_ in batch},
-            P(),
-        )
-        out_specs = (
-            jax.tree.map(lambda _: P(), values),
-            jax.tree.map(lambda _: P(), opt_state),
-            P(),
-        ) + ((jax.tree.map(lambda _: P(), values),)
-             if settings.return_aggregate else ())
-        fn = jax.shard_map(worker_fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, axis_names=set(data_axes),
-                           check_vma=False)
-        return fn(values, opt_state, batch, step)
-
-    return wrapped, ctx
-
-
-def make_fsdp_train_step(cfg: ModelConfig, opt: Optimizer,
-                         settings: TrainSettings, mesh, global_batch: int):
-    """FSDP trainer (§Perf HC1): params + optimizer state sharded over the
-    data axes, per-layer just-in-time gathers, blockwise CGC on the
-    reduce-scatter (dist/fsdp.py).
-
-    Returns (step_fn, ctx, shardings) where ``shardings`` carries the
-    NamedShardings for (values, opt_state) — the driver/dry-run must place
-    operands with these (params are LOGICALLY global; FSDP is purely a
-    placement + shard_map-spec concern).
-    """
-    import dataclasses as _dc
-
-    from repro.dist.fsdp import (aggregate_rest_cgc, clip_fsdp_global_norm,
-                                 fsdp_manual_specs, fsdp_tree_shardings,
-                                 make_gather_fn, plan_fsdp)
-    from repro.launch.specs import abstract_params
-
-    if settings.aggregator not in ("cgc", "mean"):
-        raise ValueError(
-            f"FSDP trainer supports aggregator 'cgc' or 'mean' (the "
-            f"reduction happens inside the gather VJP), got "
-            f"{settings.aggregator!r}")
-    ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
-    data_axes = ctx.batch_axes
-    if not data_axes:
-        raise ValueError("FSDP needs a data-parallel axis")
-    if settings.n_byz:
-        raise ValueError("Byzantine injection is incompatible with FSDP "
-                         "(per-worker grads never materialise whole); use "
-                         "the replicated trainer to exercise attacks")
-
-    params_abs = abstract_params(cfg)
-    plan = plan_fsdp(params_abs, mesh, dp_axes=data_axes)
-    # layers subtree gathers inside the scan; everything else up-front.
-    plan_top = dict(plan)
-    layer_plan = plan_top.pop("layers", None)
-    top_plan_full = dict(plan_top)
-    if layer_plan is not None:
-        top_plan_full["layers"] = jax.tree.map(lambda _: None, layer_plan,
-                                               is_leaf=lambda x: x is None)
-
-    use_cgc = settings.aggregator == "cgc"
-    gather_top = make_gather_fn(top_plan_full, data_axes, settings.f,
-                                use_cgc)
-    layer_gf = (make_gather_fn(layer_plan, data_axes, settings.f, use_cgc,
-                               strip_layer_dim=True)
-                if layer_plan is not None else None)
-    inner_ctx = _dc.replace(ShardCtx(), layer_gather=layer_gf,
-                            remat=settings.remat)
-
-    def loss_fn(values, batch):
-        vg = gather_top(values)
-        return M.train_loss(vg, cfg, batch, shard_ctx=inner_ctx)
-
-    def worker_fn(values, opt_state, batch, step):
-        loss, metrics, grads = _microbatched_grads(
-            loss_fn, values, batch, settings.microbatches)
-        # fsdp leaves: already blockwise-clipped + reduce-scattered in the
-        # gather VJP; the replicated remainder gets the exact matching psum.
-        grads = aggregate_rest_cgc(grads, plan, data_axes, settings.f,
-                                   use_cgc=use_cgc)
-        loss = jax.lax.pmean(loss, data_axes)
-        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes),
-                               metrics)
-        if settings.clip_norm:
-            # layout-aware: planned leaves are shards, rest is replicated
-            grads, gnorm = clip_fsdp_global_norm(grads, plan, data_axes,
-                                                 settings.clip_norm)
-            metrics = dict(metrics, grad_global_norm=gnorm)
-        updates, opt_state = opt.update(grads, opt_state, values, step)
-        values = jax.tree.map(lambda p, u: p + u.astype(p.dtype), values,
-                              updates)
-        return values, opt_state, dict(metrics, loss=loss)
-
-    vspecs = fsdp_manual_specs(params_abs, plan, data_axes)
-    vspecs_plain, _ = split_params(jax.tree.map(
-        lambda p, s: Param(s, p.axes), params_abs, vspecs,
-        is_leaf=lambda x: isinstance(x, Param)))
-    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
-
-    def batch_spec(name: str):
-        return P(None, bspec) if name == "mrope_positions" else P(bspec)
-
-    def ospec_like(opt_state):
-        # mirror param specs onto mirroring optimizer-state subtrees
-        leaves, treedef = jax.tree.flatten(opt_state)
-        vleaves = jax.tree.leaves(vspecs_plain)
-        if len(leaves) % max(len(vleaves), 1) == 0 and vleaves:
-            reps = len(leaves) // len(vleaves)
-            return jax.tree.unflatten(treedef, vleaves * reps)
-        return jax.tree.map(lambda _: P(), opt_state)
-
-    def wrapped(values, opt_state, batch, step):
-        in_specs = (vspecs_plain, ospec_like(opt_state),
-                    {k_: batch_spec(k_) for k_ in batch}, P())
-        out_specs = (vspecs_plain, ospec_like(opt_state), P())
-        fn = jax.shard_map(worker_fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, axis_names=set(data_axes),
-                           check_vma=False)
-        return fn(values, opt_state, batch, step)
-
-    vshard = fsdp_tree_shardings(params_abs, mesh, plan, dp_axes=data_axes)
-    return wrapped, ctx, (vshard, plan)
-
-
-def make_echo_train_step(cfg: ModelConfig, opt: Optimizer,
-                         settings: TrainSettings, mesh, global_batch: int
-                         ) -> Tuple[Callable, ShardCtx]:
-    """Echo-compressed DP train step (dist/echo_dp.py — §Perf HC3).
-
-    step(values, opt_state, batch, step, basis) ->
-        (values, opt_state, metrics, aggregate)
-    where ``basis`` is a list of echo_k reference pytrees (the previous
-    aggregates, replicated on every worker) and metrics["all_echo"] reports
-    whether the fast path was valid — the driver re-runs the round with the
-    standard CGC step when it is not, and rolls ``basis`` with the returned
-    aggregate (repro.dist.echo_dp.roll_basis).
-    """
-    from repro.dist.echo_dp import basis_gram, echo_dp_aggregate
-
-    ctx = make_shard_ctx(mesh, global_batch, settings.moe_impl)
-    data_axes = ctx.batch_axes
-    if not data_axes:
-        raise ValueError("echo-DP aggregation needs a data-parallel axis")
-
-    def loss_fn(values, batch):
-        return M.train_loss(values, cfg, batch, shard_ctx=None)
-
-    def worker_fn(values, opt_state, batch, step, *basis):
-        basis = list(basis)
-        loss, metrics, grads = _microbatched_grads(
-            loss_fn, values, batch, settings.microbatches)
-        if settings.n_byz:
-            from repro.dist.collectives import worker_index
-            wid = worker_index(data_axes)
-            grads = inject_byzantine(grads, wid, settings.n_byz,
-                                     settings.byz_mode)
-        gram = basis_gram(basis)
-        agg, all_echo, diags = echo_dp_aggregate(
-            grads, basis, gram, data_axes, settings.f, settings.echo_r)
-        loss = jax.lax.pmean(loss, data_axes)
-        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes),
-                               metrics)
-        if settings.clip_norm:
-            agg, gnorm = clip_by_global_norm(agg, settings.clip_norm)
-            diags = dict(diags, grad_global_norm=gnorm)
-        updates, opt_state = opt.update(agg, opt_state, values, step)
-        values = jax.tree.map(lambda p, u: p + u.astype(p.dtype), values,
-                              updates)
-        metrics = dict(metrics, loss=loss, all_echo=all_echo, **diags)
-        return values, opt_state, metrics, agg
-
-    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
-
-    def batch_spec(name: str):
-        return P(None, bspec) if name == "mrope_positions" else P(bspec)
-
-    def wrapped(values, opt_state, batch, step, basis):
-        rep = lambda t: jax.tree.map(lambda _: P(), t)
-        in_specs = (rep(values), rep(opt_state),
-                    {k_: batch_spec(k_) for k_ in batch}, P(),
-                    *[rep(b) for b in basis])
-        out_specs = (rep(values), rep(opt_state), P(), rep(values))
-        fn = jax.shard_map(worker_fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, axis_names=set(data_axes),
-                           check_vma=False)
-        return fn(values, opt_state, batch, step, *basis)
-
-    return wrapped, ctx
+from repro.launch.engine import (EchoDpStrategy, FsdpStrategy,  # noqa: F401
+                                 MetricsSink, ReplicatedStrategy, StepBundle,
+                                 STRATEGIES, Trainer, TrainerConfig,
+                                 TrainSettings, TrainState, batch_shardings,
+                                 opt_state_shardings, param_shardings)
 
 
 # ---------------------------------------------------------------------------
-# Shardings for the step operands
+# Back-compat step builders (thin shims over the engine strategies)
 # ---------------------------------------------------------------------------
 
 
-def param_shardings(params_tree, mesh, rules=None):
-    return tree_shardings(params_tree, mesh, rules)
+def make_train_step(cfg, opt, settings: TrainSettings, mesh,
+                    global_batch: int):
+    """Replicated CGC train step: (step_fn, ctx). See ReplicatedStrategy."""
+    b = ReplicatedStrategy().build(cfg, opt, settings, mesh, global_batch)
+    if mesh is None or not b.ctx.batch_axes:
+        return jax.jit(b.fn), b.ctx
+    return b.fn, b.ctx
 
 
-def opt_state_shardings(opt_state_abs, params_tree, mesh, rules=None,
-                        override=None):
-    """Mirror parameter shardings onto the optimizer state by path suffix.
-
-    ``override``: a plain sharding tree (e.g. FSDP shardings) to mirror
-    instead of the default rule-derived one.
-    """
-    from repro.checkpoint.ckpt import _flatten_with_paths
-    pshard = override if override is not None else tree_shardings(
-        params_tree, mesh, rules)
-    flat_p = _flatten_with_paths(pshard)
-
-    def lookup(path_key: str, leaf):
-        for k_, sh in flat_p.items():
-            if path_key.endswith(k_):
-                return sh
-        return NamedSharding(mesh, P())
-
-    flat_paths = jax.tree_util.tree_flatten_with_path(opt_state_abs)[0]
-    leaves = []
-    for path, leaf in flat_paths:
-        from repro.checkpoint.ckpt import _path_str
-        key = "/".join(_path_str(p) for p in path)
-        leaves.append(lookup(key, leaf))
-    treedef = jax.tree_util.tree_structure(opt_state_abs)
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+def make_fsdp_train_step(cfg, opt, settings: TrainSettings, mesh,
+                         global_batch: int):
+    """FSDP train step: (step_fn, ctx, (value_shardings, plan)).
+    See FsdpStrategy."""
+    b = FsdpStrategy().build(cfg, opt, settings, mesh, global_batch)
+    return b.fn, b.ctx, (b.value_shardings, b.plan)
 
 
-def batch_shardings(batch_specs, mesh, rules=None):
-    return tree_shardings(batch_specs, mesh, rules)
+def make_echo_train_step(cfg, opt, settings: TrainSettings, mesh,
+                         global_batch: int):
+    """Echo-compressed DP train step: (step_fn, ctx). See EchoDpStrategy."""
+    b = EchoDpStrategy().build(cfg, opt, settings, mesh, global_batch)
+    return b.fn, b.ctx
 
 
 # ---------------------------------------------------------------------------
-# Script entry: small real training run on host devices
+# Script entry: real driver loop on (possibly forced) host devices
 # ---------------------------------------------------------------------------
+
+
+def _force_host_devices(n: int) -> None:
+    """Force n fake host devices — must run before jax backend init."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def main(argv=None):
     import argparse
+    import contextlib
 
-    from repro.configs import get_config, reduced
-    from repro.data import make_batch_iterator
-    from repro import checkpoint as ckpt_lib
-
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--strategy", default="replicated",
+                    choices=sorted(STRATEGIES))
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -415,54 +90,100 @@ def main(argv=None):
     ap.add_argument("--aggregator", default="cgc")
     ap.add_argument("--f", type=int, default=0)
     ap.add_argument("--n-byz", type=int, default=0)
+    ap.add_argument("--byz-mode", default="sign_flip")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--clip-norm", type=float, default=0.0)
+    ap.add_argument("--echo-k", type=int, default=4)
+    ap.add_argument("--echo-r", type=float, default=0.9)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="force this many fake host devices (0: use the "
+                         "real devices — pass 0 on accelerators)")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--metrics", default=None,
+                    help="jsonl metrics sink path")
+    ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
+
+    if args.devices:
+        _force_host_devices(args.devices)
+
+    from repro.configs import get_config, reduced
+    from repro.data import make_batch_iterator
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.models.nn import split_params
+    from repro.optim import adamw
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    settings = TrainSettings(aggregator=args.aggregator, f=args.f,
-                             n_byz=args.n_byz)
+    settings = TrainSettings(
+        aggregator=args.aggregator, f=args.f, n_byz=args.n_byz,
+        byz_mode=args.byz_mode, microbatches=args.microbatches,
+        clip_norm=args.clip_norm, echo_k=args.echo_k, echo_r=args.echo_r,
+        fsdp=args.strategy == "fsdp")
     opt = adamw(args.lr)
 
-    # Use every host device as a data-parallel worker when possible; the
+    # Every host device is a data-parallel worker when possible; the
     # robust-aggregation flags are no-ops without a worker axis.
-    from repro.launch.mesh import make_host_mesh
     n_dev = len(jax.devices())
     mesh = (make_host_mesh() if n_dev > 1 and args.batch % n_dev == 0
             else None)
+    if mesh is None and args.strategy in ("fsdp", "echo_dp"):
+        raise SystemExit(
+            f"--strategy {args.strategy} needs >1 data-parallel workers: "
+            f"use --devices N (and a --batch divisible by N), or "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
     if args.n_byz and mesh is None:
         raise SystemExit(
-            "--n-byz needs >1 data-parallel workers: run with "
-            "XLA_FLAGS=--xla_force_host_platform_device_count=N and a "
-            "--batch divisible by N")
+            "--n-byz needs >1 data-parallel workers: run with --devices N "
+            "and a --batch divisible by N")
     if mesh is None and (args.f or args.aggregator != "mean"):
         print("warning: single worker — no aggregation runs, so "
-              "--aggregator/--f are inactive (force multiple host devices "
-              "via XLA_FLAGS to exercise them)")
+              "--aggregator/--f are inactive (use --devices N to "
+              "exercise them)")
+
+    trainer = Trainer(args.strategy, cfg, opt, settings, mesh, args.batch,
+                      TrainerConfig(log_every=args.log_every,
+                                    ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=args.ckpt_every,
+                                    resume=args.resume,
+                                    metrics_path=args.metrics))
+    print(f"strategy={args.strategy} workers={trainer.n_workers} "
+          f"aggregator={args.aggregator} f={args.f}")
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     values, _ = split_params(params)
-    opt_state = opt.init(values)
-    step_fn, ctx = make_train_step(cfg, opt, settings, mesh=mesh,
-                                   global_batch=args.batch)
-    if mesh is not None:
-        step_fn = jax.jit(step_fn)
+    state = trainer.init_state(values)
+    if state.step:
+        print(f"resumed from step {state.step}")
 
-    it = make_batch_iterator(cfg, args.batch, args.seq)
-    import contextlib
+    # start=state.step: a resumed run continues the data stream instead
+    # of re-consuming the batches the checkpointed run already saw.
+    it = make_batch_iterator(cfg, args.batch, args.seq, start=state.step)
     mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
         else contextlib.nullcontext()
     with mesh_ctx:
-        for step in range(args.steps):
-            batch = next(it)
-            values, opt_state, metrics = step_fn(values, opt_state, batch,
-                                                 jnp.asarray(step))
-            if step % 5 == 0 or step == args.steps - 1:
-                print(f"step {step:4d} loss={float(metrics['loss']):.4f}")
+        state, summary = trainer.fit(state, it, args.steps)
+    trainer.close()
+
+    if not summary["rounds"]:
+        print(f"nothing to do: resumed at step {state.step} >= "
+              f"--steps {args.steps}")
+        return summary
+    print(f"final loss {summary['final_loss']:.4f} "
+          f"(from {summary['first_loss']:.4f}) in {summary['wall_s']}s")
+    if "echo_rate" in summary:
+        print(f"echo rounds {summary['echo_rounds']}/{summary['rounds']} "
+              f"({100.0 * summary['echo_rate']:.1f}%); cumulative bits "
+              f"{summary['bits_sent']:.3e} vs all-raw baseline "
+              f"{summary['bits_baseline']:.3e} "
+              f"({100.0 * summary['bits_saving']:.1f}% saved)")
     if args.ckpt_dir:
-        ckpt_lib.save(args.ckpt_dir, args.steps, values)
         print("checkpoint saved to", args.ckpt_dir)
+    return summary
 
 
 if __name__ == "__main__":

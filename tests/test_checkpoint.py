@@ -49,6 +49,67 @@ def test_missing_dir_raises(tmp_path):
         ck.restore(str(tmp_path / "nope"), _tree())
 
 
+def test_train_state_roundtrip(tmp_path):
+    """save_train_state restores (values, opt_state, extras, step)."""
+    from repro.optim import adamw
+    opt = adamw(0.1)
+    values = _tree(1)
+    state = opt.init(values)
+    basis = [jax.tree.map(lambda v: jnp.zeros_like(v, jnp.float32), values)
+             for _ in range(3)]
+    ck.save_train_state(str(tmp_path), 11, values, state,
+                        extra_state={"basis": basis},
+                        extra={"strategy": "echo_dp"})
+    v2, s2, extra, step, complete = ck.restore_train_state(
+        str(tmp_path), values, state, extra_like={"basis": basis})
+    assert complete and step == 11
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), values, v2)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), state, s2)
+    assert len(extra["basis"]) == 3
+
+
+def test_train_state_basis_size_change_falls_back(tmp_path):
+    """Resuming with a different echo_k must not hand back a stale
+    prefix of the stored basis — extras restore only on an exact
+    key-set match; otherwise the passed templates come back fresh."""
+    from repro.optim import adamw
+    opt = adamw(0.1)
+    values = _tree(3)
+    state = opt.init(values)
+    basis4 = [jax.tree.map(lambda v, i=i: jnp.full(v.shape, float(i),
+                                                   jnp.float32), values)
+              for i in range(4)]
+    ck.save_train_state(str(tmp_path), 2, values, state,
+                        extra_state={"basis": basis4})
+    for k in (3, 6):        # shrink and grow
+        like = [jax.tree.map(lambda v: jnp.zeros(v.shape, jnp.float32),
+                             values) for _ in range(k)]
+        _, _, extra, step, complete = ck.restore_train_state(
+            str(tmp_path), values, state, extra_like={"basis": like})
+        assert complete and step == 2
+        assert len(extra["basis"]) == k
+        assert all(float(jnp.sum(jnp.abs(leaf))) == 0.0
+                   for leaf in jax.tree.leaves(extra["basis"]))
+
+
+def test_train_state_legacy_values_only(tmp_path):
+    """A pre-v1 checkpoint (bare values tree) restores values only and
+    reports complete=False so the caller re-inits optimizer state."""
+    from repro.optim import adamw
+    opt = adamw(0.1)
+    values = _tree(2)
+    ck.save(str(tmp_path), 5, values)            # the old CLI format
+    fresh = opt.init(values)
+    v2, s2, extra, step, complete = ck.restore_train_state(
+        str(tmp_path), values, fresh)
+    assert not complete and step == 5 and extra is None
+    assert s2 is fresh
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), values, v2)
+
+
 def test_training_resume_equivalence(tmp_path):
     """Save at step k, restore, continue — identical to uninterrupted run."""
     from repro.optim import adamw

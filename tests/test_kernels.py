@@ -49,6 +49,35 @@ def test_echo_project_sweep(n, k, d, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_tree_sq_norm_backend_dispatch():
+    """The CGC norm path's backend switch: the fused Pallas pass
+    (interpret mode here) matches the plain jnp reduction on a
+    mixed-shape/dtype gradient pytree."""
+    tree = {
+        "a": jax.random.normal(KEY, (37, 19)),
+        "b": jax.random.normal(jax.random.fold_in(KEY, 1), (301,)),
+        "c": jax.random.normal(jax.random.fold_in(KEY, 2), (5,)
+                               ).astype(jnp.bfloat16),
+        "d": jnp.asarray(2.5),
+    }
+    assert ops.norm_backend() in ("jnp", "pallas")
+    try:
+        ops.set_norm_backend("jnp")
+        want = float(ops.tree_sq_norm(tree))
+        ops.set_norm_backend("pallas")
+        got = float(ops.tree_sq_norm(tree))
+    finally:
+        ops.set_norm_backend("auto")
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+    assert float(ops.tree_sq_norm({})) == 0.0
+    with pytest.raises(ValueError):
+        ops.set_norm_backend("nope")
+    # dist.collectives.tree_norm rides the same dispatch
+    from repro.dist.collectives import tree_norm
+    np.testing.assert_allclose(float(tree_norm(tree)), np.sqrt(want),
+                               rtol=1e-5)
+
+
 def test_echo_project_gram_matches_ref():
     A = jax.random.normal(KEY, (8, 1024))
     g = jax.random.normal(jax.random.fold_in(KEY, 1), (1024,))
