@@ -1,70 +1,70 @@
-"""Serving example: batched greedy decode with a KV cache.
+"""Serving example: continuous batching over the paged KV cache.
 
     PYTHONPATH=src python examples/serve_decode.py --arch qwen3-0.6b \
-        --batch 4 --prompt-len 32 --gen 64
+        --requests 8 --max-batch 4 --prompt-len 32 --gen 64
 
-Builds the reduced variant of any assigned architecture, "prefills" by
-running the decode step over the prompt tokens (cache warm-up), then
-generates with the jitted serve_step — the same code path the decode_32k /
-long_500k dry-runs lower at production shape.
+Builds the reduced variant of an architecture, submits a batch of
+synthetic requests with mixed prompt/generation lengths to
+``repro.serve.ServeEngine`` — FCFS admission with token-budget packing,
+prefill/decode interleaving, preempt-longest on block-pool OOM — and
+streams the per-request results: the same continuous-batching code path
+the decode_32k / long_500k dry-runs lower at production shape.
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced
-from repro.launch.serve import greedy_decode, make_serve_step
 from repro.models import model as M
-from repro.models.nn import split_params
+from repro.serve import ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step "
                          f"(DESIGN.md §4)")
-    B = args.batch
-    max_len = args.prompt_len + args.gen
 
-    values, _ = split_params(M.init_params(cfg, jax.random.PRNGKey(0)))
-    cache, _ = split_params(M.init_cache(cfg, B, max_len))
-    serve_step, _ = make_serve_step(cfg, None, B)
-    step_jit = jax.jit(serve_step)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    blocks_needed = -(-(args.prompt_len + args.gen) // args.page_size)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=args.max_batch, page_size=args.page_size,
+        num_pages=args.num_pages, max_blocks_per_seq=blocks_needed,
+        token_budget=4 * args.prompt_len, log_every=10))
 
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (B, args.prompt_len), 0, cfg.vocab_size,
-                                jnp.int32)
-    # prefill by stepping the cache over the prompt
-    t0 = time.time()
-    for t in range(args.prompt_len):
-        logits, cache = step_jit(values, cache, prompt[:, t:t + 1],
-                                 jnp.full((B,), t, jnp.int32))
-    jax.block_until_ready(logits)
-    t_pref = time.time() - t0
+    rng = np.random.default_rng(args.seed)
+    handles = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
+        gen = int(rng.integers(max(args.gen // 4, 1), args.gen + 1))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+        handles.append(engine.submit(prompt, max_new=gen))
 
-    first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    decode = jax.jit(lambda v, c, tok, pos: greedy_decode(
-        cfg, v, c, tok, pos, args.gen, serve_step))
-    t0 = time.time()
-    toks, cache = decode(values, cache, first,
-                         jnp.full((B,), args.prompt_len, jnp.int32))
-    jax.block_until_ready(toks)
-    t_gen = time.time() - t0
+    engine.drain()
+    summary = engine.summary()
+    engine.close()
 
-    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"prefill: {t_pref:.2f}s   generate: {t_gen:.2f}s "
-          f"({B * args.gen / t_gen:.1f} tok/s)")
-    print("sample token ids:", toks[0, :16].tolist())
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"lanes={args.max_batch} pages={args.num_pages}x{args.page_size}")
+    print(f"generated {summary['tokens_generated']} tokens in "
+          f"{summary['wall_s']}s ({summary['tokens_per_s']} tok/s); "
+          f"latency p50={summary['latency_p50_s']}s "
+          f"p99={summary['latency_p99_s']}s")
+    h = handles[0]
+    print(f"request 0: prompt={len(h.prompt)} generated={len(h.tokens)} "
+          f"sample token ids: {h.tokens[:16]}")
 
 
 if __name__ == "__main__":

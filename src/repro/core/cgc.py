@@ -34,9 +34,18 @@ def cgc_scales(norms: jax.Array, f: int, eps: float = 1e-12) -> jax.Array:
 
 
 def cgc_filter(G: jax.Array, f: int) -> jax.Array:
-    """Apply the CGC filter to an (n, d) stack of gradients -> (n, d)."""
+    """Apply the CGC filter to an (n, d) stack of gradients -> (n, d).
+
+    The row-scaling pass dispatches through ``kernels.ops.scale_rows``
+    (the Pallas ``cgc_clip.scale_rows`` streaming pass on TPU, plain jnp
+    elsewhere; ``REPRO_SCALE_BACKEND`` override) — the server-side hot
+    path of ``core.protocol.aggregate`` at model scale.
+    """
+    from repro.kernels import ops
     norms = jnp.linalg.norm(G, axis=-1)
-    return G * cgc_scales(norms, f)[:, None]
+    scales = cgc_scales(norms, f)
+    out = ops.scale_rows(G, scales)
+    return out.astype(jnp.result_type(G.dtype, scales.dtype))
 
 
 def cgc_aggregate(G: jax.Array, f: int) -> jax.Array:

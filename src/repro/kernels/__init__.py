@@ -2,7 +2,8 @@
 
   cgc_clip.py         — fused norm+clip over (n, d) gradients (server agg)
   echo_project.py     — single-pass Gram reduction for the echo projection
-  decode_attention.py — flash-decode GQA over long KV caches (serving)
+  decode_attention.py — flash-decode GQA over long KV caches, contiguous
+                        and paged (scalar-prefetch block-table gather)
 
 ``ops`` holds the jitted public wrappers (interpret-mode on CPU); ``ref``
 holds the pure-jnp oracles every kernel is tested against.

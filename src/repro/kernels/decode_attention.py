@@ -64,6 +64,98 @@ def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
         out_ref[0] = out.reshape(H, hd).astype(out_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, out_ref,
+                         acc_ref, m_ref, l_ref, *, n_groups: int,
+                         page_size: int):
+    """Grid (B, NB). Online softmax over the pages of one sequence.
+
+    ``bt_ref``/``len_ref`` are scalar-prefetch refs: the block table is
+    consumed by the k/v index maps (each grid step DMAs the page
+    ``bt[b, i]`` straight from HBM — the (B, NB*ps, K, hd) gather never
+    materialises) and the lengths drive the validity mask here.
+    """
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(i * page_size < length)
+    def _compute():
+        q = q_ref[0].astype(F32)                     # (H, hd)
+        k = k_ref[0].astype(F32)                     # (ps, K, hd)
+        v = v_ref[0].astype(F32)
+        H, hd = q.shape
+        ps, K, _ = k.shape
+        G = n_groups
+        # (1, 1, ps) slot positions — broadcasted_iota, TPU needs >= 2D
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+        valid = i * page_size + pos < length
+
+        qg = q.reshape(K, G, hd)
+        s = jnp.einsum("kgh,tkh->kgt", qg, k,
+                       preferred_element_type=F32) * hd ** -0.5
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (K, G)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[..., None])            # (K, G, ps)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("kgt,tkh->kgh", p, v,
+                        preferred_element_type=F32)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_cur
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _done():
+        H, hd = q_ref[0].shape
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out_ref[0] = out.reshape(H, hd).astype(out_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,H,hd), k/v pages (P,ps,K,hd), block_table (B,NB) int32 page
+    ids, lengths (B,) -> (B,H,hd). ref.paged_decode_attention_ref is the
+    oracle; sequences with length 0 return zeros."""
+    B, H, hd = q.shape
+    P, ps, K, _ = k_pages.shape
+    NB = block_table.shape[1]
+    G = H // K
+    kern = functools.partial(_paged_decode_kernel, n_groups=G, page_size=ps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # block_table, lengths
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, i, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, ps, K, hd),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, ps, K, hd),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, bt, ln: (b, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((K, G, hd), F32),
+                        pltpu.VMEM((K, G), F32),
+                        pltpu.VMEM((K, G), F32)],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)
+    return jnp.where((lengths > 0)[:, None, None], out, jnp.zeros_like(out))
+
+
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      mask: jax.Array, block_t: int = DEFAULT_BLOCK_T,
                      interpret: bool = False) -> jax.Array:

@@ -35,31 +35,65 @@ def _on_tpu() -> bool:
 # gradient instead of a per-leaf reduction chain) or to plain jnp.
 # ---------------------------------------------------------------------------
 
-_NORM_BACKENDS = ("auto", "jnp", "pallas")
-_norm_backend = os.environ.get("REPRO_NORM_BACKEND", "auto")
+_BACKEND_CHOICES = ("auto", "jnp", "pallas")
+
+
+class _BackendSwitch:
+    """One named trace-time backend toggle (REPRO_<NAME>_BACKEND env /
+    setter): "auto" resolves to pallas on TPU and jnp elsewhere
+    (interpret-mode pallas is correct anywhere but only wins on TPU).
+
+    The choice is read at TRACE time: set it before the first jit compile
+    of the consuming step — already-compiled executables keep the backend
+    they were traced with until ``jax.clear_caches()``.
+    """
+
+    def __init__(self, env: str):
+        self.env = env
+        self.value = os.environ.get(env, "auto")
+
+    def set(self, name: str) -> None:
+        if name not in _BACKEND_CHOICES:
+            raise ValueError(f"unknown {self.env} backend {name!r}; "
+                             f"known: {_BACKEND_CHOICES}")
+        self.value = name
+
+    def resolve(self) -> str:
+        if self.value == "auto":
+            return "pallas" if _on_tpu() else "jnp"
+        return self.value
+
+
+_norm_switch = _BackendSwitch("REPRO_NORM_BACKEND")
+_scale_switch = _BackendSwitch("REPRO_SCALE_BACKEND")
+_paged_attn_switch = _BackendSwitch("REPRO_PAGED_ATTN_BACKEND")
 
 
 def set_norm_backend(name: str) -> None:
-    """Select the sq-norm backend: "auto" | "jnp" | "pallas".
-
-    The choice is read at TRACE time: set it (or ``REPRO_NORM_BACKEND``)
-    before the first jit compile of a train step — already-compiled
-    executables keep the backend they were traced with until
-    ``jax.clear_caches()``.
-    """
-    global _norm_backend
-    if name not in _NORM_BACKENDS:
-        raise ValueError(f"unknown norm backend {name!r}; "
-                         f"known: {_NORM_BACKENDS}")
-    _norm_backend = name
+    """Select the sq-norm backend: "auto" | "jnp" | "pallas"."""
+    _norm_switch.set(name)
 
 
 def norm_backend() -> str:
-    """The resolved backend: "auto" means pallas on TPU, jnp elsewhere
-    (interpret-mode pallas is correct anywhere but only wins on TPU)."""
-    if _norm_backend == "auto":
-        return "pallas" if _on_tpu() else "jnp"
-    return _norm_backend
+    return _norm_switch.resolve()
+
+
+def set_scale_backend(name: str) -> None:
+    """Select the row-scaling backend (server-side CGC filter pass 2)."""
+    _scale_switch.set(name)
+
+
+def scale_backend() -> str:
+    return _scale_switch.resolve()
+
+
+def set_paged_attn_backend(name: str) -> None:
+    """Select the paged decode-attention backend (repro.serve hot path)."""
+    _paged_attn_switch.set(name)
+
+
+def paged_attn_backend() -> str:
+    return _paged_attn_switch.resolve()
 
 
 def tree_sq_norm(tree, block_d: int = 2048) -> jax.Array:
@@ -164,3 +198,44 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         v = _pad_to(v, bt, 1)
         mask = _pad_to(mask, bt, 1)
     return _dec.decode_attention(q, k, v, mask, bt, interpret)
+
+
+def scale_rows(G: jax.Array, scale: jax.Array,
+               block_d: int = 2048) -> jax.Array:
+    """Row-broadcast multiply of an (n, d) stack — pass 2 of the CGC
+    filter. Dispatches via the scale backend switch: the Pallas
+    ``cgc_clip.scale_rows`` streaming pass on TPU, plain jnp elsewhere
+    (``REPRO_SCALE_BACKEND`` / ``set_scale_backend`` override).
+    """
+    if scale_backend() == "jnp":
+        return (G.astype(F32) * scale.astype(F32)[:, None]).astype(G.dtype)
+    n, d = G.shape
+    bd = min(block_d, max(128, d))
+    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    scale_p = jnp.pad(scale.astype(F32), (0, Gp.shape[0] - n))
+    return _cgc.scale_rows(Gp, scale_p, bd, not _on_tpu())[:n, :d]
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array,
+                           interpret: bool | None = None) -> jax.Array:
+    """Paged flash-decode GQA over a block-table-indexed page pool.
+
+    q (B,H,hd); k_pages/v_pages (P,ps,K,hd); block_table (B,NB) int32
+    page ids; lengths (B,) valid tokens per sequence (0 -> zeros).
+    Dispatches via the paged-attn backend switch: the Pallas kernel
+    (scalar-prefetch block-table gather, decode_attention.py) on TPU,
+    the gather-then-attend oracle ``ref.paged_decode_attention_ref``
+    elsewhere (``REPRO_PAGED_ATTN_BACKEND`` / ``set_paged_attn_backend``
+    override) — the jnp path is bitwise the contiguous reference on the
+    gathered view.
+    """
+    from repro.kernels import ref as _ref
+    if paged_attn_backend() == "jnp":
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                               block_table, lengths)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _dec.paged_decode_attention(q, k_pages, v_pages, block_table,
+                                       lengths, interpret)

@@ -54,3 +54,35 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(F32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialise a paged cache view: (P, ps, K, hd) + (B, NB) page ids
+    -> (B, NB*ps, K, hd). Logical position t of sequence b lives at page
+    ``block_table[b, t // ps]``, slot ``t % ps``."""
+    B, NB = block_table.shape
+    _, ps, K, hd = pages.shape
+    return pages[block_table].reshape(B, NB * ps, K, hd)
+
+
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Paged GQA decode oracle: gather the block-table view and run the
+    contiguous decode attention with mask = (position < length).
+
+    q: (B, H, hd); k_pages/v_pages: (P, ps, K, hd); block_table: (B, NB)
+    int32 page ids; lengths: (B,) valid tokens per sequence (0 = fully
+    masked, returns zeros). Bitwise-identical to ``decode_attention_ref``
+    on the gathered contiguous cache — the consistency contract for the
+    Pallas kernel and the serving paged-decode path.
+    """
+    k = gather_pages(k_pages, block_table)
+    v = gather_pages(v_pages, block_table)
+    T = k.shape[1]
+    mask = jnp.arange(T)[None, :] < lengths[:, None]
+    out = decode_attention_ref(q, k, v, mask)
+    # a fully-masked row softmaxes uniformly over -1e30 scores; zero it so
+    # inactive batch lanes carry no signal.
+    return jnp.where((lengths > 0)[:, None, None], out,
+                     jnp.zeros_like(out))

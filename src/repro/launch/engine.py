@@ -34,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import queue
+import threading
 import time
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
                     Sequence, Tuple)
@@ -504,33 +506,85 @@ def opt_state_shardings(opt_state_abs, params_tree, mesh, rules=None,
 # ---------------------------------------------------------------------------
 
 
+def _train_record_line(record: Dict[str, Any]) -> str:
+    parts = [f"step {record.get('step', 0):5d}",
+             f"loss={record.get('loss', 0.0):.4f}"]
+    if "all_echo" in record:
+        parts.append(f"all_echo={record['all_echo']}")
+    if "bits_cumulative" in record:
+        parts.append(f"bits={record['bits_cumulative']:.3e}")
+    return "  ".join(parts)
+
+
 class MetricsSink:
     """Per-round metrics writer: jsonl file (every round) + stdout
-    (every ``log_every`` rounds). ``printer`` is pluggable for tests."""
+    (every ``log_every`` rounds). ``printer`` is pluggable for tests;
+    ``formatter`` maps a record to its stdout line (default: the trainer
+    step/loss/bits line — ``repro.serve`` passes its own).
+
+    jsonl writes are non-blocking: ``emit`` enqueues the serialised
+    record and returns; a daemon writer thread drains the queue to the
+    file so metrics I/O stays off the driver hot loop. ``flush`` blocks
+    until everything enqueued so far is on disk; ``close`` flushes,
+    stops the thread and closes the file.
+    """
 
     def __init__(self, path: Optional[str] = None, log_every: int = 5,
-                 printer: Optional[Callable[[str], None]] = None):
+                 printer: Optional[Callable[[str], None]] = None,
+                 formatter: Optional[Callable[[Dict[str, Any]], str]] = None):
         self.log_every = max(int(log_every), 1)
         if path and os.path.dirname(path):
             os.makedirs(os.path.dirname(path), exist_ok=True)
         self._fh = open(path, "a") if path else None
         self._print = (lambda s: print(s, flush=True)) \
             if printer is None else printer
+        self._format = formatter or _train_record_line
+        self._q: Optional[queue.SimpleQueue] = None
+        self._thread: Optional[threading.Thread] = None
+        if self._fh is not None:
+            self._q = queue.SimpleQueue()
+            self._thread = threading.Thread(
+                target=self._writer, name="metrics-sink", daemon=True)
+            self._thread.start()
+
+    def _writer(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:                       # close sentinel
+                return
+            if isinstance(item, threading.Event):  # flush barrier
+                self._fh.flush()
+                item.set()
+                continue
+            self._fh.write(item)
+            if self._q.empty():
+                self._fh.flush()
 
     def emit(self, record: Dict[str, Any]) -> None:
-        if self._fh is not None:
-            self._fh.write(json.dumps(record) + "\n")
-            self._fh.flush()
+        if self._q is not None:
+            self._q.put(json.dumps(record) + "\n")
         step = record.get("step", 0)
         if step % self.log_every == 0 or record.get("final"):
-            parts = [f"step {step:5d}", f"loss={record.get('loss', 0.0):.4f}"]
-            if "all_echo" in record:
-                parts.append(f"all_echo={record['all_echo']}")
-            if "bits_cumulative" in record:
-                parts.append(f"bits={record['bits_cumulative']:.3e}")
-            self._print("  ".join(parts))
+            self._print(self._format(record))
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every record emitted so far is written to disk.
+        Default blocks indefinitely (the durability the old synchronous
+        sink had); with a timeout, returns False if it expired."""
+        if self._q is None or self._thread is None \
+                or not self._thread.is_alive():
+            return True
+        barrier = threading.Event()
+        self._q.put(barrier)
+        return barrier.wait(timeout)
 
     def close(self) -> None:
+        if self._thread is not None:
+            self._q.put(None)
+            # the writer drains everything queued before the sentinel, so
+            # joining IS the flush; only then is the file safe to close.
+            self._thread.join()
+            self._thread = None
         if self._fh is not None:
             self._fh.close()
             self._fh = None

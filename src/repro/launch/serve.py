@@ -1,11 +1,19 @@
-"""Serving: batched single-token decode (serve_step) and prefill.
+"""Serving entry points — a thin shim over ``repro.serve`` (DESIGN.md §7).
 
-``make_serve_step``/``make_prefill`` return jittable functions used by the
-dry-run, the decode benchmarks and the serving example.
+The continuous-batching engine (paged KV cache, FCFS scheduler, Pallas
+paged-decode kernel) lives in ``repro.serve``; this module keeps the
+fixed-batch building blocks (``make_serve_step``/``make_prefill`` for the
+dry-run and benchmarks, ``greedy_decode`` as the baseline decode loop)
+and the CLI:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke
+
+runs a synthetic mixed-length request trace through :class:`ServeEngine`
+and prints the throughput/latency summary.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +21,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.dist import ShardCtx, make_shard_ctx
 from repro.models import model as M
+from repro.serve import (RequestHandle, ServeConfig,  # noqa: F401 (shim)
+                         ServeEngine)
 
 F32 = jnp.float32
 
@@ -42,14 +52,119 @@ def make_prefill(cfg: ModelConfig, mesh, global_batch: int,
 
 
 def greedy_decode(cfg: ModelConfig, values, cache, first_token, start_pos,
-                  steps: int, serve_step):
-    """Greedy multi-token decode loop (example/benchmark helper)."""
-    def body(carry, _):
-        cache, tok, pos = carry
-        logits, cache = serve_step(values, cache, tok, pos)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return (cache, nxt, pos + 1), nxt[:, 0]
+                  steps: int, serve_step, eos: Optional[int] = None):
+    """Greedy fixed-batch decode loop (example/benchmark baseline).
 
-    (cache, _, _), toks = jax.lax.scan(
-        body, (cache, first_token, start_pos), None, length=steps)
-    return jnp.moveaxis(toks, 0, 1), cache   # (B, steps)
+    Without ``eos`` every sequence scans all ``steps`` positions. With
+    ``eos`` each sequence stops at its first EOS — positions after it
+    emit ``eos`` (and append EOS KVs, keeping the cache well-defined) —
+    and the loop exits as soon as EVERY sequence has finished instead of
+    burning ``steps`` iterations regardless.
+    """
+    B = first_token.shape[0]
+    if eos is None:
+        def body(carry, _):
+            cache, tok, pos = carry
+            logits, cache = serve_step(values, cache, tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return (cache, nxt, pos + 1), nxt[:, 0]
+
+        (cache, _, _), toks = jax.lax.scan(
+            body, (cache, first_token, start_pos), None, length=steps)
+        return jnp.moveaxis(toks, 0, 1), cache   # (B, steps)
+
+    def cond(st):
+        t, _, _, _, done, _ = st
+        return (t < steps) & ~jnp.all(done)
+
+    def body(st):
+        t, cache, tok, pos, done, out = st
+        logits, cache = serve_step(values, cache, tok, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(done, eos, nxt)
+        out = jax.lax.dynamic_update_slice(out, nxt[:, None], (0, t))
+        return (t + 1, cache, nxt[:, None], pos + 1,
+                done | (nxt == eos), out)
+
+    done0 = first_token[:, 0] == eos
+    out0 = jnp.full((B, steps), eos, jnp.int32)
+    _, cache, _, _, _, toks = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), cache, first_token,
+                     start_pos, done0, out0))
+    return toks, cache
+
+
+# ---------------------------------------------------------------------------
+# Script entry: synthetic serve session over the continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    import argparse
+
+    import numpy as np
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--max-blocks-per-seq", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max synthetic prompt length")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max tokens generated per request")
+    ap.add_argument("--token-budget", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", default=None,
+                    help="jsonl metrics sink path")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, reduced
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=args.max_batch, page_size=args.page_size,
+        num_pages=args.num_pages,
+        max_blocks_per_seq=args.max_blocks_per_seq,
+        token_budget=args.token_budget, metrics_path=args.metrics,
+        log_every=args.log_every))
+
+    rng = np.random.default_rng(args.seed)
+    handles = []
+    for _ in range(args.requests):
+        plen = int(rng.integers(2, max(args.prompt_len, 2) + 1))
+        gen = int(rng.integers(1, max(args.gen, 1) + 1))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
+        handles.append(engine.submit(prompt, max_new=gen))
+
+    engine.drain(max_steps=100 * args.requests * (args.gen + 2))
+    engine.sched.check_invariants()
+    summary = engine.summary()
+    engine.close()
+
+    assert all(h.done for h in handles), "drain left unfinished requests"
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"lanes={args.max_batch} pages={args.num_pages}"
+          f"x{args.page_size}")
+    print(f"generated {summary['tokens_generated']} tokens in "
+          f"{summary['wall_s']}s ({summary['tokens_per_s']} tok/s), "
+          f"{summary['preemptions']} preemptions")
+    print(f"latency p50={summary['latency_p50_s']}s "
+          f"p99={summary['latency_p99_s']}s "
+          f"ttft p50={summary['ttft_p50_s']}s")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

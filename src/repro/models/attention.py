@@ -204,6 +204,68 @@ def gqa_decode(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged GQA decode (repro.serve): block-table-indexed page pool
+# ---------------------------------------------------------------------------
+
+
+def gqa_paged_init_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                         dtype) -> Dict[str, jax.Array]:
+    """Paged KV cache: a pool of fixed-size pages shared by all sequences.
+
+    Logical position t of a sequence with block table ``bt`` lives at page
+    ``bt[t // page_size]``, slot ``t % page_size``. Page 0 is reserved as
+    the scratch page (inactive/padded writes land there, never attended);
+    ``repro.serve.kv_cache`` owns the free-list allocation of the rest.
+    """
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "kp": jnp.zeros((num_pages, page_size, K, hd), dtype),
+        "vp": jnp.zeros((num_pages, page_size, K, hd), dtype),
+    }
+
+
+def gqa_paged_decode(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                     cache: Dict[str, jax.Array], block_table: jax.Array,
+                     mrope_pos: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the paged cache.
+
+    x: (B, 1, D); pos: (B,) absolute position, -1 = inactive lane (its
+    write is directed to the scratch page and its output is zero);
+    block_table: (B, NB) page ids. Attention runs through
+    ``kernels.ops.paged_decode_attention`` (Pallas on TPU, gather-ref
+    elsewhere).
+    """
+    from repro.kernels import ops as _kops
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    pos_b1 = pos[:, None]
+    if cfg.mrope and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+        k_new = apply_mrope(k_new, mrope_pos, cfg.mrope_sections,
+                            cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos_b1, cfg.rope_theta)
+        k_new = apply_rope(k_new, pos_b1, cfg.rope_theta)
+
+    ps = cache["kp"].shape[1]
+    active = pos >= 0
+    blk = jnp.where(active, pos, 0) // ps
+    page = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    page = jnp.where(active, page, 0)           # scratch page for idle lanes
+    slot = jnp.where(active, pos % ps, 0)
+    kp = cache["kp"].at[page, slot].set(k_new[:, 0])
+    vp = cache["vp"].at[page, slot].set(v_new[:, 0])
+
+    lengths = jnp.where(active, pos + 1, 0)
+    out = _kops.paged_decode_attention(q[:, 0], kp, vp, block_table,
+                                       lengths)          # (B, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out[:, None].astype(x.dtype),
+                   p["wo"].astype(x.dtype))
+    return y, {"kp": kp, "vp": vp}
+
+
+# ---------------------------------------------------------------------------
 # MLA (Multi-head Latent Attention, DeepSeek-V2 / MiniCPM3)
 # ---------------------------------------------------------------------------
 

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import nn
 from repro.models.attention import (gqa_decode, gqa_forward, gqa_init_cache,
+                                    gqa_paged_decode, gqa_paged_init_cache,
                                     gqa_params, mla_decode, mla_forward,
                                     mla_init_cache, mla_params)
 from repro.models.mlp import mlp_forward, mlp_params
@@ -73,9 +74,16 @@ def transformer_block(p, cfg: ModelConfig, x: jax.Array,
 
 def transformer_block_decode(p, cfg: ModelConfig, x: jax.Array,
                              pos: jax.Array, cache, *, moe: bool,
-                             mrope_pos=None, shard_ctx=None):
+                             mrope_pos=None, shard_ctx=None,
+                             block_table=None):
     h = nn.rms_norm(x, p["ln_attn"], cfg.norm_eps)
-    if cfg.attn_type == "mla":
+    if block_table is not None:
+        if cfg.attn_type != "gqa":
+            raise ValueError(f"paged decode supports attn_type 'gqa' only, "
+                             f"got {cfg.attn_type!r}")
+        a, cache = gqa_paged_decode(p["attn"], cfg, h, pos, cache,
+                                    block_table, mrope_pos)
+    elif cfg.attn_type == "mla":
         a, cache = mla_decode(p["attn"], cfg, h, pos, cache)
     else:
         a, cache = gqa_decode(p["attn"], cfg, h, pos, cache, mrope_pos)
@@ -93,6 +101,14 @@ def transformer_block_cache(cfg: ModelConfig, batch: int, max_len: int,
     if cfg.attn_type == "mla":
         return mla_init_cache(cfg, batch, max_len, dtype)
     return gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+def transformer_block_paged_cache(cfg: ModelConfig, num_pages: int,
+                                  page_size: int, dtype):
+    if cfg.attn_type != "gqa":
+        raise ValueError(f"paged KV cache supports attn_type 'gqa' only, "
+                         f"got {cfg.attn_type!r}")
+    return gqa_paged_init_cache(cfg, num_pages, page_size, dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -267,6 +267,8 @@ def prefill_logits(v, cfg: ModelConfig, inputs: Dict[str, jax.Array],
 _CACHE_AXES = {
     "k": ("batch", "kv_seq", "kv_heads", None),
     "v": ("batch", "kv_seq", "kv_heads", None),
+    "kp": (None, None, "kv_heads", None),       # paged pool: (P, ps, K, hd)
+    "vp": (None, None, "kv_heads", None),
     "slot_pos": ("batch", "kv_seq"),
     "ckv": ("batch", "kv_seq", None),
     "kpe": ("batch", "kv_seq", None),
@@ -339,12 +341,42 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return c
 
 
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Paged decode cache (repro.serve): per-layer page pools as a Param
+    tree. All layers share one block table / allocator — a sequence's
+    logical block maps to the same page index in every layer. Page 0 is
+    the reserved scratch page. Only transformer families with GQA
+    attention page their KV (hybrid/ssm state is O(1) per sequence)."""
+    dt = compute_dtype(cfg)
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "audio", "moe"):
+        raise ValueError(f"paged KV cache supports transformer families "
+                         f"only, got family {fam!r}")
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    if num_pages < 2:
+        raise ValueError("need num_pages >= 2 (page 0 is scratch)")
+    c: Dict[str, Any] = {}
+    nd = cfg.first_dense_layers if fam == "moe" else 0
+    c["head_layers"] = [_wrap_cache(
+        blocks.transformer_block_paged_cache(cfg, num_pages, page_size, dt),
+        False) for _ in range(nd)]
+    one = blocks.transformer_block_paged_cache(cfg, num_pages, page_size, dt)
+    L = cfg.num_layers - nd
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
+    c["layers"] = _wrap_cache(stacked, True)
+    return c
+
+
 def decode_step(v, cfg: ModelConfig, cache, token: jax.Array,
-                pos: jax.Array, shard_ctx=None
+                pos: jax.Array, shard_ctx=None, block_tables=None
                 ) -> Tuple[jax.Array, Any]:
     """One-token serve step. token (B,1) int32, pos (B,) -> (logits, cache).
 
-    ``cache`` is the plain value tree (axes stripped by the caller).
+    ``cache`` is the plain value tree (axes stripped by the caller). With
+    ``block_tables`` ((B, NB) int32 page ids) the cache must be the paged
+    form from :func:`init_paged_cache`; pos -1 marks an inactive lane.
     """
     dt = compute_dtype(cfg)
     x = nn.embed_lookup(token, v["embed"]).astype(dt)     # (B,1,D)
@@ -361,18 +393,21 @@ def decode_step(v, cfg: ModelConfig, cache, token: jax.Array,
                           cache.get("head_layers", [])):
             x, nc_ = blocks.transformer_block_decode(
                 hp, cfg, x, pos, hc, moe=False, mrope_pos=mrope_pos,
-                shard_ctx=shard_ctx)
+                shard_ctx=shard_ctx, block_table=block_tables)
             new_cache["head_layers"].append(nc_)
 
         def body(x, xs_):
             lp, lc = xs_
             x, nc_ = blocks.transformer_block_decode(
                 lp, cfg, x, pos, lc, moe=moe, mrope_pos=mrope_pos,
-                shard_ctx=shard_ctx)
+                shard_ctx=shard_ctx, block_table=block_tables)
             return x, nc_
 
         x, new_cache["layers"] = jax.lax.scan(
             body, x, (v["layers"], cache["layers"]))
+    elif block_tables is not None:
+        raise ValueError(f"paged decode supports transformer families "
+                         f"only, got family {fam!r}")
     elif fam == "hybrid":
         k = cfg.shared_attn_every
         ng = cfg.num_layers // k

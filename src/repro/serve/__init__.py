@@ -1,0 +1,24 @@
+"""repro.serve — continuous-batching serving subsystem (DESIGN.md §7).
+
+  kv_cache.py   paged KV cache: fixed-size pages, block tables, free list
+  scheduler.py  FCFS token-budget admission, prefill/decode interleave,
+                preempt-longest on block-pool OOM
+  engine.py     ServeEngine: jitted paged prefill/decode over ShardCtx
+  api.py        RequestHandle + jsonl serving metrics
+
+The paged attention hot path dispatches through
+``kernels.ops.paged_decode_attention`` (Pallas on TPU,
+``REPRO_PAGED_ATTN_BACKEND`` override).
+"""
+from .api import FINISHED, RUNNING, WAITING, RequestHandle, ServeMetrics
+from .engine import ServeConfig, ServeEngine
+from .kv_cache import (SCRATCH_PAGE, BlockAllocator, PagedKVCache,
+                       contiguous_from_paged, paged_from_contiguous)
+from .scheduler import Scheduler, SchedulerConfig
+
+__all__ = [
+    "FINISHED", "RUNNING", "WAITING", "RequestHandle", "ServeMetrics",
+    "ServeConfig", "ServeEngine", "SCRATCH_PAGE", "BlockAllocator",
+    "PagedKVCache", "contiguous_from_paged", "paged_from_contiguous",
+    "Scheduler", "SchedulerConfig",
+]

@@ -1,0 +1,158 @@
+"""Request/response surface + serving metrics (DESIGN.md §7).
+
+A :class:`RequestHandle` is both the scheduler's unit of work and the
+caller's view of a request: ``ServeEngine.submit`` returns one, the
+engine mutates it as the request moves WAITING -> RUNNING -> FINISHED
+(preemption sends it back to WAITING with its progress kept), and
+``tokens`` accumulates the generated ids.
+
+:class:`ServeMetrics` mirrors the trainer's metrics contract: one jsonl
+record per engine step through the same (non-blocking) ``MetricsSink``,
+plus throughput / latency counters aggregated into ``summary()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.launch.engine import MetricsSink
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """One generation request and its live state."""
+
+    rid: int
+    prompt: List[int]                 # prompt token ids
+    max_new: int                      # generation budget
+    eos: Optional[int] = None         # stop token (None: run to max_new)
+
+    status: str = WAITING
+    tokens: List[int] = dataclasses.field(default_factory=list)  # generated
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    n_preempt: int = 0
+
+    # scheduler state (meaningful while RUNNING)
+    slot: Optional[int] = None        # decode lane
+    blocks: List[int] = dataclasses.field(default_factory=list)  # page ids
+    base_len: int = 0                 # context length at last admission
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    def context(self) -> List[int]:
+        """Prompt + everything generated so far — what a (re-)admission
+        prefills; the last generated token is the next decode input."""
+        return self.prompt + self.tokens
+
+    def ctx_len(self) -> int:
+        """len(context()) without building the list (hot-loop accessor)."""
+        return len(self.prompt) + len(self.tokens)
+
+    def last_token(self) -> int:
+        """The next decode input: the most recent context token."""
+        return self.tokens[-1] if self.tokens else self.prompt[-1]
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.t_finish is None:
+            return None
+        return self.t_finish - self.t_submit
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def _serve_record_line(record: Dict[str, Any]) -> str:
+    parts = [f"step {record.get('step', 0):5d}",
+             f"{record.get('kind', '?'):7s}",
+             f"run={record.get('running', 0)}",
+             f"wait={record.get('waiting', 0)}",
+             f"tok/s={record.get('tokens_per_s', 0.0):.1f}"]
+    if record.get("preempted"):
+        parts.append(f"preempted={record['preempted']}")
+    return "  ".join(parts)
+
+
+class ServeMetrics:
+    """Per-step serving metrics: jsonl records (trainer sink shape) +
+    aggregate throughput / latency counters."""
+
+    def __init__(self, path: Optional[str] = None, log_every: int = 10,
+                 printer: Optional[Callable[[str], None]] = None,
+                 clock: Callable[[], float] = time.time):
+        self.sink = MetricsSink(path, log_every, printer,
+                                formatter=_serve_record_line)
+        self._clock = clock
+        self._t0 = clock()
+        self.steps = 0
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.tokens_prefilled = 0
+        self.tokens_generated = 0
+        self.preemptions = 0
+        self.latencies: List[float] = []
+        self.ttfts: List[float] = []
+
+    def record_step(self, kind: str, *, generated: int, prefilled: int,
+                    running: int, waiting: int, free_pages: int,
+                    preempted: int, dt: float) -> Dict[str, Any]:
+        self.steps += 1
+        self.prefill_steps += kind == "prefill"
+        self.decode_steps += kind == "decode"
+        self.tokens_generated += generated
+        self.tokens_prefilled += prefilled
+        self.preemptions += preempted
+        record = {
+            "step": self.steps, "kind": kind, "generated": generated,
+            "prefilled": prefilled, "running": running, "waiting": waiting,
+            "free_pages": free_pages, "preempted": preempted,
+            "step_s": round(dt, 6),
+            "tokens_per_s": round(generated / dt, 3) if dt > 0 else 0.0,
+            "tokens_generated_cumulative": self.tokens_generated,
+        }
+        self.sink.emit(record)
+        return record
+
+    def record_finish(self, handle: RequestHandle) -> None:
+        if handle.latency is not None:
+            self.latencies.append(handle.latency)
+        if handle.ttft is not None:
+            self.ttfts.append(handle.ttft)
+
+    def summary(self) -> Dict[str, Any]:
+        wall = max(self._clock() - self._t0, 1e-9)
+        return {
+            "steps": self.steps,
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "tokens_prefilled": self.tokens_prefilled,
+            "tokens_generated": self.tokens_generated,
+            "preemptions": self.preemptions,
+            "completed": len(self.latencies),
+            "wall_s": round(wall, 3),
+            "tokens_per_s": round(self.tokens_generated / wall, 3),
+            "latency_p50_s": round(_percentile(self.latencies, 50), 6),
+            "latency_p99_s": round(_percentile(self.latencies, 99), 6),
+            "ttft_p50_s": round(_percentile(self.ttfts, 50), 6),
+        }
+
+    def close(self) -> None:
+        self.sink.close()

@@ -1,0 +1,296 @@
+"""ServeEngine: the continuous-batching serving driver (DESIGN.md §7).
+
+Owns the jitted paged ``prefill`` / ``decode_step`` executables (built on
+``repro.dist.ShardCtx`` — TP via the existing sharding rules when a mesh
+is given), the :class:`PagedKVCache` pools, and the
+:class:`Scheduler`; ``submit``/``step``/``drain`` is the whole surface.
+
+Fixed shapes keep recompiles bounded: decode always runs the full
+``max_batch`` lane set (idle lanes carry pos = -1 and write the scratch
+page); prefill pads the admitted pack to ``max_batch`` lanes and a
+power-of-two token length, so at most O(log max_prompt) prefill
+executables exist. Prefill itself is a ``lax.scan`` of the paged decode
+step over the prompt — the same code path the decode hot loop runs, with
+per-lane lengths masking ragged prompts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist import make_shard_ctx, tree_shardings
+from repro.models import model as M
+from repro.models.nn import Param, merge_params, split_params
+
+from .api import RequestHandle, ServeMetrics
+from .kv_cache import PagedKVCache
+from .scheduler import Scheduler, SchedulerConfig
+
+
+def _plain_shardings(param_tree, mesh):
+    """Param tree -> plain NamedSharding tree via the default rules."""
+    shard = tree_shardings(param_tree, mesh)
+    plain, _ = split_params(jax.tree.map(
+        lambda p, s: Param(s, p.axes), param_tree, shard,
+        is_leaf=lambda x: isinstance(x, Param)))
+    return plain
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving shapes + policy knobs."""
+
+    max_batch: int = 4             # decode lanes
+    page_size: int = 16            # tokens per KV page
+    num_pages: int = 128           # pool size incl. the scratch page
+    max_blocks_per_seq: int = 16   # block-table width
+    token_budget: int = 512        # prefill tokens admitted per step
+    decode_quantum: int = 8        # decode steps fused per dispatch
+    metrics_path: Optional[str] = None
+    log_every: int = 10
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= n (>= lo) — bounds prefill recompiles."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """Continuous-batching engine over the paged decode path."""
+
+    def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
+                 mesh=None, moe_impl: str = "tp",
+                 printer: Optional[Callable[[str], None]] = None):
+        if cfg.family not in ("dense", "vlm", "audio", "moe"):
+            raise ValueError(f"paged serving supports transformer families "
+                             f"only, got {cfg.family!r}")
+        if cfg.attn_type != "gqa":
+            raise ValueError("paged serving supports attn_type 'gqa' only")
+        if cfg.sliding_window:
+            raise ValueError("paged serving does not support sliding-window "
+                             "attention (the ring buffer already bounds "
+                             "cache memory)")
+        self.cfg = cfg
+        self.serve = serve
+        self.ctx = make_shard_ctx(mesh, serve.max_batch, moe_impl)
+        self.mesh = mesh
+        self.kv = PagedKVCache(cfg, serve.num_pages, serve.page_size,
+                               serve.max_blocks_per_seq)
+        self.sched = Scheduler(self.kv, SchedulerConfig(
+            max_batch=serve.max_batch, token_budget=serve.token_budget))
+        self.metrics = ServeMetrics(serve.metrics_path, serve.log_every,
+                                    printer)
+        self.values, _ = split_params(params)
+        if mesh is not None:
+            # place params + page pools per the logical-axis rules (TP:
+            # kv_heads/heads/mlp/vocab over the model axis).
+            self.values = jax.device_put(
+                self.values, _plain_shardings(params, mesh))
+            self.kv.pages = jax.device_put(
+                self.kv.pages,
+                _plain_shardings(merge_params(self.kv.pages, self.kv.axes),
+                                 mesh))
+        self._rid = itertools.count()
+        # the page pools are donated: every dispatch consumes kv.pages and
+        # the engine rebinds the returned tree, so the update is in-place
+        # instead of copying the whole pool per step.
+        self._decode_jit = jax.jit(self._decode_fn, static_argnums=(5,),
+                                   donate_argnums=(1,))
+        self._prefill_jit = jax.jit(self._prefill_fn, donate_argnums=(1,))
+
+    # --- jitted bodies ----------------------------------------------
+
+    def _model_ctx(self):
+        return self.ctx if self.mesh is not None else None
+
+    def _decode_fn(self, values, pages, tokens, pos, tables, k: int):
+        """Fused run of ``k`` greedy decode steps (the scheduling
+        quantum): tokens (B,1) at pos (B,) -> ((B, k) sampled ids, pages).
+        Idle lanes (pos -1) stay idle; the host consumes each lane's run
+        up to its EOS / budget and discards the overshoot."""
+        def body(carry, _):
+            pages, tok, pos = carry
+            logits, pages = M.decode_step(values, self.cfg, pages, tok, pos,
+                                          shard_ctx=self._model_ctx(),
+                                          block_tables=tables)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            active = pos >= 0
+            tok = jnp.where(active, nxt, 0)[:, None]
+            pos = jnp.where(active, pos + 1, -1)
+            return (pages, tok, pos), nxt
+
+        (pages, _, _), toks = jax.lax.scan(body, (pages, tokens, pos),
+                                           None, length=k)
+        return jnp.moveaxis(toks, 0, 1), pages           # (B, k)
+
+    def _prefill_fn(self, values, pages, tokens, lengths, tables):
+        """Scan the paged decode step over a ragged prompt pack.
+
+        tokens (B, S) scratch-padded, lengths (B,) (0 = idle lane).
+        Returns (greedy next token sampled at each lane's last prompt
+        position (B,), pages)."""
+        B, S = tokens.shape
+        V = self.cfg.padded_vocab
+
+        def body(carry, t):
+            pages, last = carry
+            pos = jnp.where(t < lengths, t, -1)
+            logits, pages = M.decode_step(
+                values, self.cfg, pages, jax.lax.dynamic_slice_in_dim(
+                    tokens, t, 1, axis=1), pos,
+                shard_ctx=self._model_ctx(), block_tables=tables)
+            last = jnp.where((t == lengths - 1)[:, None], logits, last)
+            return (pages, last), None
+
+        last0 = jnp.zeros((B, V), jnp.float32)
+        (pages, last), _ = jax.lax.scan(body, (pages, last0),
+                                        jnp.arange(S))
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), pages
+
+    # --- public surface ----------------------------------------------
+
+    def submit(self, prompt_tokens, max_new: int,
+               eos: Optional[int] = None) -> RequestHandle:
+        prompt = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        if not prompt or max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        req = RequestHandle(rid=next(self._rid), prompt=prompt,
+                            max_new=max_new, eos=eos, t_submit=time.time())
+        self.sched.submit(req)
+        return req
+
+    def _table_batch(self) -> jnp.ndarray:
+        rows = np.full((self.serve.max_batch, self.kv.max_blocks_per_seq),
+                       0, np.int32)
+        for slot, req in self.sched.running.items():
+            rows[slot] = self.kv.table_row(req.blocks)
+        return jnp.asarray(rows)
+
+    def _commit_token(self, req: RequestHandle, tok: int,
+                      now: float) -> None:
+        """Append one generated token; finish on EOS / budget."""
+        req.tokens.append(tok)
+        if req.t_first_token is None:
+            req.t_first_token = now
+        if len(req.tokens) >= req.max_new or \
+                (req.eos is not None and tok == req.eos):
+            req.t_finish = now
+            self.sched.finish(req)
+            self.metrics.record_finish(req)
+
+    def step(self) -> Dict[str, Any]:
+        """One scheduler iteration: a prefill step if anything was
+        admitted, else a decode step over the running lanes. Returns the
+        step's metrics record."""
+        t0 = time.time()
+        admitted = self.sched.admit()
+        if admitted:
+            record = self._prefill_step(admitted, t0)
+        elif self.sched.running:
+            record = self._decode_step(t0)
+        else:
+            record = self.metrics.record_step(
+                "idle", generated=0, prefilled=0, running=0,
+                waiting=len(self.sched.waiting),
+                free_pages=self.kv.allocator.num_free, preempted=0,
+                dt=time.time() - t0)
+        return record
+
+    def _prefill_step(self, admitted: List[RequestHandle],
+                      t0: float) -> Dict[str, Any]:
+        B = self.serve.max_batch
+        S = _bucket(max(req.base_len for req in admitted))
+        tokens = np.zeros((B, S), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        for req in admitted:
+            ctx = req.context()
+            tokens[req.slot, :len(ctx)] = ctx
+            lengths[req.slot] = len(ctx)
+        next_tok, self.kv.pages = self._prefill_jit(
+            self.values, self.kv.pages, jnp.asarray(tokens),
+            jnp.asarray(lengths), self._table_batch())
+        next_tok = np.asarray(next_tok)
+        now = time.time()
+        for req in admitted:
+            # re-admitted requests prefilled prompt + prior generation as
+            # context; the sample continues the sequence either way.
+            self._commit_token(req, int(next_tok[req.slot]), now)
+        return self.metrics.record_step(
+            "prefill", generated=len(admitted),
+            prefilled=int(lengths.sum()), running=len(self.sched.running),
+            waiting=len(self.sched.waiting),
+            free_pages=self.kv.allocator.num_free, preempted=0,
+            dt=now - t0)
+
+    def _decode_step(self, t0: float) -> Dict[str, Any]:
+        # the quantum is FIXED so exactly one decode executable exists; a
+        # lane finishing mid-quantum (EOS / budget) has its overshoot
+        # discarded — the stray writes stay inside its own pages (the
+        # block-table gather clamps to its last block) and the pages are
+        # freed right after the dispatch.
+        k = self.serve.decode_quantum
+        preempted = self.sched.ensure_decode_capacity(k)
+        if not self.sched.running:
+            return self.metrics.record_step(
+                "decode", generated=0, prefilled=0, running=0,
+                waiting=len(self.sched.waiting),
+                free_pages=self.kv.allocator.num_free,
+                preempted=len(preempted), dt=time.time() - t0)
+        B = self.serve.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.full((B,), -1, np.int32)
+        for slot, req in self.sched.running.items():
+            tokens[slot, 0] = req.last_token()
+            pos[slot] = req.ctx_len() - 1
+        toks, self.kv.pages = self._decode_jit(
+            self.values, self.kv.pages, jnp.asarray(tokens),
+            jnp.asarray(pos), self._table_batch(), k)
+        toks = np.asarray(toks)
+        now = time.time()
+        n_new = 0
+        for slot, req in list(self.sched.running.items()):
+            for j in range(k):
+                self._commit_token(req, int(toks[slot, j]), now)
+                n_new += 1
+                if req.done:
+                    break                 # overshoot past EOS is discarded
+        return self.metrics.record_step(
+            "decode", generated=n_new, prefilled=0,
+            running=len(self.sched.running),
+            waiting=len(self.sched.waiting),
+            free_pages=self.kv.allocator.num_free,
+            preempted=len(preempted), dt=now - t0)
+
+    def drain(self, max_steps: Optional[int] = None
+              ) -> List[RequestHandle]:
+        """Run steps until every submitted request finished; returns the
+        finished handles of this drain in completion order."""
+        tracked = list(self.sched.waiting) \
+            + list(self.sched.running.values())
+        steps = 0
+        while self.sched.has_work:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps")
+        return [r for r in tracked if r.done]
+
+    def summary(self) -> Dict[str, Any]:
+        s = self.metrics.summary()
+        s.update(free_pages=self.kv.allocator.num_free,
+                 waiting=len(self.sched.waiting),
+                 running=len(self.sched.running))
+        return s
+
+    def close(self) -> None:
+        self.metrics.close()

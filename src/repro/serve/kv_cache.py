@@ -1,0 +1,213 @@
+"""Paged KV cache: fixed-size pages, per-sequence block tables, free list.
+
+Device side, every attention layer owns a pool of ``num_pages`` pages of
+``page_size`` token slots (``models.model.init_paged_cache``); logical
+position t of a sequence lives at page ``block_table[t // page_size]``,
+slot ``t % page_size`` — the same page index in every layer, so ONE block
+table and ONE allocator serve the whole model. Page 0 is reserved as the
+scratch page: padded / inactive-lane writes are directed there and its
+contents are never attended (lengths mask them out).
+
+Host side, :class:`BlockAllocator` hands out page ids from a free list —
+O(1) alloc/free, no compaction, fragmentation-free by construction
+(every block is the same size). :class:`PagedKVCache` bundles the device
+pools with the allocator and the contiguous-cache adapters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.nn import split_params
+
+SCRATCH_PAGE = 0
+
+
+class BlockAllocator:
+    """Free-list page allocator; page 0 (scratch) is never handed out."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need num_pages >= 2 (page 0 is scratch)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._free_set = set(self._free)     # O(1) double-free guard
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (total minus the scratch page)."""
+        return self.num_pages - 1
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages, or None (and no change) if not enough free."""
+        if n > len(self._free):
+            return None
+        if n <= 0:
+            return []
+        out = self._free[-n:][::-1]
+        del self._free[len(self._free) - n:]
+        self._free_set.difference_update(out)
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p == SCRATCH_PAGE:
+                raise ValueError("cannot free the scratch page")
+            if p in self._free_set:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+            self._free_set.add(p)
+
+
+class PagedKVCache:
+    """Device page pools (a plain value tree) + the host allocator."""
+
+    def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
+                 max_blocks_per_seq: int):
+        self.cfg = cfg
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.allocator = BlockAllocator(num_pages)
+        self.pages, self.axes = split_params(
+            M.init_paged_cache(cfg, num_pages, page_size))
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` KV slots."""
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def max_seq_tokens(self) -> int:
+        return self.max_blocks_per_seq * self.page_size
+
+    def alloc_seq(self, n_tokens: int) -> Optional[List[int]]:
+        n = self.blocks_for(n_tokens)
+        if n > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens needs {n} pages > "
+                f"max_blocks_per_seq={self.max_blocks_per_seq}")
+        return self.allocator.alloc(n)
+
+    def extend_seq(self, blocks: List[int], n_tokens: int) -> bool:
+        """Grow ``blocks`` in place to cover ``n_tokens``; False on OOM."""
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens exceeds max_blocks_per_seq="
+                f"{self.max_blocks_per_seq}")
+        if need <= len(blocks):
+            return True
+        got = self.allocator.alloc(need - len(blocks))
+        if got is None:
+            return False
+        blocks.extend(got)
+        return True
+
+    def free_seq(self, blocks: List[int]) -> None:
+        self.allocator.free(blocks)
+        blocks.clear()
+
+    def table_row(self, blocks: List[int]) -> np.ndarray:
+        """(max_blocks_per_seq,) int32 row, scratch-padded."""
+        row = np.full((self.max_blocks_per_seq,), SCRATCH_PAGE, np.int32)
+        row[:len(blocks)] = blocks
+        return row
+
+
+# ---------------------------------------------------------------------------
+# Contiguous-cache adapters (tests + migration of running batches)
+# ---------------------------------------------------------------------------
+
+
+def _pack_layer(k: jax.Array, v: jax.Array, kp: jax.Array, vp: jax.Array,
+                block_tables: jax.Array, lengths: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter a contiguous (B, T, K, hd) cache into (P, ps, K, hd) pools.
+
+    Positions >= length are directed to the scratch page (never read)."""
+    B, T = k.shape[:2]
+    ps = kp.shape[1]
+    t = jnp.arange(T)[None, :]                       # (1, T)
+    valid = t < lengths[:, None]                     # (B, T)
+    blk = t // ps
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(blk, (B, T)), axis=1)
+    page = jnp.where(valid, page, SCRATCH_PAGE).reshape(-1)
+    slot = jnp.broadcast_to(t % ps, (B, T)).reshape(-1)
+    kf = k.reshape((B * T,) + k.shape[2:])
+    vf = v.reshape((B * T,) + v.shape[2:])
+    return kp.at[page, slot].set(kf), vp.at[page, slot].set(vf)
+
+
+def paged_from_contiguous(kv: PagedKVCache, cache: Dict[str, Any],
+                          lengths) -> List[List[int]]:
+    """Pack an ``init_cache``-shaped contiguous value tree into ``kv``.
+
+    Allocates a block run per sequence (returned as per-sequence block
+    lists) and scatters every layer's first ``lengths[b]`` KV slots into
+    the pools. The contiguous cache must be the non-sliding-window GQA
+    form (``k``/``v``/``slot_pos`` leaves) with slots 0..len-1 filled in
+    order — exactly what ``M.decode_step`` produces from position 0.
+    """
+    lengths = np.asarray(lengths)
+    all_blocks: List[List[int]] = []
+    for n in lengths.tolist():
+        blocks = kv.alloc_seq(int(n))
+        if blocks is None:
+            for b in all_blocks:
+                kv.free_seq(b)
+            raise ValueError("block pool too small for the batch")
+        all_blocks.append(blocks)
+    tables = jnp.asarray(np.stack([kv.table_row(b) for b in all_blocks]))
+    len_arr = jnp.asarray(lengths, jnp.int32)
+
+    for cont, paged in zip(cache.get("head_layers", []),
+                           kv.pages.get("head_layers", [])):
+        paged["kp"], paged["vp"] = _pack_layer(
+            cont["k"], cont["v"], paged["kp"], paged["vp"], tables, len_arr)
+    if "layers" in cache:
+        stack = kv.pages["layers"]
+        stack["kp"], stack["vp"] = jax.vmap(
+            lambda k_, v_, kp_, vp_: _pack_layer(k_, v_, kp_, vp_, tables,
+                                                 len_arr)
+        )(cache["layers"]["k"], cache["layers"]["v"],
+          stack["kp"], stack["vp"])
+    return all_blocks
+
+
+def contiguous_from_paged(kv: PagedKVCache, block_tables, lengths
+                          ) -> Dict[str, Any]:
+    """Gather the paged pools back into a contiguous value tree with
+    T = max_blocks_per_seq * page_size slots (test adapter)."""
+    tables = jnp.asarray(block_tables, jnp.int32)
+    len_arr = jnp.asarray(lengths, jnp.int32)
+    B, NB = tables.shape
+    ps = kv.page_size
+    T = NB * ps
+    pos = jnp.arange(T)[None, :]
+    slot_pos = jnp.where(pos < len_arr[:, None], pos, -1).astype(jnp.int32)
+
+    from repro.kernels.ref import gather_pages
+
+    out: Dict[str, Any] = {}
+    if "layers" in kv.pages:
+        stack = kv.pages["layers"]
+        L = stack["kp"].shape[0]
+        out["layers"] = {
+            "k": jax.vmap(lambda p: gather_pages(p, tables))(stack["kp"]),
+            "v": jax.vmap(lambda p: gather_pages(p, tables))(stack["vp"]),
+            "slot_pos": jnp.broadcast_to(slot_pos[None], (L, B, T)),
+        }
+    out["head_layers"] = [
+        {"k": gather_pages(hc["kp"], tables),
+         "v": gather_pages(hc["vp"], tables), "slot_pos": slot_pos}
+        for hc in kv.pages.get("head_layers", [])]
+    return out

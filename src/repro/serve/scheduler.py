@@ -1,0 +1,144 @@
+"""Continuous-batching scheduler (DESIGN.md §7).
+
+Policy:
+  * **FCFS admission with token-budget packing** — waiting requests are
+    admitted in arrival order while a decode lane is free, the step's
+    prefill-token budget is not exceeded (the head request always fits,
+    so a long prompt can't deadlock), and the block pool can hold the
+    prompt.
+  * **Prefill/decode interleaving** — the engine runs one prefill step
+    whenever something was admitted, otherwise one decode step over every
+    running lane; waiting work therefore never starves behind a long
+    generation, and decode lanes refill as soon as a sequence finishes.
+  * **Preempt-longest on OOM** — when a decode step cannot allocate the
+    next page, the longest running sequence is evicted (its pages freed,
+    its progress kept) and re-queued at the head of the waiting line for
+    recompute-style re-admission; eviction repeats until the allocation
+    succeeds or the requester itself was evicted.
+
+The scheduler owns no device state: it mutates :class:`RequestHandle`s
+and the :class:`PagedKVCache` allocator, and tells the engine what kind
+of step to run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from .api import FINISHED, RUNNING, WAITING, RequestHandle
+from .kv_cache import PagedKVCache
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int                 # decode lanes
+    token_budget: int = 512        # prompt tokens admitted per prefill step
+
+
+class Scheduler:
+    def __init__(self, kv: PagedKVCache, cfg: SchedulerConfig):
+        self.kv = kv
+        self.cfg = cfg
+        self.waiting: Deque[RequestHandle] = deque()
+        self.running: Dict[int, RequestHandle] = {}   # slot -> request
+        self._free_slots: List[int] = list(range(cfg.max_batch - 1, -1, -1))
+
+    # --- queue management -------------------------------------------
+
+    def submit(self, req: RequestHandle) -> None:
+        need = self.kv.blocks_for(len(req.prompt) + req.max_new)
+        if need > self.kv.max_blocks_per_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new = "
+                f"{len(req.prompt) + req.max_new} tokens needs {need} pages "
+                f"> max_blocks_per_seq={self.kv.max_blocks_per_seq}")
+        if need > self.kv.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid} can never fit: needs {need} pages, "
+                f"pool holds {self.kv.allocator.capacity}")
+        req.status = WAITING
+        self.waiting.append(req)
+
+    def admit(self) -> List[RequestHandle]:
+        """FCFS admission: pop waiting requests into free lanes while the
+        token budget and the block pool allow. Returns the newly admitted
+        requests (their pages + lanes assigned, ready to prefill)."""
+        admitted: List[RequestHandle] = []
+        budget = self.cfg.token_budget
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            n_tokens = req.ctx_len()
+            if admitted and n_tokens > budget:
+                break                         # packed enough for this step
+            blocks = self.kv.alloc_seq(n_tokens)
+            if blocks is None:
+                break                         # pool full — decode/finish first
+            self.waiting.popleft()
+            req.blocks = blocks
+            req.slot = self._free_slots.pop()
+            req.base_len = n_tokens
+            req.status = RUNNING
+            self.running[req.slot] = req
+            budget -= n_tokens
+            admitted.append(req)
+        return admitted
+
+    # --- decode capacity / preemption -------------------------------
+
+    def _evict_longest(self, exclude: Optional[RequestHandle] = None
+                       ) -> Optional[RequestHandle]:
+        cands = [r for r in self.running.values() if r is not exclude]
+        if not cands:
+            return None
+        victim = max(cands, key=lambda r: (r.ctx_len(), r.rid))
+        self._release(victim)
+        victim.status = WAITING
+        victim.n_preempt += 1
+        self.waiting.appendleft(victim)       # keeps its FCFS priority
+        return victim
+
+    def ensure_decode_capacity(self, k: int = 1) -> List[RequestHandle]:
+        """Grow every running sequence's block run to cover its next ``k``
+        tokens, preempting the longest sequence on pool OOM. Returns the
+        preempted requests."""
+        preempted: List[RequestHandle] = []
+        for req in sorted(self.running.values(), key=lambda r: r.rid):
+            if req.slot not in self.running:   # evicted by an earlier loop
+                continue
+            # writes land at positions ctx_len-1 .. ctx_len+k-2
+            need = min(req.ctx_len() + k - 1, self.kv.max_seq_tokens())
+            while not self.kv.extend_seq(req.blocks, need):
+                victim = self._evict_longest(exclude=None)
+                assert victim is not None, "no victim but allocation failed"
+                preempted.append(victim)
+                if victim is req:
+                    break                      # evicted itself; skip decode
+        return preempted
+
+    # --- completion --------------------------------------------------
+
+    def _release(self, req: RequestHandle) -> None:
+        self.kv.free_seq(req.blocks)
+        self._free_slots.append(req.slot)
+        del self.running[req.slot]
+        req.slot = None
+
+    def finish(self, req: RequestHandle) -> None:
+        self._release(req)
+        req.status = FINISHED
+
+    # --- introspection ----------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def check_invariants(self) -> None:
+        """Block-accounting invariants (exercised by the tests)."""
+        held = [p for r in self.running.values() for p in r.blocks]
+        assert len(held) == len(set(held)), "page handed out twice"
+        assert self.kv.allocator.num_free + len(held) \
+            == self.kv.allocator.capacity, "block leak"
+        lanes = set(self.running) | set(self._free_slots)
+        assert lanes == set(range(self.cfg.max_batch)), "lane leak"

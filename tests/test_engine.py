@@ -220,3 +220,26 @@ def test_strategies_registry_and_bundle_contract():
     state = tr.init_state(values)
     state, rec = tr.run_round(state, batch)
     assert state.step == 1 and rec["bits"] == rec["bits_baseline_cumulative"]
+
+
+def test_metrics_sink_async_flush(tmp_path):
+    """The jsonl sink buffers writes on a background thread: emit() never
+    blocks on file I/O, flush() is a barrier, close() drains everything."""
+    import json
+
+    from repro.launch.engine import MetricsSink
+
+    path = tmp_path / "metrics.jsonl"
+    lines_printed = []
+    sink = MetricsSink(str(path), log_every=50,
+                       printer=lines_printed.append)
+    for i in range(200):
+        sink.emit({"step": i, "loss": float(i)})
+    sink.flush()
+    assert len(path.read_text().splitlines()) == 200
+    sink.emit({"step": 200, "loss": 0.5})
+    sink.close()
+    records = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(records) == 201 and records[-1]["step"] == 200
+    assert lines_printed and lines_printed[0].startswith("step ")
+    sink.close()                       # idempotent

@@ -109,6 +109,61 @@ def test_decode_attention_sweep(B, H, K, T, dtype):
                                atol=tol)
 
 
+@pytest.mark.parametrize("B,H,K,P,ps,NB", [(2, 8, 4, 16, 8, 4),
+                                           (3, 4, 4, 32, 16, 3),
+                                           (1, 16, 2, 8, 8, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(B, H, K, P, ps, NB, dtype):
+    """Pallas paged kernel (scalar-prefetch block-table gather) vs the
+    gather-then-attend oracle, mixed lengths incl. an idle lane."""
+    hd = 64
+    key = jax.random.fold_in(KEY, B * P * ps)
+    q = jax.random.normal(key, (B, H, hd)).astype(dtype)
+    kp = jax.random.normal(jax.random.fold_in(key, 1),
+                           (P, ps, K, hd)).astype(dtype)
+    vp = jax.random.normal(jax.random.fold_in(key, 2),
+                           (P, ps, K, hd)).astype(dtype)
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), P - 1) + 1
+    bt = perm[:B * NB].reshape(B, NB).astype(jnp.int32)
+    lengths = (jax.random.randint(jax.random.fold_in(key, 4), (B,), 1,
+                                  NB * ps + 1)
+               .at[0].set(0).astype(jnp.int32))   # lane 0 idle
+    from repro.kernels.decode_attention import paged_decode_attention
+    out = paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    exp = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol,
+                               atol=tol)
+
+
+def test_scale_rows_backend_dispatch():
+    """The server-side CGC filter's row-scaling pass: the Pallas
+    ``scale_rows`` streaming kernel (interpret mode here) matches plain
+    jnp through the ``REPRO_SCALE_BACKEND`` switch, and the protocol's
+    ``cgc_filter`` rides the same dispatch."""
+    from repro.core.cgc import cgc_filter
+    G = jax.random.normal(KEY, (13, 1000)) * \
+        jnp.arange(1, 14)[:, None]
+    scale = jax.random.uniform(jax.random.fold_in(KEY, 1), (13,))
+    assert ops.scale_backend() in ("jnp", "pallas")
+    try:
+        ops.set_scale_backend("jnp")
+        want = np.asarray(ops.scale_rows(G, scale))
+        filt_want = np.asarray(cgc_filter(G, 3))
+        ops.set_scale_backend("pallas")
+        got = np.asarray(ops.scale_rows(G, scale))
+        filt_got = np.asarray(cgc_filter(G, 3))
+    finally:
+        ops.set_scale_backend("auto")
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(filt_got, filt_want, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(filt_want, np.asarray(ref.cgc_clip_ref(G, 3)),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        ops.set_scale_backend("nope")
+
+
 def test_decode_attention_fully_masked_row_safe():
     B, H, K, T, hd = 1, 4, 2, 128, 32
     q = jax.random.normal(KEY, (B, H, hd))

@@ -1,0 +1,282 @@
+"""repro.serve: paged-vs-contiguous consistency, scheduler invariants,
+end-to-end continuous-batching smoke (DESIGN.md §7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.kernels import ops, ref
+from repro.models import model as M
+from repro.models.nn import split_params
+from repro.serve import (BlockAllocator, PagedKVCache, ServeConfig,
+                         ServeEngine, contiguous_from_paged,
+                         paged_from_contiguous)
+
+CFG = reduced(get_config("qwen3-0.6b"))
+KEY = jax.random.PRNGKey(0)
+
+
+def _params():
+    return M.init_params(CFG, KEY)
+
+
+def _values():
+    return split_params(_params())[0]
+
+
+def _ref_greedy(values, prompt, gen):
+    """Per-request contiguous-cache greedy decode (the serving oracle)."""
+    cache, _ = split_params(M.init_cache(CFG, 1, len(prompt) + gen))
+    step = jax.jit(lambda v, c, t, p: M.decode_step(v, CFG, c, t, p))
+    for t, tok in enumerate(prompt):
+        logits, cache = step(values, cache,
+                             jnp.asarray([[tok]], jnp.int32),
+                             jnp.asarray([t], jnp.int32))
+    out = [int(jnp.argmax(logits[0]))]
+    for i in range(gen - 1):
+        logits, cache = step(values, cache,
+                             jnp.asarray([[out[-1]]], jnp.int32),
+                             jnp.asarray([len(prompt) + i], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged vs contiguous decode consistency
+# ---------------------------------------------------------------------------
+
+
+def test_paged_attention_ref_bitwise_vs_contiguous():
+    """The jnp paged backend IS the contiguous reference on the gathered
+    block-table view — bitwise, including fully-masked lanes."""
+    B, H, K, hd, P, ps, NB = 3, 8, 4, 32, 16, 8, 5
+    q = jax.random.normal(KEY, (B, H, hd))
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1), (P, ps, K, hd))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2), (P, ps, K, hd))
+    bt = jnp.asarray([[1, 2, 3, 0, 0], [4, 5, 0, 0, 0],
+                      [6, 7, 8, 9, 10]], jnp.int32)
+    lengths = jnp.asarray([19, 0, 40], jnp.int32)
+
+    k = ref.gather_pages(kp, bt)
+    v = ref.gather_pages(vp, bt)
+    mask = jnp.arange(NB * ps)[None, :] < lengths[:, None]
+    want = np.array(ref.decode_attention_ref(q, k, v, mask))
+    want[1] = 0.0                                   # inactive lane zeroed
+
+    ops.set_paged_attn_backend("jnp")
+    try:
+        got = np.asarray(ops.paged_decode_attention(q, kp, vp, bt, lengths))
+    finally:
+        ops.set_paged_attn_backend("auto")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_paged_attention_backends_allclose():
+    """Pallas (interpret) vs jnp paged backends agree to 1e-5."""
+    B, H, K, hd, P, ps = 2, 8, 2, 64, 12, 16
+    q = jax.random.normal(KEY, (B, H, hd))
+    kp = jax.random.normal(jax.random.fold_in(KEY, 3), (P, ps, K, hd))
+    vp = jax.random.normal(jax.random.fold_in(KEY, 4), (P, ps, K, hd))
+    bt = jnp.asarray([[3, 1, 7, 0], [2, 5, 9, 11]], jnp.int32)
+    lengths = jnp.asarray([50, 17], jnp.int32)
+    outs = {}
+    try:
+        for backend in ("jnp", "pallas"):
+            ops.set_paged_attn_backend(backend)
+            outs[backend] = np.asarray(
+                ops.paged_decode_attention(q, kp, vp, bt, lengths))
+    finally:
+        ops.set_paged_attn_backend("auto")
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"], rtol=1e-5,
+                               atol=1e-5)
+    with pytest.raises(ValueError):
+        ops.set_paged_attn_backend("nope")
+
+
+def test_paged_decode_matches_contiguous_mixed_lengths():
+    """Model-level: paged decode_step tracks the contiguous decode_step
+    across a mixed-length batch (one lane goes inactive mid-stream)."""
+    B, S, ps, NB = 3, 24, 8, 3
+    values = _values()
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 9), (B, S), 0,
+                                CFG.vocab_size, jnp.int32)
+    cache, _ = split_params(M.init_cache(CFG, B, NB * ps))
+    pcache, _ = split_params(M.init_paged_cache(CFG, 16, ps))
+    bt = jnp.asarray([[1, 2, 3], [4, 5, 6], [7, 8, 9]], jnp.int32)
+    step = jax.jit(lambda v, c, t, p: M.decode_step(v, CFG, c, t, p))
+    pstep = jax.jit(lambda v, c, t, p, b: M.decode_step(
+        v, CFG, c, t, p, block_tables=b))
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        l1, cache = step(values, cache, tokens[:, t:t + 1], pos)
+        ppos = pos.at[1].set(-1) if t >= 10 else pos
+        l2, pcache = pstep(values, pcache, tokens[:, t:t + 1], ppos, bt)
+        active = np.asarray([0, 2]) if t >= 10 else np.asarray([0, 1, 2])
+        np.testing.assert_allclose(np.asarray(l1)[active],
+                                   np.asarray(l2)[active],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_contiguous_adapters_roundtrip():
+    """Pack a warm contiguous cache into pages, decode one more token on
+    both paths, and gather the pages back out."""
+    B, T, ps = 2, 16, 4
+    values = _values()
+    lengths = [11, 5]
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 5), (B, T), 0,
+                                CFG.vocab_size, jnp.int32)
+    cache, _ = split_params(M.init_cache(CFG, B, T))
+    step = jax.jit(lambda v, c, t, p: M.decode_step(v, CFG, c, t, p))
+    for t in range(max(lengths)):
+        pos = jnp.asarray([t if t < n else n - 1 for n in lengths],
+                          jnp.int32)
+        # shorter lane re-writes its last slot; we only compare the
+        # longer lane plus the short lane's first `len` slots below
+        logits, cache = step(values, cache, tokens[:, t:t + 1], pos)
+
+    kv = PagedKVCache(CFG, num_pages=16, page_size=ps,
+                      max_blocks_per_seq=T // ps)
+    blocks = paged_from_contiguous(kv, cache, lengths)
+    assert len(blocks) == B
+    assert kv.allocator.num_free == kv.allocator.capacity \
+        - sum(len(b) for b in blocks)
+
+    tables = jnp.asarray(np.stack([kv.table_row(b) for b in blocks]))
+    back = contiguous_from_paged(kv, tables, lengths)
+    for b, n in enumerate(lengths):
+        np.testing.assert_array_equal(
+            np.asarray(back["layers"]["k"][:, b, :n]),
+            np.asarray(cache["layers"]["k"][:, b, :n]))
+        np.testing.assert_array_equal(
+            np.asarray(back["layers"]["slot_pos"][:, b, :n]),
+            np.asarray(cache["layers"]["slot_pos"][:, b, :n]))
+
+    # the packed pages decode the next token identically
+    nxt = jnp.asarray([[3], [7]], jnp.int32)
+    l_cont, _ = step(values, cache, nxt, jnp.asarray(lengths, jnp.int32))
+    pstep = jax.jit(lambda v, c, t, p, b: M.decode_step(
+        v, CFG, c, t, p, block_tables=b))
+    l_paged, _ = pstep(values, kv.pages, nxt,
+                       jnp.asarray(lengths, jnp.int32), tables)
+    np.testing.assert_allclose(np.asarray(l_cont), np.asarray(l_paged),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Allocator / scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+def test_block_allocator_invariants():
+    a = BlockAllocator(8)
+    assert a.capacity == 7
+    assert a.alloc(0) == [] and a.num_free == 7   # no page aliasing
+    got = a.alloc(3)
+    assert len(got) == 3 and 0 not in got
+    assert a.alloc(5) is None and a.num_free == 4   # failed alloc: no change
+    a.free(got)
+    assert a.num_free == 7
+    with pytest.raises(ValueError):
+        a.free([got[0]])                            # double free
+    with pytest.raises(ValueError):
+        a.free([0])                                 # scratch page
+    with pytest.raises(ValueError):
+        BlockAllocator(1)
+
+
+def test_scheduler_no_leaks_across_admit_preempt_free():
+    """Tiny pool forces preemption; every request drains and every page
+    returns to the free list."""
+    params = _params()
+    engine = ServeEngine(CFG, params, ServeConfig(
+        max_batch=2, page_size=4, num_pages=6, max_blocks_per_seq=4,
+        token_budget=64, decode_quantum=4, log_every=10 ** 9))
+    rng = np.random.default_rng(1)
+    handles = [engine.submit(rng.integers(0, CFG.vocab_size, size=8).tolist(),
+                             max_new=8) for _ in range(3)]
+    while engine.sched.has_work:
+        engine.step()
+        engine.sched.check_invariants()
+    engine.close()
+    assert all(h.done for h in handles)
+    assert all(len(h.tokens) == 8 for h in handles)
+    assert sum(h.n_preempt for h in handles) >= 1
+    assert engine.kv.allocator.num_free == engine.kv.allocator.capacity
+
+
+def test_submit_rejects_oversized_request():
+    engine = ServeEngine(CFG, _params(), ServeConfig(
+        max_batch=1, page_size=4, num_pages=4, max_blocks_per_seq=2))
+    with pytest.raises(ValueError):
+        engine.submit(list(range(4)), max_new=8)    # needs 3 pages > 2
+    engine.close()
+
+
+def test_paged_serving_rejects_unsupported_configs():
+    with pytest.raises(ValueError):
+        ServeEngine(reduced(get_config("zamba2-2.7b")), None, ServeConfig())
+    with pytest.raises(ValueError):
+        ServeEngine(reduced(get_config("minicpm3-4b")), None, ServeConfig())
+    with pytest.raises(ValueError):
+        M.init_paged_cache(reduced(get_config("xlstm-125m")), 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: continuous batching == per-request greedy reference
+# ---------------------------------------------------------------------------
+
+
+def test_engine_end_to_end_mixed_prompts_matches_reference():
+    values = _values()
+    rng = np.random.default_rng(0)
+    cases = [(5, 6), (12, 9), (3, 6), (20, 3), (9, 12)]
+    prompts = [rng.integers(0, CFG.vocab_size, size=p).tolist()
+               for p, _ in cases]
+    refs = [_ref_greedy(values, p, g)
+            for p, (_, g) in zip(prompts, cases)]
+
+    engine = ServeEngine(CFG, _params(), ServeConfig(
+        max_batch=3, page_size=8, num_pages=32, max_blocks_per_seq=6,
+        token_budget=64, log_every=10 ** 9))
+    handles = [engine.submit(p, max_new=g)
+               for p, (_, g) in zip(prompts, cases)]
+    done = engine.drain(max_steps=500)
+    engine.sched.check_invariants()
+    engine.close()
+    assert len(done) == len(handles)
+    for h, want in zip(handles, refs):
+        assert h.done and h.tokens == want, (h.rid, h.tokens, want)
+
+
+def test_engine_eos_stops_early():
+    values = _values()
+    prompt = [7, 11, 13, 17, 19]
+    full = _ref_greedy(values, prompt, 12)
+    eos = full[3]                    # force a stop after 4 tokens
+    cut = full.index(eos) + 1
+    engine = ServeEngine(CFG, _params(), ServeConfig(
+        max_batch=2, page_size=8, num_pages=16, max_blocks_per_seq=4,
+        log_every=10 ** 9))
+    h = engine.submit(prompt, max_new=12, eos=eos)
+    engine.drain(max_steps=100)
+    engine.close()
+    assert h.done and h.tokens == full[:cut]
+    assert engine.kv.allocator.num_free == engine.kv.allocator.capacity
+
+
+def test_engine_metrics_jsonl(tmp_path):
+    path = tmp_path / "serve.jsonl"
+    engine = ServeEngine(CFG, _params(), ServeConfig(
+        max_batch=2, page_size=8, num_pages=16, max_blocks_per_seq=4,
+        metrics_path=str(path), log_every=10 ** 9))
+    engine.submit([1, 2, 3], max_new=4)
+    engine.drain(max_steps=100)
+    summary = engine.summary()
+    engine.close()
+    import json
+    records = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(records) == summary["steps"] and records
+    assert {"step", "kind", "generated", "tokens_per_s"} <= set(records[0])
+    assert summary["tokens_generated"] == 4
+    assert summary["completed"] == 1 and summary["latency_p50_s"] > 0
