@@ -1,150 +1,38 @@
-"""Serving throughput benchmark: continuous batching vs fixed batches.
+"""Serving throughput benchmark — a thin shim over ``repro.serve.bench``.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--requests 16 ...]
 
-Drives a synthetic Poisson arrival trace of mixed-length requests (short
-generations with a heavy tail — the shape real traffic has) through two
-backends over the SAME reduced model:
+The implementation (Poisson trace, fixed-batch baseline, continuous
+engine run, >= 2x acceptance gate) lives in ``repro.serve.bench``; like
+the other legacy entry points this script emits one DeprecationWarning
+and adapts its flags into a RunConfig for ``repro.run.bench`` — the
+facade the unified CLI drives:
 
-  fixed      the old path: requests grouped into fixed batches in arrival
-             order; each batch prefills (step-wise) then runs
-             ``greedy_decode`` until the LONGEST member finishes, so
-             short sequences burn decode steps on padding.
-  continuous ``repro.serve.ServeEngine``: paged KV cache + FCFS
-             continuous batching; finished sequences free their lane and
-             pages immediately.
-
-Reports tokens/s (useful generated tokens / wall time) and per-request
-p50/p99 latency from arrival, plus the continuous/fixed speedup — the
-acceptance gate is >= 2x on the staggered trace.
+    python -m repro bench --config job.json      # needs a `bench` section
 """
 from __future__ import annotations
 
 import argparse
-import time
-from typing import List
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config, reduced
-from repro.launch.serve import greedy_decode, make_serve_step
-from repro.models import model as M
-from repro.models.nn import split_params
-from repro.serve import ServeConfig, ServeEngine
 
 
-def make_trace(n: int, prompt_len: int, gen_short: int, gen_long: int,
-               rate: float, seed: int):
-    """Poisson arrivals; 1-in-4 requests carries the long generation (the
-    heavy-tailed staggering that makes fixed batches burn padding steps).
-    Prompts share one length so the fixed baseline's contiguous-cache
-    prefill stays well-defined; the engine handles ragged prompts too
-    (tests/test_serve.py)."""
-    rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
-    reqs = []
-    for i in range(n):
-        gen = gen_long if i % 4 == 3 else gen_short
-        prompt = rng.integers(0, 500, size=prompt_len).tolist()
-        reqs.append((float(arrivals[i]), prompt, gen))
-    return reqs
-
-
-from repro.serve.api import _percentile as _pct  # noqa: E402
-
-
-def run_fixed(cfg, values, trace, batch: int):
-    """Arrival-order fixed batches; each decodes to its longest member."""
-    serve_step, _ = make_serve_step(cfg, None, batch)
-    step_jit = jax.jit(serve_step)
-    decode_jit = jax.jit(
-        lambda v, c, f, s, n: greedy_decode(cfg, v, c, f, s, n, serve_step),
-        static_argnums=(4,))
-    # warm the executables (steady-state throughput, both backends)
-    P = len(trace[0][1])
-    max_g = max(g for _, _, g in trace)
-    wcache, _ = split_params(M.init_cache(cfg, batch, P + max_g))
-    wtok = jnp.zeros((batch, 1), jnp.int32)
-    logits, wcache = step_jit(values, wcache, wtok,
-                              jnp.zeros((batch,), jnp.int32))
-    jax.block_until_ready(decode_jit(values, wcache, wtok,
-                                     jnp.ones((batch,), jnp.int32), max_g))
-
-    t0 = time.perf_counter()
-    done_at: List[float] = []
-    arrive = [a for a, _, _ in trace]
-    useful = 0
-    for lo in range(0, len(trace), batch):
-        group = trace[lo:lo + batch]
-        B = len(group)
-        P = len(group[0][1])                 # uniform prompt length
-        max_g = max(g for _, _, g in group)  # batch decodes to its longest
-        # a fixed batch can only launch once its LAST member has arrived
-        # (same arrival clock the continuous engine is gated on)
-        wait = max(a for a, _, _ in group) - (time.perf_counter() - t0)
-        if wait > 0:
-            time.sleep(wait)
-        tokens = jnp.asarray(np.stack([p for _, p, _ in group]))
-        cache, _ = split_params(M.init_cache(cfg, B, P + max_g))
-        logits = None
-        for t in range(P):
-            logits, cache = step_jit(values, cache, tokens[:, t:t + 1],
-                                     jnp.full((B,), t, jnp.int32))
-        first = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        toks, _ = decode_jit(values, cache, first,
-                             jnp.full((B,), P, jnp.int32), max_g)
-        jax.block_until_ready(toks)
-        end = time.perf_counter() - t0
-        # every member waits for the batch's longest: latency from arrival
-        for _, _, g in group:
-            useful += g                      # tokens the caller asked for
-            done_at.append(end)
-    wall = time.perf_counter() - t0
-    lats = [d - a for d, a in zip(done_at, arrive)]
-    return {"tokens": useful, "wall_s": wall,
-            "tokens_per_s": useful / wall,
-            "latency_p50_s": _pct(lats, 50), "latency_p99_s": _pct(lats, 99)}
-
-
-def run_continuous(cfg, params, trace, batch: int, page_size: int,
-                   num_pages: int):
-    max_tokens = max(len(p) + g for _, p, g in trace)
-    engine = ServeEngine(cfg, params, ServeConfig(
-        max_batch=batch, page_size=page_size, num_pages=num_pages,
-        max_blocks_per_seq=-(-max_tokens // page_size),
-        token_budget=4 * max(len(p) for _, p, _ in trace),
-        log_every=10 ** 9))
-    # warm the prefill bucket + decode quantum executables
-    for _, prompt, _ in trace[:batch]:
-        engine.submit(prompt, max_new=2 * engine.serve.decode_quantum)
-    engine.drain()
-
-    t0 = time.perf_counter()
-    pending = list(trace)
-    handles = []
-    while pending or engine.sched.has_work:
-        now = time.perf_counter() - t0
-        while pending and pending[0][0] <= now:
-            _, prompt, gen = pending.pop(0)
-            handles.append(engine.submit(prompt, max_new=gen))
-        if engine.sched.has_work:
-            engine.step()
-        elif pending:
-            time.sleep(min(pending[0][0] - now, 0.01))
-    wall = time.perf_counter() - t0
-    preempts = engine.metrics.preemptions
-    engine.close()
-    tokens = sum(len(h.tokens) for h in handles)
-    lats = [h.latency for h in handles]
-    return {"tokens": tokens, "wall_s": wall,
-            "tokens_per_s": tokens / wall,
-            "latency_p50_s": _pct(lats, 50), "latency_p99_s": _pct(lats, 99),
-            "preemptions": preempts}
+def config_from_flags(args) -> "run.RunConfig":
+    """Legacy bench flags -> the equivalent RunConfig job tree."""
+    from repro import run
+    return run.RunConfig(
+        name=f"{args.arch}-bench",
+        model=run.ModelSpec(arch=args.arch),
+        mesh=run.MeshSpec(devices=0),
+        bench=run.BenchSpec(
+            requests=args.requests, batch=args.batch,
+            prompt_len=args.prompt_len, gen_short=args.gen_short,
+            gen_long=args.gen_long, rate=args.rate,
+            page_size=args.page_size, num_pages=args.num_pages,
+            seed=args.seed))
 
 
 def main(argv=None):
+    from repro.run import facade
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--requests", type=int, default=16)
@@ -159,25 +47,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = reduced(get_config(args.arch))
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    values, _ = split_params(params)
-    trace = make_trace(args.requests, args.prompt_len, args.gen_short,
-                       args.gen_long, args.rate, args.seed)
-
-    fixed = run_fixed(cfg, values, trace, args.batch)
-    cont = run_continuous(cfg, params, trace, args.batch, args.page_size,
-                          args.num_pages)
-    speedup = cont["tokens_per_s"] / fixed["tokens_per_s"]
-
-    print(f"arch={cfg.name} requests={args.requests} batch={args.batch} "
-          f"gen={args.gen_short}/{args.gen_long} rate={args.rate}/s")
-    for name, r in (("fixed", fixed), ("continuous", cont)):
-        print(f"  {name:10s} {r['tokens']:5d} tok  "
-              f"{r['tokens_per_s']:8.1f} tok/s  "
-              f"p50={r['latency_p50_s']:.2f}s p99={r['latency_p99_s']:.2f}s")
-    print(f"  continuous/fixed tokens/s: {speedup:.2f}x")
-    return {"fixed": fixed, "continuous": cont, "speedup": speedup}
+    facade.warn_legacy("benchmarks/serve_bench.py", "python -m repro bench")
+    return facade.bench(config_from_flags(args)).summary
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Echo-CGC reproduction grown into a jax/Pallas training+serving stack.
+
+Public entry points:
+
+    repro.run            declarative job API (RunConfig + registries +
+                         train/serve/dryrun/bench facades)
+    python -m repro      unified CLI over job files (see README.md)
+
+Subsystems (DESIGN.md): ``core`` paper math, ``models`` LM substrate,
+``dist`` sharding + collectives, ``kernels`` Pallas, ``launch`` engine +
+legacy CLIs, ``serve`` continuous batching, ``checkpoint`` snapshots.
+"""
+
+__version__ = "0.1.0"

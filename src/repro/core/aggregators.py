@@ -10,33 +10,39 @@ protocol simulator and the benchmarks can swap them freely:
 Conventions: CGC returns the filtered *sum* (paper line 44); the others
 return a mean-scale vector. ``repro.dist.collectives.AGG_FNS`` re-derives
 the same aggregators (same name, same scale) as shard_map collectives over
-the worker axes for the distributed trainer.
+the worker axes for the distributed trainer. ``AGGREGATORS`` is the shared
+plugin registry (``repro.run.registry``): a new aggregator is one
+``@AGGREGATORS.register("name")`` function.
 """
 from __future__ import annotations
-
-from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.run.registry import AGGREGATORS
+
 from .cgc import cgc_aggregate, cgc_filter
 
 
+@AGGREGATORS.register("mean")
 def mean(G: jax.Array, f: int = 0) -> jax.Array:
     """Fault-intolerant baseline: plain average (times n to match CGC sum)."""
     return jnp.mean(G, axis=0)
 
 
+@AGGREGATORS.register("cgc")
 def cgc_sum(G: jax.Array, f: int) -> jax.Array:
     """The paper's aggregation: CGC filter then sum (Gupta-Vaidya)."""
     return cgc_aggregate(G, f)
 
 
+@AGGREGATORS.register("cgc_mean")
 def cgc_mean(G: jax.Array, f: int) -> jax.Array:
     """CGC filter then mean — scale-compatible with the other baselines."""
     return cgc_aggregate(G, f) / G.shape[0]
 
 
+@AGGREGATORS.register("krum")
 def krum(G: jax.Array, f: int) -> jax.Array:
     """Krum (Blanchard et al., NeurIPS'17).
 
@@ -52,6 +58,7 @@ def krum(G: jax.Array, f: int) -> jax.Array:
     return G[jnp.argmin(scores)]
 
 
+@AGGREGATORS.register("multi_krum")
 def multi_krum(G: jax.Array, f: int, m: int | None = None) -> jax.Array:
     """Multi-Krum: average the m best-scored gradients."""
     n = G.shape[0]
@@ -64,11 +71,13 @@ def multi_krum(G: jax.Array, f: int, m: int | None = None) -> jax.Array:
     return jnp.mean(G[best], axis=0)
 
 
+@AGGREGATORS.register("median")
 def coordinate_median(G: jax.Array, f: int = 0) -> jax.Array:
     """Coordinate-wise median (Yin et al. / Chen-Su-Xu [6] family)."""
     return jnp.median(G, axis=0)
 
 
+@AGGREGATORS.register("trimmed_mean")
 def trimmed_mean(G: jax.Array, f: int) -> jax.Array:
     """Coordinate-wise f-trimmed mean: drop the f largest and f smallest
     entries per coordinate, average the rest. Requires n > 2f."""
@@ -80,6 +89,7 @@ def trimmed_mean(G: jax.Array, f: int) -> jax.Array:
     return jnp.mean(kept, axis=0)
 
 
+@AGGREGATORS.register("geometric_median")
 def geometric_median(G: jax.Array, f: int = 0, iters: int = 32,
                      eps: float = 1e-8) -> jax.Array:
     """Weiszfeld iterations for the geometric median (RFA-style)."""
@@ -94,13 +104,3 @@ def geometric_median(G: jax.Array, f: int = 0, iters: int = 32,
     return z
 
 
-AGGREGATORS: Dict[str, Callable] = {
-    "mean": mean,
-    "cgc": cgc_sum,
-    "cgc_mean": cgc_mean,
-    "krum": krum,
-    "multi_krum": multi_krum,
-    "median": coordinate_median,
-    "trimmed_mean": trimmed_mean,
-    "geometric_median": geometric_median,
-}

@@ -13,6 +13,8 @@ described by *what each Byzantine worker broadcasts in its slot*:
 
 An ``Attack`` maps (key, honest_grads, byz_mask, w, true_grad) -> per-worker
 raw vectors plus optional echo-forging flags, consumed by the protocol.
+``ATTACKS`` is the shared plugin registry (``repro.run.registry``): a new
+attack is one ``@ATTACKS.register("name")`` function.
 """
 from __future__ import annotations
 
@@ -21,6 +23,8 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.run.registry import ATTACKS
 
 from .types import MSG_ECHO, MSG_RAW, MSG_SILENT
 
@@ -60,12 +64,14 @@ def _default_plan(n: int, d: int, raw: jax.Array) -> AttackPlan:
     )
 
 
+@ATTACKS.register("none")
 def no_attack(key, honest, byz_mask, w, true_grad) -> AttackPlan:
     """Byzantine workers behave honestly (sanity baseline)."""
     n, d = honest.shape
     return _default_plan(n, d, honest)
 
 
+@ATTACKS.register("sign_flip")
 def sign_flip(key, honest, byz_mask, w, true_grad, scale: float = 1.0
               ) -> AttackPlan:
     """Send -scale * g_j: reverses descent, classic Byzantine SGD attack."""
@@ -73,6 +79,7 @@ def sign_flip(key, honest, byz_mask, w, true_grad, scale: float = 1.0
     return _default_plan(n, d, -scale * honest)
 
 
+@ATTACKS.register("large_norm")
 def large_norm(key, honest, byz_mask, w, true_grad, scale: float = 100.0
                ) -> AttackPlan:
     """Blow up the magnitude — what norm-clipping filters (CGC) neutralise."""
@@ -80,6 +87,7 @@ def large_norm(key, honest, byz_mask, w, true_grad, scale: float = 100.0
     return _default_plan(n, d, -scale * honest)
 
 
+@ATTACKS.register("random_gauss")
 def random_gauss(key, honest, byz_mask, w, true_grad, scale: float = 1.0
                  ) -> AttackPlan:
     """Random Gaussian junk scaled to the mean honest norm."""
@@ -89,6 +97,7 @@ def random_gauss(key, honest, byz_mask, w, true_grad, scale: float = 1.0
     return _default_plan(n, d, scale * mean_norm * noise)
 
 
+@ATTACKS.register("mean_shift")
 def mean_shift(key, honest, byz_mask, w, true_grad, z: float = 1.5
                ) -> AttackPlan:
     """"A Little Is Enough"-style attack (Baruch et al.):
@@ -107,6 +116,7 @@ def mean_shift(key, honest, byz_mask, w, true_grad, z: float = 1.5
     return _default_plan(n, d, jnp.broadcast_to(bogus, (n, d)))
 
 
+@ATTACKS.register("inner_product")
 def inner_product(key, honest, byz_mask, w, true_grad, eps: float = 0.1
                   ) -> AttackPlan:
     """Inner-product-manipulation attack (Xie et al.): send -eps * true_grad.
@@ -118,6 +128,7 @@ def inner_product(key, honest, byz_mask, w, true_grad, eps: float = 0.1
     return _default_plan(n, d, jnp.broadcast_to(-eps * true_grad, (n, d)))
 
 
+@ATTACKS.register("forged_echo")
 def forged_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 50.0
                 ) -> AttackPlan:
     """Echo-specific attack: forge (k, x, I).
@@ -141,6 +152,7 @@ def forged_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 50.0
         echo_ref=ref)
 
 
+@ATTACKS.register("poisoned_echo")
 def poisoned_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 25.0
                   ) -> AttackPlan:
     """Echo attack with a *valid* reference set but inflated norm ratio k.
@@ -159,22 +171,10 @@ def poisoned_echo(key, honest, byz_mask, w, true_grad, k_scale: float = 25.0
         echo_ref=ref)
 
 
+@ATTACKS.register("crash")
 def crash(key, honest, byz_mask, w, true_grad) -> AttackPlan:
     """Silent workers — the server times them out (synchronous model)."""
     n, d = honest.shape
     plan = _default_plan(n, d, honest)
     return dataclasses.replace(plan, mode=jnp.full((n,), MSG_SILENT,
                                                    jnp.int32))
-
-
-ATTACKS = {
-    "none": no_attack,
-    "sign_flip": sign_flip,
-    "large_norm": large_norm,
-    "random_gauss": random_gauss,
-    "mean_shift": mean_shift,
-    "inner_product": inner_product,
-    "forged_echo": forged_echo,
-    "poisoned_echo": poisoned_echo,
-    "crash": crash,
-}

@@ -29,12 +29,13 @@ fused Pallas streaming pass on TPU (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cgc import cgc_scales, cgc_threshold
+from repro.run.registry import COLLECTIVE_AGGREGATORS
 
 F32 = jnp.float32
 
@@ -116,6 +117,7 @@ def tree_norm(grads) -> jax.Array:
     return jnp.sqrt(tree_sq_norm(grads))
 
 
+@COLLECTIVE_AGGREGATORS.register("cgc")
 def aggregate_pytree_cgc_sum(grads, axes: Sequence[str], f: int):
     """CGC filtered *sum* over the worker axes (== cgc_sum on the table).
 
@@ -136,6 +138,7 @@ def aggregate_pytree_cgc_sum(grads, axes: Sequence[str], f: int):
     return agg, diags
 
 
+@COLLECTIVE_AGGREGATORS.register("cgc_mean")
 def aggregate_pytree_cgc(grads, axes: Sequence[str], f: int):
     """CGC filter + *mean* (scale-compatible with the other pytree fns)."""
     axes = tuple(axes)
@@ -144,6 +147,7 @@ def aggregate_pytree_cgc(grads, axes: Sequence[str], f: int):
     return jax.tree.map(lambda g: g / n, agg), diags
 
 
+@COLLECTIVE_AGGREGATORS.register("mean")
 def aggregate_pytree_mean(grads, axes: Sequence[str], f: int = 0):
     """Fault-intolerant baseline: plain pmean over the worker axes."""
     axes = tuple(axes)
@@ -155,6 +159,7 @@ def aggregate_pytree_mean(grads, axes: Sequence[str], f: int = 0):
 # ---------------------------------------------------------------------------
 
 
+@COLLECTIVE_AGGREGATORS.register("median")
 def aggregate_pytree_median(grads, axes: Sequence[str], f: int = 0):
     """Coordinate-wise median across workers, leaf by leaf."""
     axes = tuple(axes)
@@ -164,6 +169,7 @@ def aggregate_pytree_median(grads, axes: Sequence[str], f: int = 0):
     return agg, {}
 
 
+@COLLECTIVE_AGGREGATORS.register("trimmed_mean")
 def aggregate_pytree_trimmed_mean(grads, axes: Sequence[str], f: int):
     """Coordinate-wise f-trimmed mean across workers (needs n > 2f)."""
     axes = tuple(axes)
@@ -179,6 +185,7 @@ def aggregate_pytree_trimmed_mean(grads, axes: Sequence[str], f: int):
     return jax.tree.map(trim, grads), {}
 
 
+@COLLECTIVE_AGGREGATORS.register("krum")
 def aggregate_pytree_krum(grads, axes: Sequence[str], f: int):
     """Krum (Blanchard et al.): leafwise pairwise distances -> winner psum."""
     axes = tuple(axes)
@@ -200,11 +207,7 @@ def aggregate_pytree_krum(grads, axes: Sequence[str], f: int):
     return agg, {"krum_score_min": jnp.min(scores)}
 
 
-AGG_FNS: Dict[str, Callable] = {
-    "mean": aggregate_pytree_mean,
-    "cgc": aggregate_pytree_cgc_sum,       # paper scale: filtered sum
-    "cgc_mean": aggregate_pytree_cgc,
-    "median": aggregate_pytree_median,
-    "trimmed_mean": aggregate_pytree_trimmed_mean,
-    "krum": aggregate_pytree_krum,
-}
+# The shared plugin registry (repro.run.registry): a new distributed
+# aggregator is one @COLLECTIVE_AGGREGATORS.register("name") function
+# with the (grads, axes, f) -> (aggregate, diags) signature above.
+AGG_FNS = COLLECTIVE_AGGREGATORS

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from repro.kernels import cgc_clip as _cgc
 from repro.kernels import decode_attention as _dec
 from repro.kernels import echo_project as _gram
+from repro.run.registry import (NORM_BACKENDS, PAGED_ATTN_BACKENDS,
+                                Registry, SCALE_BACKENDS)
 
 F32 = jnp.float32
 
@@ -28,34 +30,39 @@ def _on_tpu() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Norm backend switch (DESIGN.md §5): the CGC hot path in
+# Backend switches (DESIGN.md §5): the CGC hot path in
 # dist/collectives.py computes gradient-pytree norms through
-# ``tree_sq_norm`` below, which dispatches either to the fused Pallas
-# streaming pass (cgc_clip.row_sq_norms — one kernel over the raveled
-# gradient instead of a per-leaf reduction chain) or to plain jnp.
+# ``tree_sq_norm`` below, which dispatches through the NORM_BACKENDS
+# registry either to the fused Pallas streaming pass
+# (cgc_clip.row_sq_norms — one kernel over the raveled gradient instead
+# of a per-leaf reduction chain) or to plain jnp; scale_rows and
+# paged_decode_attention dispatch the same way. Registering a new
+# implementation (e.g. a cuda kernel) makes it selectable by name with
+# no edits here.
 # ---------------------------------------------------------------------------
-
-_BACKEND_CHOICES = ("auto", "jnp", "pallas")
 
 
 class _BackendSwitch:
     """One named trace-time backend toggle (REPRO_<NAME>_BACKEND env /
-    setter): "auto" resolves to pallas on TPU and jnp elsewhere
-    (interpret-mode pallas is correct anywhere but only wins on TPU).
+    setter) over a backend registry: "auto" resolves to pallas on TPU
+    and jnp elsewhere (interpret-mode pallas is correct anywhere but
+    only wins on TPU); any other registered name selects that entry.
 
     The choice is read at TRACE time: set it before the first jit compile
     of the consuming step — already-compiled executables keep the backend
     they were traced with until ``jax.clear_caches()``.
     """
 
-    def __init__(self, env: str):
+    def __init__(self, env: str, registry: Registry):
         self.env = env
+        self.registry = registry
         self.value = os.environ.get(env, "auto")
 
     def set(self, name: str) -> None:
-        if name not in _BACKEND_CHOICES:
-            raise ValueError(f"unknown {self.env} backend {name!r}; "
-                             f"known: {_BACKEND_CHOICES}")
+        if name != "auto" and name not in self.registry:
+            raise ValueError(
+                f"unknown {self.env} backend {name!r}; known: "
+                f"{['auto'] + self.registry.names()}")
         self.value = name
 
     def resolve(self) -> str:
@@ -63,10 +70,14 @@ class _BackendSwitch:
             return "pallas" if _on_tpu() else "jnp"
         return self.value
 
+    def impl(self):
+        return self.registry[self.resolve()]
 
-_norm_switch = _BackendSwitch("REPRO_NORM_BACKEND")
-_scale_switch = _BackendSwitch("REPRO_SCALE_BACKEND")
-_paged_attn_switch = _BackendSwitch("REPRO_PAGED_ATTN_BACKEND")
+
+_norm_switch = _BackendSwitch("REPRO_NORM_BACKEND", NORM_BACKENDS)
+_scale_switch = _BackendSwitch("REPRO_SCALE_BACKEND", SCALE_BACKENDS)
+_paged_attn_switch = _BackendSwitch("REPRO_PAGED_ATTN_BACKEND",
+                                    PAGED_ATTN_BACKENDS)
 
 
 def set_norm_backend(name: str) -> None:
@@ -96,6 +107,21 @@ def paged_attn_backend() -> str:
     return _paged_attn_switch.resolve()
 
 
+@NORM_BACKENDS.register("jnp")
+def _tree_sq_norm_jnp(leaves, block_d: int) -> jax.Array:
+    return sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves)
+
+
+@NORM_BACKENDS.register("pallas")
+def _tree_sq_norm_pallas(leaves, block_d: int) -> jax.Array:
+    flat = [g.astype(F32).reshape(-1) for g in leaves]
+    v = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
+    d = v.shape[0]
+    bd = min(block_d, max(128, d))
+    G = _pad_to(_pad_to(v[None, :], 8, 0), bd, 1)
+    return _cgc.row_sq_norms(G, bd, not _on_tpu())[0]
+
+
 def tree_sq_norm(tree, block_d: int = 2048) -> jax.Array:
     """fp32 sum of squares over every leaf of ``tree`` (or leaf list).
 
@@ -107,14 +133,7 @@ def tree_sq_norm(tree, block_d: int = 2048) -> jax.Array:
     leaves = jax.tree.leaves(tree)
     if not leaves:
         return jnp.zeros((), F32)
-    if norm_backend() == "jnp":
-        return sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves)
-    flat = [g.astype(F32).reshape(-1) for g in leaves]
-    v = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
-    d = v.shape[0]
-    bd = min(block_d, max(128, d))
-    G = _pad_to(_pad_to(v[None, :], 8, 0), bd, 1)
-    return _cgc.row_sq_norms(G, bd, not _on_tpu())[0]
+    return _norm_switch.impl()(leaves, block_d)
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -200,6 +219,22 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return _dec.decode_attention(q, k, v, mask, bt, interpret)
 
 
+@SCALE_BACKENDS.register("jnp")
+def _scale_rows_jnp(G: jax.Array, scale: jax.Array,
+                    block_d: int) -> jax.Array:
+    return (G.astype(F32) * scale.astype(F32)[:, None]).astype(G.dtype)
+
+
+@SCALE_BACKENDS.register("pallas")
+def _scale_rows_pallas(G: jax.Array, scale: jax.Array,
+                       block_d: int) -> jax.Array:
+    n, d = G.shape
+    bd = min(block_d, max(128, d))
+    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    scale_p = jnp.pad(scale.astype(F32), (0, Gp.shape[0] - n))
+    return _cgc.scale_rows(Gp, scale_p, bd, not _on_tpu())[:n, :d]
+
+
 def scale_rows(G: jax.Array, scale: jax.Array,
                block_d: int = 2048) -> jax.Array:
     """Row-broadcast multiply of an (n, d) stack — pass 2 of the CGC
@@ -207,13 +242,7 @@ def scale_rows(G: jax.Array, scale: jax.Array,
     ``cgc_clip.scale_rows`` streaming pass on TPU, plain jnp elsewhere
     (``REPRO_SCALE_BACKEND`` / ``set_scale_backend`` override).
     """
-    if scale_backend() == "jnp":
-        return (G.astype(F32) * scale.astype(F32)[:, None]).astype(G.dtype)
-    n, d = G.shape
-    bd = min(block_d, max(128, d))
-    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
-    scale_p = jnp.pad(scale.astype(F32), (0, Gp.shape[0] - n))
-    return _cgc.scale_rows(Gp, scale_p, bd, not _on_tpu())[:n, :d]
+    return _scale_switch.impl()(G, scale, block_d)
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
@@ -231,10 +260,21 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     override) — the jnp path is bitwise the contiguous reference on the
     gathered view.
     """
+    return _paged_attn_switch.impl()(q, k_pages, v_pages, block_table,
+                                     lengths, interpret)
+
+
+@PAGED_ATTN_BACKENDS.register("jnp")
+def _paged_attn_jnp(q, k_pages, v_pages, block_table, lengths,
+                    interpret=None):
     from repro.kernels import ref as _ref
-    if paged_attn_backend() == "jnp":
-        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
-                                               block_table, lengths)
+    return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                           block_table, lengths)
+
+
+@PAGED_ATTN_BACKENDS.register("pallas")
+def _paged_attn_pallas(q, k_pages, v_pages, block_table, lengths,
+                       interpret=None):
     if interpret is None:
         interpret = not _on_tpu()
     return _dec.paged_decode_attention(q, k_pages, v_pages, block_table,

@@ -46,6 +46,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
 from repro.core.types import echo_bits, raw_bits
+from repro.run.registry import TRAIN_STRATEGIES
 from repro.dist import (AGG_FNS, ShardCtx, inject_byzantine, make_shard_ctx,
                         tree_shardings)
 from repro.dist.echo_dp import (basis_gram, echo_dp_aggregate, init_basis,
@@ -287,6 +288,7 @@ class _StrategyBase:
                           plan=env.get("plan"))
 
 
+@TRAIN_STRATEGIES.register("replicated")
 class ReplicatedStrategy(_StrategyBase):
     """Params replicated over the worker axes; AGG_FNS aggregation.
 
@@ -335,6 +337,7 @@ class ReplicatedStrategy(_StrategyBase):
         return AGG_FNS[settings.aggregator](grads, data_axes, settings.f)
 
 
+@TRAIN_STRATEGIES.register("fsdp")
 class FsdpStrategy(_StrategyBase):
     """FSDP (§Perf HC1): params + opt state sharded over the data axes,
     per-layer just-in-time gathers, blockwise CGC on the reduce-scatter
@@ -421,6 +424,7 @@ class FsdpStrategy(_StrategyBase):
         return mirror_opt_specs(vspecs, opt_state)
 
 
+@TRAIN_STRATEGIES.register("echo_dp")
 class EchoDpStrategy(_StrategyBase):
     """Echo-compressed DP step (dist/echo_dp.py — §Perf HC3).
 
@@ -451,11 +455,9 @@ class EchoDpStrategy(_StrategyBase):
         return agg, dict(diags, all_echo=all_echo)
 
 
-STRATEGIES: Dict[str, Callable[..., _StrategyBase]] = {
-    "replicated": ReplicatedStrategy,
-    "fsdp": FsdpStrategy,
-    "echo_dp": EchoDpStrategy,
-}
+# The shared plugin registry (repro.run.registry): a new strategy is one
+# @TRAIN_STRATEGIES.register("name") class implementing TrainStrategy.
+STRATEGIES = TRAIN_STRATEGIES
 
 
 # ---------------------------------------------------------------------------

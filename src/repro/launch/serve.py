@@ -8,8 +8,11 @@ and the CLI:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke
 
-runs a synthetic mixed-length request trace through :class:`ServeEngine`
-and prints the throughput/latency summary.
+is a deprecation shim: it emits one DeprecationWarning, adapts the flags
+into a :class:`repro.run.RunConfig` and calls ``repro.run.serve`` — the
+same facade ``python -m repro serve --config job.json`` runs (synthetic
+mixed-length request trace through :class:`ServeEngine`, throughput /
+latency summary).
 """
 from __future__ import annotations
 
@@ -99,10 +102,29 @@ def greedy_decode(cfg: ModelConfig, values, cache, first_token, start_pos,
 # ---------------------------------------------------------------------------
 
 
+def config_from_flags(args) -> "run.RunConfig":
+    """Legacy serve flags -> the equivalent RunConfig job tree."""
+    from repro import run
+    return run.RunConfig(
+        name=f"{args.arch}-serve",
+        model=run.ModelSpec(arch=args.arch, smoke=args.smoke),
+        mesh=run.MeshSpec(devices=0),
+        serve=run.ServeSpec(
+            requests=args.requests, max_batch=args.max_batch,
+            page_size=args.page_size, num_pages=args.num_pages,
+            max_blocks_per_seq=args.max_blocks_per_seq,
+            prompt_len=args.prompt_len, gen=args.gen,
+            token_budget=args.token_budget, seed=args.seed,
+            log_every=args.log_every, metrics_path=args.metrics,
+            sampling=run.SamplingSpec(temperature=args.temperature,
+                                      top_k=args.top_k,
+                                      seed=args.sample_seed)))
+
+
 def main(argv=None):
     import argparse
 
-    import numpy as np
+    from repro.run import facade
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -119,51 +141,23 @@ def main(argv=None):
                     help="max tokens generated per request")
     ap.add_argument("--token-budget", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="truncate sampling to the k largest logits")
+    ap.add_argument("--sample-seed", type=int, default=0)
     ap.add_argument("--metrics", default=None,
                     help="jsonl metrics sink path")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
 
-    from repro.configs import get_config, reduced
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg)
-    if not cfg.has_decode:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, ServeConfig(
-        max_batch=args.max_batch, page_size=args.page_size,
-        num_pages=args.num_pages,
-        max_blocks_per_seq=args.max_blocks_per_seq,
-        token_budget=args.token_budget, metrics_path=args.metrics,
-        log_every=args.log_every))
-
-    rng = np.random.default_rng(args.seed)
-    handles = []
-    for _ in range(args.requests):
-        plen = int(rng.integers(2, max(args.prompt_len, 2) + 1))
-        gen = int(rng.integers(1, max(args.gen, 1) + 1))
-        prompt = rng.integers(0, cfg.vocab_size, size=plen).tolist()
-        handles.append(engine.submit(prompt, max_new=gen))
-
-    engine.drain(max_steps=100 * args.requests * (args.gen + 2))
-    engine.sched.check_invariants()
-    summary = engine.summary()
-    engine.close()
-
-    assert all(h.done for h in handles), "drain left unfinished requests"
-    print(f"arch={cfg.name} requests={args.requests} "
-          f"lanes={args.max_batch} pages={args.num_pages}"
-          f"x{args.page_size}")
-    print(f"generated {summary['tokens_generated']} tokens in "
-          f"{summary['wall_s']}s ({summary['tokens_per_s']} tok/s), "
-          f"{summary['preemptions']} preemptions")
-    print(f"latency p50={summary['latency_p50_s']}s "
-          f"p99={summary['latency_p99_s']}s "
-          f"ttft p50={summary['ttft_p50_s']}s")
-    return summary
+    facade.warn_legacy("repro.launch.serve", "python -m repro serve")
+    try:
+        result = facade.serve(config_from_flags(args))
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+    facade.print_serve_summary(result)
+    return result.summary
 
 
 if __name__ == "__main__":

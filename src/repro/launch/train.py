@@ -1,25 +1,22 @@
-"""Distributed trainer CLI — a thin shell over ``repro.launch.engine``.
+"""Distributed trainer CLI — a deprecation shim over ``repro.run``.
 
-The step builders that used to live here (three copies of the same
-shard_map/batch-spec/microbatch plumbing) are now strategies in
-``launch/engine.py``; this module keeps back-compat ``make_*_train_step``
-wrappers and the script entry point:
+The step builders that used to live here are strategies in
+``launch/engine.py`` (back-compat ``make_*_train_step`` wrappers below);
+the script entry point
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
         --strategy echo_dp
 
-runs the real driver loop (engine.Trainer): echo-DP optimistic rounds
-with ``all_echo`` fallback to the exact CGC step, periodic checkpoints of
-(values, opt_state, step, basis) with ``--resume``, a jsonl metrics sink,
-and per-round bit accounting against the all-raw baseline. ``--strategy
-replicated|fsdp`` run through the same Trainer. On CPU-only hosts the
-CLI forces ``--devices`` fake host devices (default 8) before jax
-initialises, so the worker axes exist; pass ``--devices 0`` on real
-accelerators.
+is now a flags->RunConfig adapter over the declarative job API: it emits
+one DeprecationWarning, builds the equivalent :class:`repro.run.
+RunConfig` and calls ``repro.run.train`` — the same facade
+``python -m repro train --config job.json`` runs, so legacy flag
+invocations and config-driven runs execute the same jitted step bit for
+bit (DESIGN.md §8). On CPU-only hosts ``--devices`` forces fake host
+devices (default 8) before jax initialises, so the worker axes exist;
+pass ``--devices 0`` on real accelerators.
 """
 from __future__ import annotations
-
-import os
 
 import jax
 
@@ -60,22 +57,40 @@ def make_echo_train_step(cfg, opt, settings: TrainSettings, mesh,
 
 
 # ---------------------------------------------------------------------------
-# Script entry: real driver loop on (possibly forced) host devices
+# Script entry: legacy flags -> RunConfig adapter over repro.run.train
 # ---------------------------------------------------------------------------
 
 
 def _force_host_devices(n: int) -> None:
     """Force n fake host devices — must run before jax backend init."""
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" in flags:
-        return
-    os.environ["XLA_FLAGS"] = (
-        flags + f" --xla_force_host_platform_device_count={n}").strip()
+    from repro.run.facade import force_host_devices
+    force_host_devices(n)
+
+
+def config_from_flags(args) -> "run.RunConfig":
+    """The flags->RunConfig adapter: one legacy argparse namespace maps
+    to exactly the job tree the unified CLI would load, so both paths
+    run the same jitted step bit for bit."""
+    from repro import run
+    return run.RunConfig(
+        name=f"{args.arch}-{args.strategy}",
+        model=run.ModelSpec(arch=args.arch, smoke=args.smoke),
+        mesh=run.MeshSpec(devices=args.devices),
+        scenario=run.ScenarioSpec(
+            aggregator=args.aggregator, attack=args.byz_mode, f=args.f,
+            n_byz=args.n_byz, echo_k=args.echo_k, echo_r=args.echo_r),
+        train=run.TrainSpec(
+            strategy=args.strategy, steps=args.steps, batch=args.batch,
+            seq=args.seq, lr=args.lr, microbatches=args.microbatches,
+            clip_norm=args.clip_norm, log_every=args.log_every,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            resume=args.resume, metrics_path=args.metrics))
 
 
 def main(argv=None):
     import argparse
-    import contextlib
+
+    from repro.run import facade
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
@@ -106,84 +121,13 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
 
-    if args.devices:
-        _force_host_devices(args.devices)
-
-    from repro.configs import get_config, reduced
-    from repro.data import make_batch_iterator
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import model as M
-    from repro.models.nn import split_params
-    from repro.optim import adamw
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg)
-    settings = TrainSettings(
-        aggregator=args.aggregator, f=args.f, n_byz=args.n_byz,
-        byz_mode=args.byz_mode, microbatches=args.microbatches,
-        clip_norm=args.clip_norm, echo_k=args.echo_k, echo_r=args.echo_r,
-        fsdp=args.strategy == "fsdp")
-    opt = adamw(args.lr)
-
-    # Every host device is a data-parallel worker when possible; the
-    # robust-aggregation flags are no-ops without a worker axis.
-    n_dev = len(jax.devices())
-    mesh = (make_host_mesh() if n_dev > 1 and args.batch % n_dev == 0
-            else None)
-    if mesh is None and args.strategy in ("fsdp", "echo_dp"):
-        raise SystemExit(
-            f"--strategy {args.strategy} needs >1 data-parallel workers: "
-            f"use --devices N (and a --batch divisible by N), or "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
-    if args.n_byz and mesh is None:
-        raise SystemExit(
-            "--n-byz needs >1 data-parallel workers: run with --devices N "
-            "and a --batch divisible by N")
-    if mesh is None and (args.f or args.aggregator != "mean"):
-        print("warning: single worker — no aggregation runs, so "
-              "--aggregator/--f are inactive (use --devices N to "
-              "exercise them)")
-
-    trainer = Trainer(args.strategy, cfg, opt, settings, mesh, args.batch,
-                      TrainerConfig(log_every=args.log_every,
-                                    ckpt_dir=args.ckpt_dir,
-                                    ckpt_every=args.ckpt_every,
-                                    resume=args.resume,
-                                    metrics_path=args.metrics))
-    print(f"strategy={args.strategy} workers={trainer.n_workers} "
-          f"aggregator={args.aggregator} f={args.f}")
-
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    values, _ = split_params(params)
-    state = trainer.init_state(values)
-    if state.step:
-        print(f"resumed from step {state.step}")
-
-    # start=state.step: a resumed run continues the data stream instead
-    # of re-consuming the batches the checkpointed run already saw.
-    it = make_batch_iterator(cfg, args.batch, args.seq, start=state.step)
-    mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
-        else contextlib.nullcontext()
-    with mesh_ctx:
-        state, summary = trainer.fit(state, it, args.steps)
-    trainer.close()
-
-    if not summary["rounds"]:
-        print(f"nothing to do: resumed at step {state.step} >= "
-              f"--steps {args.steps}")
-        return summary
-    print(f"final loss {summary['final_loss']:.4f} "
-          f"(from {summary['first_loss']:.4f}) in {summary['wall_s']}s")
-    if "echo_rate" in summary:
-        print(f"echo rounds {summary['echo_rounds']}/{summary['rounds']} "
-              f"({100.0 * summary['echo_rate']:.1f}%); cumulative bits "
-              f"{summary['bits_sent']:.3e} vs all-raw baseline "
-              f"{summary['bits_baseline']:.3e} "
-              f"({100.0 * summary['bits_saving']:.1f}% saved)")
-    if args.ckpt_dir:
-        print("checkpoint saved to", args.ckpt_dir)
-    return summary
+    facade.warn_legacy("repro.launch.train", "python -m repro train")
+    try:
+        result = facade.train(config_from_flags(args))
+    except ValueError as e:
+        raise SystemExit(str(e)) from None
+    facade.print_train_summary(result)
+    return result.summary
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""repro.run — the declarative job API (DESIGN.md §8).
+
+    config.py    typed RunConfig tree + JSON round-trip + --set overrides
+    registry.py  plugin registries (aggregators, attacks, strategies,
+                 kernel backends) with decorated registration
+    facade.py    train(cfg) / serve(cfg) / dryrun(cfg) / bench(cfg)
+                 returning typed results
+    rundir.py    per-run output directories (config.json + metrics.jsonl)
+
+The unified CLI (``python -m repro {train,serve,dryrun,bench} --config
+job.json [--set key.path=value ...]``) is a thin shell over these
+facades; the legacy per-entrypoint CLIs adapt their flags into a
+RunConfig and call the same functions.
+"""
+from .config import (SCHEMA_VERSION, BenchSpec, DataSpec, DryrunSpec,
+                     MeshSpec, ModelSpec, RunConfig, SamplingSpec,
+                     ScenarioSpec, ServeSpec, TrainSpec, apply_overrides,
+                     config_hash)
+from .facade import (BenchResult, DryrunResult, RunResult, ServeResult,
+                     TrainResult, bench, dryrun, serve, train)
+from .registry import (AGGREGATORS, ATTACKS, COLLECTIVE_AGGREGATORS,
+                       NORM_BACKENDS, PAGED_ATTN_BACKENDS, SCALE_BACKENDS,
+                       TRAIN_STRATEGIES, DuplicateRegistrationError,
+                       Registry, available)
+from .rundir import make_run_dir, run_dir_tag
+
+__all__ = [
+    "SCHEMA_VERSION", "BenchSpec", "DataSpec", "DryrunSpec", "MeshSpec",
+    "ModelSpec", "RunConfig", "SamplingSpec", "ScenarioSpec", "ServeSpec",
+    "TrainSpec", "apply_overrides", "config_hash",
+    "BenchResult", "DryrunResult", "RunResult", "ServeResult",
+    "TrainResult", "bench", "dryrun", "serve", "train",
+    "AGGREGATORS", "ATTACKS", "COLLECTIVE_AGGREGATORS", "NORM_BACKENDS",
+    "PAGED_ATTN_BACKENDS", "SCALE_BACKENDS", "TRAIN_STRATEGIES",
+    "DuplicateRegistrationError", "Registry", "available",
+    "make_run_dir", "run_dir_tag",
+]

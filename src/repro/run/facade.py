@@ -1,0 +1,439 @@
+"""Typed Python facades over the job config tree (DESIGN.md §8).
+
+``train(cfg)`` / ``serve(cfg)`` / ``dryrun(cfg)`` / ``bench(cfg)`` each
+take a :class:`RunConfig`, run the corresponding workload through the
+existing subsystems (``launch.engine.Trainer``, ``serve.ServeEngine``,
+``launch.dryrun``, ``serve.bench``) and return a typed result object.
+Every run creates a per-run directory (``rundir.make_run_dir``) holding
+its exact ``config.json`` and, by default, its ``metrics.jsonl`` — the
+reproducibility contract: the config that ran is always next to the
+numbers it produced.
+
+The legacy CLIs (``repro.launch.train`` / ``repro.launch.serve`` /
+``benchmarks/serve_bench.py``) are thin flags->RunConfig adapters over
+these facades, so the config-driven and flag-driven paths execute the
+same jitted step bit for bit.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import warnings
+from typing import Any, Dict, Iterator, List, Optional
+
+from .config import DataSpec, RunConfig
+from .rundir import make_run_dir
+
+_DEPRECATION_WARNED: set = set()
+
+
+def warn_legacy(entrypoint: str, replacement: str) -> None:
+    """One DeprecationWarning per legacy entry point per process."""
+    if entrypoint in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(entrypoint)
+    warnings.warn(
+        f"{entrypoint} flags are deprecated; use `{replacement}` with a "
+        f"job file (see experiments/jobs/) — legacy flags keep working "
+        f"through this adapter",
+        DeprecationWarning, stacklevel=3)
+
+
+def force_host_devices(n: int) -> None:
+    """Force n fake host devices — must run before jax backend init."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+# ---------------------------------------------------------------------------
+# Result objects
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Common shape: the config that ran, where it wrote, what it found."""
+
+    config: RunConfig
+    run_dir: str
+    summary: Dict[str, Any]
+
+
+@dataclasses.dataclass
+class TrainResult(RunResult):
+    metrics_path: str = ""
+    state: Any = None                # final launch.engine.TrainState
+
+    @property
+    def first_loss(self) -> Optional[float]:
+        return self.summary.get("first_loss")
+
+    @property
+    def final_loss(self) -> Optional[float]:
+        return self.summary.get("final_loss")
+
+
+@dataclasses.dataclass
+class ServeResult(RunResult):
+    metrics_path: str = ""
+    outputs: List[List[int]] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.summary.get("tokens_per_s", 0.0)
+
+
+@dataclasses.dataclass
+class DryrunResult(RunResult):
+    record_path: str = ""
+
+
+@dataclasses.dataclass
+class BenchResult(RunResult):
+    @property
+    def speedup(self) -> float:
+        return self.summary.get("speedup", 0.0)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_setup(data: DataSpec, batch: int):
+    """The paper's numerical setting as an engine workload: a strongly
+    convex quadratic with per-worker gradient noise (Assumption 5)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import costfns
+
+    cost = costfns.quadratic(jax.random.PRNGKey(data.seed), d=data.dim,
+                             mu=data.mu, L=data.L, sigma=0.0)
+
+    def loss_fn(values, batch_):
+        w = values["w"]
+        return cost.value(w) + w @ jnp.mean(batch_["eps"], 0), {}
+
+    def batches(start: int = 0) -> Iterator[Dict[str, jax.Array]]:
+        step = start
+        base = jax.random.PRNGKey(data.seed + 1)
+        while True:
+            key = jax.random.fold_in(base, step)
+            yield {"eps": data.noise
+                   * jax.random.normal(key, (batch, data.dim))}
+            step += 1
+
+    values = {"w": jnp.ones((data.dim,)) * data.w0}
+    return loss_fn, values, batches
+
+
+def _model_setup(cfg: RunConfig):
+    import dataclasses as _dc
+
+    from repro.configs import get_config, reduced
+
+    model_cfg = get_config(cfg.model.arch)
+    if cfg.model.smoke:
+        model_cfg = reduced(model_cfg)
+    if cfg.model.param_dtype:
+        model_cfg = _dc.replace(model_cfg, param_dtype=cfg.model.param_dtype)
+    return model_cfg
+
+
+def _check_forced_devices(cfg: RunConfig) -> int:
+    """Devices jax actually has; warn when the config asked for a
+    different forced count (backend already initialised, or XLA_FLAGS
+    pre-set) so the run_dir's config.json can't silently misrepresent
+    the worker topology that ran."""
+    import jax
+
+    n_dev = len(jax.devices())
+    if cfg.mesh.devices and n_dev != cfg.mesh.devices:
+        print(f"warning: mesh.devices={cfg.mesh.devices} requested but "
+              f"jax has {n_dev} device(s) — the backend was already "
+              f"initialised (or XLA_FLAGS pre-set), so this run uses "
+              f"{n_dev}; config.json records the request, not the "
+              f"actual count")
+    return n_dev
+
+
+def _make_mesh(cfg: RunConfig, batch: int, strategy: str,
+               needs_workers: bool):
+    """Worker mesh over the (possibly forced) host devices, with the
+    legacy CLI's validation messages."""
+    from repro.launch.mesh import make_host_mesh
+
+    scen = cfg.scenario
+    n_dev = _check_forced_devices(cfg)
+    mesh = make_host_mesh() if n_dev > 1 and batch % n_dev == 0 else None
+    if mesh is None and needs_workers:
+        raise ValueError(
+            f"strategy {strategy!r} needs >1 data-parallel workers: set "
+            f"mesh.devices=N (and a train.batch divisible by N), or "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    if scen.n_byz and mesh is None:
+        raise ValueError(
+            "scenario.n_byz needs >1 data-parallel workers: set "
+            "mesh.devices=N and a train.batch divisible by N")
+    if mesh is None and (scen.f or scen.aggregator != "mean"):
+        print("warning: single worker — no aggregation runs, so "
+              "scenario.aggregator/f are inactive (set mesh.devices=N "
+              "to exercise them)")
+    return mesh
+
+
+def train(cfg: RunConfig) -> TrainResult:
+    """Run the training workload a :class:`RunConfig` describes."""
+    if cfg.train is None:
+        raise ValueError("job config has no `train` section")
+    if cfg.mesh.devices:
+        force_host_devices(cfg.mesh.devices)
+
+    import jax
+
+    from repro.data import make_batch_iterator
+    from repro.launch.engine import (Trainer, TrainerConfig, TrainSettings,
+                                     TRAIN_STRATEGIES)
+    from repro.models import model as M
+    from repro.models.nn import split_params
+    from repro.optim import adamw, sgd
+
+    tspec, scen = cfg.train, cfg.scenario
+    if tspec.strategy not in TRAIN_STRATEGIES:
+        raise ValueError(f"unknown train strategy {tspec.strategy!r}; "
+                         f"known: {sorted(TRAIN_STRATEGIES)}")
+    settings = TrainSettings(
+        aggregator=scen.aggregator, f=scen.f, n_byz=scen.n_byz,
+        byz_mode=scen.attack, microbatches=tspec.microbatches,
+        clip_norm=tspec.clip_norm, echo_k=scen.echo_k, echo_r=scen.echo_r,
+        moe_impl=cfg.mesh.moe_impl, fsdp=tspec.strategy == "fsdp")
+    optimizers = {"adamw": adamw, "sgd": sgd}
+    if tspec.optimizer not in optimizers:
+        raise ValueError(f"unknown train.optimizer {tspec.optimizer!r}; "
+                         f"known: {sorted(optimizers)}")
+    opt = optimizers[tspec.optimizer](tspec.lr)
+
+    quadratic = scen.data.source == "quadratic"
+    if not quadratic and cfg.model is None:
+        raise ValueError("job config needs a `model` section unless "
+                         "scenario.data.source == 'quadratic'")
+    if quadratic:
+        loss_fn, values, quad_batches = _quadratic_setup(scen.data,
+                                                         tspec.batch)
+        model_cfg = None
+    else:
+        loss_fn = None
+        model_cfg = _model_setup(cfg)
+
+    mesh = _make_mesh(cfg, tspec.batch, tspec.strategy,
+                      needs_workers=tspec.strategy in ("fsdp", "echo_dp"))
+
+    run_dir = make_run_dir(cfg, "train")
+    metrics_path = tspec.metrics_path or os.path.join(run_dir,
+                                                      "metrics.jsonl")
+    trainer = Trainer(tspec.strategy, model_cfg, opt, settings, mesh,
+                      tspec.batch,
+                      TrainerConfig(log_every=tspec.log_every,
+                                    ckpt_dir=tspec.ckpt_dir,
+                                    ckpt_every=tspec.ckpt_every,
+                                    resume=tspec.resume,
+                                    metrics_path=metrics_path),
+                      loss_fn=loss_fn)
+    print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
+          f"aggregator={scen.aggregator} f={scen.f} run_dir={run_dir}")
+
+    if quadratic:
+        state = trainer.init_state(values)
+        it = quad_batches(start=state.step)
+    else:
+        params = M.init_params(model_cfg, jax.random.PRNGKey(0))
+        values, _ = split_params(params)
+        state = trainer.init_state(values)
+        # start=state.step: a resumed run continues the data stream
+        # instead of re-consuming batches the checkpointed run saw.
+        it = make_batch_iterator(model_cfg, tspec.batch, tspec.seq,
+                                 seed=scen.data.seed, start=state.step)
+    if state.step:
+        print(f"resumed from step {state.step}")
+
+    mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
+        else contextlib.nullcontext()
+    with mesh_ctx:
+        state, summary = trainer.fit(state, it, tspec.steps)
+    trainer.close()
+    return TrainResult(config=cfg, run_dir=run_dir, summary=summary,
+                       metrics_path=metrics_path, state=state)
+
+
+def print_train_summary(result: TrainResult) -> None:
+    """The CLI's closing lines (shared by legacy and config paths)."""
+    summary, tspec = result.summary, result.config.train
+    if not summary["rounds"]:
+        print(f"nothing to do: resumed at or past train.steps="
+              f"{tspec.steps}")
+        return
+    print(f"final loss {summary['final_loss']:.4f} "
+          f"(from {summary['first_loss']:.4f}) in {summary['wall_s']}s")
+    if "echo_rate" in summary:
+        print(f"echo rounds {summary['echo_rounds']}/{summary['rounds']} "
+              f"({100.0 * summary['echo_rate']:.1f}%); cumulative bits "
+              f"{summary['bits_sent']:.3e} vs all-raw baseline "
+              f"{summary['bits_baseline']:.3e} "
+              f"({100.0 * summary['bits_saving']:.1f}% saved)")
+    if tspec.ckpt_dir:
+        print("checkpoint saved to", tspec.ckpt_dir)
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+def serve(cfg: RunConfig) -> ServeResult:
+    """Run the serving workload: a seeded synthetic mixed-length request
+    trace through :class:`repro.serve.ServeEngine`.
+
+    ``mesh.devices`` forces host devices exactly like the train facade;
+    with more than one device the engine runs tensor-parallel over a
+    (data=1, model=n) host mesh (params + page pools sharded by the
+    logical-axis rules), honouring ``mesh.moe_impl``.
+    """
+    if cfg.serve is None:
+        raise ValueError("job config has no `serve` section")
+    if cfg.model is None:
+        raise ValueError("serving needs a `model` section")
+    if cfg.mesh.devices:
+        force_host_devices(cfg.mesh.devices)
+
+    import jax
+    import numpy as np
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.serve import ServeConfig, ServeEngine
+
+    spec = cfg.serve
+    model_cfg = _model_setup(cfg)
+    if not model_cfg.has_decode:
+        raise ValueError(f"{cfg.model.arch} is encoder-only: no decode "
+                         f"step")
+
+    n_dev = _check_forced_devices(cfg)
+    mesh = make_host_mesh(model=n_dev) if n_dev > 1 else None
+
+    run_dir = make_run_dir(cfg, "serve")
+    metrics_path = spec.metrics_path or os.path.join(run_dir,
+                                                     "metrics.jsonl")
+    params = M.init_params(model_cfg, jax.random.PRNGKey(spec.seed))
+    engine = ServeEngine(model_cfg, params, ServeConfig(
+        max_batch=spec.max_batch, page_size=spec.page_size,
+        num_pages=spec.num_pages,
+        max_blocks_per_seq=spec.max_blocks_per_seq,
+        token_budget=spec.token_budget,
+        decode_quantum=spec.decode_quantum, metrics_path=metrics_path,
+        log_every=spec.log_every, sampling=spec.sampling),
+        mesh=mesh, moe_impl=cfg.mesh.moe_impl)
+
+    rng = np.random.default_rng(spec.seed)
+    handles = []
+    for _ in range(spec.requests):
+        plen = int(rng.integers(2, max(spec.prompt_len, 2) + 1))
+        gen = int(rng.integers(1, max(spec.gen, 1) + 1))
+        prompt = rng.integers(0, model_cfg.vocab_size, size=plen).tolist()
+        handles.append(engine.submit(prompt, max_new=gen))
+
+    engine.drain(max_steps=100 * spec.requests * (spec.gen + 2))
+    engine.sched.check_invariants()
+    summary = engine.summary()
+    engine.close()
+    if not all(h.done for h in handles):
+        raise RuntimeError("drain left unfinished requests")
+    return ServeResult(config=cfg, run_dir=run_dir, summary=summary,
+                       metrics_path=metrics_path,
+                       outputs=[list(h.tokens) for h in handles])
+
+
+def print_serve_summary(result: ServeResult) -> None:
+    cfg, spec, summary = result.config, result.config.serve, result.summary
+    print(f"arch={cfg.model.arch} requests={spec.requests} "
+          f"lanes={spec.max_batch} pages={spec.num_pages}"
+          f"x{spec.page_size} run_dir={result.run_dir}")
+    print(f"generated {summary['tokens_generated']} tokens in "
+          f"{summary['wall_s']}s ({summary['tokens_per_s']} tok/s), "
+          f"{summary['preemptions']} preemptions")
+    print(f"latency p50={summary['latency_p50_s']}s "
+          f"p99={summary['latency_p99_s']}s "
+          f"ttft p50={summary['ttft_p50_s']}s")
+
+
+# ---------------------------------------------------------------------------
+# dryrun
+# ---------------------------------------------------------------------------
+
+
+def dryrun(cfg: RunConfig) -> DryrunResult:
+    """Lower+compile the job's (arch, shape, variant) on the production
+    mesh and record the analysis JSON.
+
+    NOTE: ``repro.launch.dryrun`` forces 512 fake host devices at import,
+    which must happen before jax initialises — call this facade first
+    thing in a fresh process (the ``python -m repro dryrun`` CLI does).
+    """
+    if cfg.dryrun is None:
+        raise ValueError("job config has no `dryrun` section")
+    if cfg.model is None:
+        raise ValueError("dryrun needs a `model` section")
+    import json
+
+    from repro.launch import dryrun as dry
+
+    spec = cfg.dryrun
+    variant = spec.variant
+    if variant is None:
+        strategy = cfg.train.strategy if cfg.train else "replicated"
+        variant = {"replicated": "baseline"}.get(strategy, strategy)
+    run_dir = make_run_dir(cfg, "dryrun")
+    rec = dry.dryrun_pair(cfg.model.arch, spec.shape, spec.multi_pod,
+                          moe_impl=cfg.mesh.moe_impl,
+                          compile_=spec.compile, variant=variant,
+                          param_dtype=cfg.model.param_dtype)
+    os.makedirs(spec.out, exist_ok=True)
+    tag = (f"{cfg.model.arch}__{spec.shape}__"
+           f"{'2x16x16' if spec.multi_pod else '16x16'}")
+    if variant != "baseline":
+        tag += f"__{variant}"
+    record_path = os.path.join(spec.out, tag + ".json")
+    with open(record_path, "w") as fh:
+        json.dump(rec, fh, indent=2)
+    with open(os.path.join(run_dir, "record.json"), "w") as fh:
+        json.dump(rec, fh, indent=2)
+    return DryrunResult(config=cfg, run_dir=run_dir, summary=rec,
+                        record_path=record_path)
+
+
+# ---------------------------------------------------------------------------
+# bench
+# ---------------------------------------------------------------------------
+
+
+def bench(cfg: RunConfig) -> BenchResult:
+    """Continuous-batching vs fixed-batch serving benchmark over a
+    Poisson trace (``repro.serve.bench``)."""
+    if cfg.bench is None:
+        raise ValueError("job config has no `bench` section")
+    if cfg.model is None:
+        raise ValueError("bench needs a `model` section")
+    import json
+
+    from repro.serve.bench import run_bench
+
+    run_dir = make_run_dir(cfg, "bench")
+    summary = run_bench(cfg.model.arch, cfg.bench)
+    with open(os.path.join(run_dir, "result.json"), "w") as fh:
+        json.dump(summary, fh, indent=2)
+    return BenchResult(config=cfg, run_dir=run_dir, summary=summary)

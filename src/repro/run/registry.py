@@ -1,0 +1,132 @@
+"""Plugin registries behind the declarative job API (DESIGN.md §8).
+
+A :class:`Registry` is an ordered name -> object mapping with decorated
+registration, duplicate-name rejection and did-you-mean KeyErrors. The
+shared instances below are the extension points of the stack — a new
+aggregator / attack / train strategy / kernel backend is ONE registered
+function, not an if-chain edit across three entry points:
+
+    from repro.run.registry import ATTACKS
+
+    @ATTACKS.register("my_attack")
+    def my_attack(key, honest, byz_mask, w, true_grad): ...
+
+Registries satisfy the ``Mapping`` protocol, so the legacy dict surfaces
+(``core.aggregators.AGGREGATORS``, ``core.byzantine.ATTACKS``,
+``launch.engine.STRATEGIES``, ``dist.collectives.AGG_FNS``) stay valid:
+they ARE these registries now. ``available()`` imports the hosting
+modules and reports every registered name per kind — the discovery
+surface ``python -m repro list`` prints.
+
+This module is import-light on purpose (no jax, no repro siblings) so
+config parsing and CLI argument handling never pay for kernel imports.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+from typing import Any, Callable, Dict, Iterator, Optional
+
+
+class DuplicateRegistrationError(ValueError):
+    """A name was registered twice in the same registry."""
+
+
+class Registry(Mapping):
+    """Ordered name -> object mapping with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Any] = {}
+
+    # --- registration ------------------------------------------------
+
+    def register(self, name: Optional[str] = None) -> Callable:
+        """Decorator: ``@REG.register("name")`` (or bare ``@REG.register()``
+        to use ``__name__``). Returns the object unchanged."""
+        def deco(obj):
+            self.add(name if name is not None else obj.__name__, obj)
+            return obj
+        return deco
+
+    def add(self, name: str, obj: Any) -> Any:
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} registry needs a non-empty "
+                             f"string name, got {name!r}")
+        if name in self._entries:
+            raise DuplicateRegistrationError(
+                f"{self.kind} {name!r} is already registered "
+                f"(to {self._entries[name]!r}); pick a different name or "
+                f"remove the existing entry first")
+        self._entries[name] = obj
+        return obj
+
+    # --- Mapping protocol (keeps the legacy dict call sites working) --
+
+    def __getitem__(self, name: str) -> Any:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; "
+                f"known: {sorted(self._entries)}") from None
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __repr__(self) -> str:
+        return f"Registry({self.kind!r}, {sorted(self._entries)})"
+
+    def names(self):
+        return sorted(self._entries)
+
+
+# ---------------------------------------------------------------------------
+# The stack's shared registries. Hosting modules populate them at import:
+#   AGGREGATORS            core/aggregators.py      (n, d)-table zoo
+#   COLLECTIVE_AGGREGATORS dist/collectives.py      shard_map AGG_FNS
+#   ATTACKS                core/byzantine.py        protocol attack zoo
+#   TRAIN_STRATEGIES       launch/engine.py         TrainStrategy builders
+#   NORM_BACKENDS          kernels/ops.py           tree_sq_norm dispatch
+#   SCALE_BACKENDS         kernels/ops.py           scale_rows dispatch
+#   PAGED_ATTN_BACKENDS    kernels/ops.py           paged decode attention
+# ---------------------------------------------------------------------------
+
+AGGREGATORS = Registry("aggregator")
+COLLECTIVE_AGGREGATORS = Registry("collective aggregator")
+ATTACKS = Registry("attack")
+TRAIN_STRATEGIES = Registry("train strategy")
+NORM_BACKENDS = Registry("norm kernel backend")
+SCALE_BACKENDS = Registry("scale kernel backend")
+PAGED_ATTN_BACKENDS = Registry("paged-attention kernel backend")
+
+_REGISTRIES: Dict[str, Registry] = {
+    "aggregators": AGGREGATORS,
+    "collective_aggregators": COLLECTIVE_AGGREGATORS,
+    "attacks": ATTACKS,
+    "train_strategies": TRAIN_STRATEGIES,
+    "norm_backends": NORM_BACKENDS,
+    "scale_backends": SCALE_BACKENDS,
+    "paged_attn_backends": PAGED_ATTN_BACKENDS,
+}
+
+# modules whose import populates the registries above
+_HOSTS = ("repro.core.aggregators", "repro.core.byzantine",
+          "repro.dist.collectives", "repro.launch.engine",
+          "repro.kernels.ops")
+
+
+def load_plugins() -> None:
+    """Import every registry-hosting module (idempotent)."""
+    import importlib
+    for mod in _HOSTS:
+        importlib.import_module(mod)
+
+
+def available() -> Dict[str, list]:
+    """Every registered name, per registry kind — the discovery surface
+    new scenarios are written against (``python -m repro list``)."""
+    load_plugins()
+    return {key: reg.names() for key, reg in _REGISTRIES.items()}

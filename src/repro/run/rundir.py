@@ -1,0 +1,42 @@
+"""Per-run output directories (DESIGN.md §8).
+
+Every facade run gets its own directory under ``cfg.runs_root`` named
+``<UTC step time>-<kind>-<name>-<config hash8>`` and writes its exact
+``config.json`` there before doing anything else; metrics default to
+``<run_dir>/metrics.jsonl``. Two runs can therefore never clobber each
+other's metrics the way a shared ``--metrics`` path could — identical
+configs launched in the same second still get distinct directories via
+the collision suffix.
+"""
+from __future__ import annotations
+
+import os
+import re
+import time
+
+from .config import RunConfig, config_hash
+
+_SAFE = re.compile(r"[^A-Za-z0-9._-]+")
+
+
+def run_dir_tag(cfg: RunConfig, kind: str, when: float) -> str:
+    stamp = time.strftime("%Y%m%d-%H%M%S", time.gmtime(when))
+    # job names come from user JSON: strip path separators and friends
+    # so the tag always stays a single component under runs_root.
+    name = _SAFE.sub("-", cfg.name).strip("-.") or "run"
+    return f"{stamp}-{kind}-{name}-{config_hash(cfg)[:8]}"
+
+
+def make_run_dir(cfg: RunConfig, kind: str) -> str:
+    """Create the per-run directory and drop ``config.json`` into it."""
+    base = os.path.join(cfg.runs_root, run_dir_tag(cfg, kind, time.time()))
+    path, n = base, 0
+    while True:
+        try:
+            os.makedirs(path, exist_ok=False)
+            break
+        except FileExistsError:
+            n += 1
+            path = f"{base}-{n}"
+    cfg.save(os.path.join(path, "config.json"))
+    return path

@@ -10,6 +10,8 @@ The paged attention hot path dispatches through
 ``kernels.ops.paged_decode_attention`` (Pallas on TPU,
 ``REPRO_PAGED_ATTN_BACKEND`` override).
 """
+from repro.run.config import SamplingSpec
+
 from .api import FINISHED, RUNNING, WAITING, RequestHandle, ServeMetrics
 from .engine import ServeConfig, ServeEngine
 from .kv_cache import (SCRATCH_PAGE, BlockAllocator, PagedKVCache,
@@ -17,7 +19,8 @@ from .kv_cache import (SCRATCH_PAGE, BlockAllocator, PagedKVCache,
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
-    "FINISHED", "RUNNING", "WAITING", "RequestHandle", "ServeMetrics",
+    "FINISHED", "RUNNING", "WAITING", "RequestHandle", "SamplingSpec",
+    "ServeMetrics",
     "ServeConfig", "ServeEngine", "SCRATCH_PAGE", "BlockAllocator",
     "PagedKVCache", "contiguous_from_paged", "paged_from_contiguous",
     "Scheduler", "SchedulerConfig",

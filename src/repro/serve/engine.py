@@ -28,6 +28,7 @@ from repro.configs.base import ModelConfig
 from repro.dist import make_shard_ctx, tree_shardings
 from repro.models import model as M
 from repro.models.nn import Param, merge_params, split_params
+from repro.run.config import SamplingSpec
 
 from .api import RequestHandle, ServeMetrics
 from .kv_cache import PagedKVCache
@@ -55,6 +56,10 @@ class ServeConfig:
     decode_quantum: int = 8        # decode steps fused per dispatch
     metrics_path: Optional[str] = None
     log_every: int = 10
+    # token sampling policy: temperature 0 = exact greedy argmax (the
+    # pre-sampling engine, bitwise); > 0 softmax-samples, truncated to
+    # the top_k largest logits when top_k > 0, seeded per dispatch.
+    sampling: SamplingSpec = SamplingSpec()
 
 
 def _bucket(n: int, lo: int = 8) -> int:
@@ -101,10 +106,14 @@ class ServeEngine:
                 _plain_shardings(merge_params(self.kv.pages, self.kv.axes),
                                  mesh))
         self._rid = itertools.count()
+        # sampling keys: one per dispatch, folded from the spec's seed —
+        # the same submissions replay to the same tokens.
+        self._sample_base = jax.random.PRNGKey(serve.sampling.seed)
+        self._dispatches = 0
         # the page pools are donated: every dispatch consumes kv.pages and
         # the engine rebinds the returned tree, so the update is in-place
         # instead of copying the whole pool per step.
-        self._decode_jit = jax.jit(self._decode_fn, static_argnums=(5,),
+        self._decode_jit = jax.jit(self._decode_fn, static_argnums=(6,),
                                    donate_argnums=(1,))
         self._prefill_jit = jax.jit(self._prefill_fn, donate_argnums=(1,))
 
@@ -113,31 +122,62 @@ class ServeEngine:
     def _model_ctx(self):
         return self.ctx if self.mesh is not None else None
 
-    def _decode_fn(self, values, pages, tokens, pos, tables, k: int):
-        """Fused run of ``k`` greedy decode steps (the scheduling
+    def _next_key(self):
+        self._dispatches += 1
+        return jax.random.fold_in(self._sample_base, self._dispatches)
+
+    def _sample(self, logits, key):
+        """(B, V) logits -> (B,) int32 token ids per the sampling spec.
+
+        The spec is trace-time static: the greedy default compiles to
+        exactly the old argmax (bitwise), temperature > 0 compiles to a
+        seeded categorical over the (optionally top-k-truncated)
+        temperature-scaled logits.
+        """
+        s = self.serve.sampling
+        if s.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / s.temperature
+        # the vocab-padding columns (padded_vocab > vocab_size) carry
+        # arbitrary logits: mask them so sampling never emits an invalid
+        # token id (argmax is exposed too, but padding never beats a
+        # trained real token; sampling would hit it every few steps).
+        V = self.cfg.vocab_size
+        if self.cfg.padded_vocab > V:
+            scaled = jnp.where(jnp.arange(scaled.shape[-1]) < V, scaled,
+                               -jnp.inf)
+        if s.top_k > 0:
+            kth = jax.lax.top_k(scaled, min(s.top_k,
+                                            scaled.shape[-1]))[0][..., -1:]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return jax.random.categorical(key, scaled, axis=-1).astype(
+            jnp.int32)
+
+    def _decode_fn(self, values, pages, tokens, pos, tables, key, k: int):
+        """Fused run of ``k`` sampled decode steps (the scheduling
         quantum): tokens (B,1) at pos (B,) -> ((B, k) sampled ids, pages).
         Idle lanes (pos -1) stay idle; the host consumes each lane's run
         up to its EOS / budget and discards the overshoot."""
-        def body(carry, _):
+        def body(carry, i):
             pages, tok, pos = carry
             logits, pages = M.decode_step(values, self.cfg, pages, tok, pos,
                                           shard_ctx=self._model_ctx(),
                                           block_tables=tables)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = self._sample(logits, jax.random.fold_in(key, i))
             active = pos >= 0
             tok = jnp.where(active, nxt, 0)[:, None]
             pos = jnp.where(active, pos + 1, -1)
             return (pages, tok, pos), nxt
 
         (pages, _, _), toks = jax.lax.scan(body, (pages, tokens, pos),
-                                           None, length=k)
+                                           jnp.arange(k))
         return jnp.moveaxis(toks, 0, 1), pages           # (B, k)
 
-    def _prefill_fn(self, values, pages, tokens, lengths, tables):
+    def _prefill_fn(self, values, pages, tokens, lengths, tables, key):
         """Scan the paged decode step over a ragged prompt pack.
 
         tokens (B, S) scratch-padded, lengths (B,) (0 = idle lane).
-        Returns (greedy next token sampled at each lane's last prompt
+        Returns (next token sampled at each lane's last prompt
         position (B,), pages)."""
         B, S = tokens.shape
         V = self.cfg.padded_vocab
@@ -155,7 +195,7 @@ class ServeEngine:
         last0 = jnp.zeros((B, V), jnp.float32)
         (pages, last), _ = jax.lax.scan(body, (pages, last0),
                                         jnp.arange(S))
-        return jnp.argmax(last, axis=-1).astype(jnp.int32), pages
+        return self._sample(last, key), pages
 
     # --- public surface ----------------------------------------------
 
@@ -218,7 +258,7 @@ class ServeEngine:
             lengths[req.slot] = len(ctx)
         next_tok, self.kv.pages = self._prefill_jit(
             self.values, self.kv.pages, jnp.asarray(tokens),
-            jnp.asarray(lengths), self._table_batch())
+            jnp.asarray(lengths), self._table_batch(), self._next_key())
         next_tok = np.asarray(next_tok)
         now = time.time()
         for req in admitted:
@@ -254,7 +294,7 @@ class ServeEngine:
             pos[slot] = req.ctx_len() - 1
         toks, self.kv.pages = self._decode_jit(
             self.values, self.kv.pages, jnp.asarray(tokens),
-            jnp.asarray(pos), self._table_batch(), k)
+            jnp.asarray(pos), self._table_batch(), self._next_key(), k)
         toks = np.asarray(toks)
         now = time.time()
         n_new = 0

@@ -116,3 +116,60 @@ def test_kernel_cgc_matches_ref_property(n, d, seed):
     np.testing.assert_allclose(np.asarray(ops.cgc_clip(G, f)),
                                np.asarray(ref.cgc_clip_ref(G, f)),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RunConfig JSON round-trip (repro.run, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+from repro.run import (RunConfig, DataSpec, MeshSpec, ModelSpec,  # noqa: E402
+                       SamplingSpec, ScenarioSpec, ServeSpec, TrainSpec,
+                       apply_overrides, available, config_hash)
+
+_NAMES = available()
+_FINITE = st.floats(allow_nan=False, allow_infinity=False, width=64)
+
+
+@settings(**SETTINGS)
+@given(agg=st.sampled_from(_NAMES["collective_aggregators"]),
+       attack=st.sampled_from(_NAMES["attacks"]),
+       strategy=st.sampled_from(_NAMES["train_strategies"]),
+       f=st.integers(0, 50), steps=st.integers(0, 10 ** 6),
+       lr=_FINITE, echo_r=_FINITE, noise=_FINITE,
+       temp=_FINITE, top_k=st.integers(0, 10 ** 4),
+       smoke=st.booleans(), devices=st.integers(0, 512),
+       name=st.text(max_size=40),
+       drop_train=st.booleans(), drop_serve=st.booleans())
+def test_runconfig_json_roundtrip_property(agg, attack, strategy, f, steps,
+                                           lr, echo_r, noise, temp, top_k,
+                                           smoke, devices, name,
+                                           drop_train, drop_serve):
+    """Lossless serialization over every registered scenario combination
+    and arbitrary finite numerics (incl. sub-normals, huge exponents and
+    unicode names): from_json(to_json(cfg)) == cfg, and the config hash
+    is a pure function of content."""
+    cfg = RunConfig(
+        name=name,
+        model=ModelSpec(arch="qwen3-0.6b", smoke=smoke),
+        mesh=MeshSpec(devices=devices),
+        scenario=ScenarioSpec(aggregator=agg, attack=attack, f=f,
+                              echo_r=echo_r,
+                              data=DataSpec(noise=noise)),
+        train=None if drop_train else TrainSpec(strategy=strategy,
+                                                steps=steps, lr=lr),
+        serve=None if drop_serve else ServeSpec(
+            sampling=SamplingSpec(temperature=temp, top_k=top_k)))
+    back = RunConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert config_hash(back) == config_hash(cfg)
+
+
+@settings(**SETTINGS)
+@given(steps=st.integers(0, 10 ** 9), lr=_FINITE)
+def test_runconfig_override_matches_construction(steps, lr):
+    """--set edits land exactly where direct construction would."""
+    base = RunConfig(train=TrainSpec())
+    out = apply_overrides(base, [f"train.steps={steps}",
+                                 f"train.lr={lr!r}"])
+    want = RunConfig(train=TrainSpec(steps=steps, lr=float(repr(lr))))
+    assert out == want

@@ -1,0 +1,144 @@
+"""RunConfig tree: lossless JSON round-trip, dotted-path overrides,
+config hashing, schema guards (repro.run, DESIGN.md §8)."""
+import dataclasses
+import itertools
+import json
+
+import pytest
+
+from repro.run import (RunConfig, SCHEMA_VERSION, DataSpec, DryrunSpec,
+                       MeshSpec, ModelSpec, SamplingSpec, ScenarioSpec,
+                       ServeSpec, TrainSpec, apply_overrides, available,
+                       config_hash)
+
+
+def _roundtrip(cfg: RunConfig) -> RunConfig:
+    return RunConfig.from_json(cfg.to_json())
+
+
+def test_default_roundtrip_and_schema_version():
+    cfg = RunConfig()
+    data = json.loads(cfg.to_json())
+    assert data["schema_version"] == SCHEMA_VERSION
+    assert _roundtrip(cfg) == cfg
+
+
+def test_roundtrip_every_registered_scenario_combination():
+    """from_json(to_json(cfg)) == cfg for every registered
+    aggregator x attack x strategy (the acceptance-criterion sweep)."""
+    names = available()
+    combos = list(itertools.product(names["collective_aggregators"],
+                                    names["attacks"],
+                                    names["train_strategies"]))
+    assert len(combos) >= 6 * 9 * 3
+    for agg, attack, strategy in combos:
+        cfg = RunConfig(
+            name=f"{agg}-{attack}-{strategy}",
+            model=ModelSpec(arch="qwen3-0.6b", smoke=True),
+            scenario=ScenarioSpec(aggregator=agg, attack=attack, f=1,
+                                  echo_r=0.75),
+            train=TrainSpec(strategy=strategy, steps=3, lr=1e-3),
+            serve=ServeSpec(sampling=SamplingSpec(temperature=0.7,
+                                                  top_k=5, seed=2)))
+        back = _roundtrip(cfg)
+        assert back == cfg, (agg, attack, strategy)
+        assert config_hash(back) == config_hash(cfg)
+
+
+def test_roundtrip_none_sections_and_quadratic_data():
+    cfg = RunConfig(
+        model=None,
+        scenario=ScenarioSpec(data=DataSpec(source="quadratic", dim=64,
+                                            mu=0.25, L=2.0, noise=1e-3)),
+        train=TrainSpec(strategy="echo_dp", optimizer="sgd", lr=0.02),
+        serve=None, dryrun=DryrunSpec(variant="fsdp", compile=False))
+    back = _roundtrip(cfg)
+    assert back == cfg and back.model is None and back.serve is None
+    assert back.dryrun.compile is False
+
+
+def test_from_json_rejects_unknown_keys_listing_alternatives():
+    bad = json.dumps({"schema_version": SCHEMA_VERSION, "trian": {}})
+    with pytest.raises(ValueError) as e:
+        RunConfig.from_json(bad)
+    assert "trian" in str(e.value) and "train" in str(e.value)
+
+    nested = json.dumps({"schema_version": SCHEMA_VERSION,
+                         "train": {"step": 3}})
+    with pytest.raises(ValueError, match="steps"):
+        RunConfig.from_json(nested)
+
+
+def test_from_json_rejects_wrong_schema_version_and_types():
+    with pytest.raises(ValueError, match="schema_version"):
+        RunConfig.from_json(json.dumps({"schema_version": 999}))
+    with pytest.raises(ValueError, match="missing 'schema_version'"):
+        RunConfig.from_json(json.dumps({"name": "x"}))
+    with pytest.raises(ValueError, match="expected int"):
+        RunConfig.from_json(json.dumps(
+            {"schema_version": SCHEMA_VERSION,
+             "train": {"steps": "three"}}))
+    # hand-written integer literals are fine for float fields
+    cfg = RunConfig.from_json(json.dumps(
+        {"schema_version": SCHEMA_VERSION, "train": {"lr": 1}}))
+    assert cfg.train.lr == 1.0 and isinstance(cfg.train.lr, float)
+
+
+def test_apply_overrides_types_and_sections():
+    cfg = RunConfig(train=TrainSpec())
+    out = apply_overrides(cfg, ["train.steps=7", "train.lr=0.01",
+                                "train.resume=true",
+                                "scenario.data.source=quadratic",
+                                "model.smoke=true", "name=sweep-3",
+                                "train.ckpt_dir=/tmp/x"])
+    assert out.train.steps == 7 and out.train.lr == 0.01
+    assert out.train.resume is True
+    assert out.scenario.data.source == "quadratic"
+    assert out.model.smoke is True and out.name == "sweep-3"
+    assert out.train.ckpt_dir == "/tmp/x"
+    assert out != cfg and _roundtrip(out) == out
+    # optional leaf clears back to None
+    assert apply_overrides(out,
+                           ["train.ckpt_dir=none"]).train.ckpt_dir is None
+
+
+def test_apply_overrides_materialises_absent_section():
+    cfg = RunConfig(serve=None)
+    out = apply_overrides(cfg, ["serve.max_batch=2",
+                                "serve.sampling.temperature=0.5"])
+    assert out.serve.max_batch == 2
+    assert out.serve.sampling.temperature == 0.5
+    # untouched fields take the section defaults
+    assert out.serve.page_size == ServeSpec().page_size
+
+
+def test_apply_overrides_error_messages():
+    cfg = RunConfig(train=TrainSpec())
+    with pytest.raises(ValueError, match="no field"):
+        apply_overrides(cfg, ["train.stepz=3"])
+    with pytest.raises(ValueError, match="section, not a"):
+        apply_overrides(cfg, ["train=3"])
+    with pytest.raises(ValueError, match="leaf field, not a section"):
+        apply_overrides(cfg, ["train.steps.x=3"])
+    with pytest.raises(ValueError, match="key.path=value"):
+        apply_overrides(cfg, ["train.steps"])
+    with pytest.raises(ValueError, match="expected int"):
+        apply_overrides(cfg, ["train.steps=many"])
+    with pytest.raises(ValueError, match="bool"):
+        apply_overrides(cfg, ["train.resume=maybe"])
+
+
+def test_config_hash_tracks_content():
+    a = RunConfig(train=TrainSpec(steps=3))
+    b = RunConfig(train=TrainSpec(steps=4))
+    assert config_hash(a) != config_hash(b)
+    assert config_hash(a) == config_hash(dataclasses.replace(a))
+    assert len(config_hash(a)) == 64
+
+
+def test_frozen_tree():
+    cfg = RunConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.name = "x"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.mesh.devices = 3

@@ -280,3 +280,76 @@ def test_engine_metrics_jsonl(tmp_path):
     assert {"step", "kind", "generated", "tokens_per_s"} <= set(records[0])
     assert summary["tokens_generated"] == 4
     assert summary["completed"] == 1 and summary["latency_p50_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Sampling (ServeSpec.sampling): temperature / top-k, seeded determinism
+# ---------------------------------------------------------------------------
+
+
+def _sampled_run(sampling, submissions):
+    from repro.serve import SamplingSpec  # noqa: F401 (re-export check)
+    engine = ServeEngine(CFG, _params(), ServeConfig(
+        max_batch=2, page_size=8, num_pages=32, max_blocks_per_seq=6,
+        token_budget=64, log_every=10 ** 9, sampling=sampling))
+    handles = [engine.submit(p, max_new=g) for p, g in submissions]
+    engine.drain(max_steps=500)
+    engine.sched.check_invariants()
+    engine.close()
+    assert all(h.done for h in handles)
+    return [list(h.tokens) for h in handles]
+
+
+def test_sampling_seeded_determinism():
+    """Same sampling seed -> identical tokens across engines; a different
+    seed moves at least one token (temperature spreads the smoke model's
+    near-uniform logits wide)."""
+    from repro.serve import SamplingSpec
+
+    subs = [([5, 6, 7], 10), ([9, 1, 2, 3], 12)]
+    spec = SamplingSpec(temperature=0.8, top_k=16, seed=0)
+    a = _sampled_run(spec, subs)
+    b = _sampled_run(spec, subs)
+    assert a == b
+    c = _sampled_run(SamplingSpec(temperature=0.8, top_k=16, seed=1), subs)
+    assert a != c
+    # every sampled id respects the vocab (top-k masking never leaks -inf)
+    assert all(0 <= t < CFG.vocab_size for toks in a + c for t in toks)
+
+
+def test_sampling_never_emits_vocab_padding_ids():
+    """padded_vocab > vocab_size leaves padding columns with arbitrary
+    random-init logits; sampling must mask them out."""
+    import dataclasses
+
+    from repro.serve import SamplingSpec
+
+    cfg = dataclasses.replace(CFG, vocab_size=500)   # padded_vocab = 512
+    assert cfg.padded_vocab > cfg.vocab_size
+    params = M.init_params(cfg, KEY)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=2, page_size=8, num_pages=32, max_blocks_per_seq=6,
+        token_budget=64, log_every=10 ** 9,
+        sampling=SamplingSpec(temperature=5.0, seed=0)))   # near-uniform
+    handles = [engine.submit([1, 2, 3], max_new=32),
+               engine.submit([4, 5], max_new=32)]
+    engine.drain(max_steps=500)
+    engine.close()
+    toks = [t for h in handles for t in h.tokens]
+    assert len(toks) == 64
+    assert all(0 <= t < cfg.vocab_size for t in toks), max(toks)
+
+
+def test_sampling_greedy_default_matches_reference():
+    """temperature=0 (the default) is exactly the old greedy engine:
+    tokens equal the per-request contiguous-cache argmax reference,
+    whatever the sampling seed."""
+    from repro.serve import SamplingSpec
+
+    values = _values()
+    prompt = [3, 1, 4, 1, 5]
+    want = _ref_greedy(values, prompt, 8)
+    for seed in (0, 123):
+        got = _sampled_run(SamplingSpec(temperature=0.0, seed=seed),
+                           [(prompt, 8)])
+        assert got == [want]
