@@ -2,15 +2,16 @@
 
     PYTHONPATH=src python examples/job_sweep.py
 
-Loads the paper quadratic job (experiments/jobs/paper_echo_cgc.json),
-then runs the SAME experiment under several registered aggregators by
-editing the typed config tree — no entry-point flags, no string
-dispatch. Each run leaves its exact config.json + metrics.jsonl in its
-own directory under experiments/runs/, so the sweep is reproducible
-from the artifacts alone.
-"""
-import dataclasses
+Loads the paper quadratic job (experiments/jobs/paper_echo_cgc.json) and
+expands an aggregator grid over it with ``run.sweep`` — the same
+dotted-path machinery the CLI's ``--set`` uses, one job file emitted per
+point, so the whole sweep reruns standalone from the artifacts alone:
 
+    python -m repro train --config experiments/runs/sweep-jobs/<point>.json
+
+Each run additionally leaves its exact config.json + metrics.jsonl in
+its own directory under experiments/runs/.
+"""
 from repro import run
 
 
@@ -18,21 +19,23 @@ def main():
     base = run.RunConfig.load("experiments/jobs/paper_echo_cgc.json")
     base = run.apply_overrides(base, ["train.steps=20"])
 
+    # echo-DP's fallback step is CGC-specific; the other aggregators run
+    # through the plain replicated strategy — one extra grid axis.
+    points = run.sweep(base, {"scenario.aggregator": ["cgc"]},
+                       out_dir="experiments/runs/sweep-jobs")
+    points += run.sweep(
+        base, {"scenario.aggregator": ["mean", "median", "trimmed_mean"],
+               "train.strategy": ["replicated"]},
+        out_dir="experiments/runs/sweep-jobs")
+
     print(f"{'aggregator':14s} {'first':>10s} {'final':>10s} "
           f"{'bits saved':>10s}")
-    for agg in ("cgc", "mean", "median", "trimmed_mean"):
-        scen = dataclasses.replace(base.scenario, aggregator=agg)
-        # echo-DP's fallback step is CGC-specific; other aggregators run
-        # through the plain replicated strategy.
-        train = base.train if agg == "cgc" else dataclasses.replace(
-            base.train, strategy="replicated")
-        cfg = dataclasses.replace(base, name=f"sweep-{agg}",
-                                  scenario=scen, train=train)
+    for cfg in points:
         result = run.train(cfg)
         s = result.summary
         saved = s.get("bits_saving", 0.0)
-        print(f"{agg:14s} {s['first_loss']:10.4f} {s['final_loss']:10.4f} "
-              f"{100.0 * saved:9.1f}%")
+        print(f"{cfg.scenario.aggregator:14s} {s['first_loss']:10.4f} "
+              f"{s['final_loss']:10.4f} {100.0 * saved:9.1f}%")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,5 @@
-from .ckpt import (TRAIN_STATE_FORMAT, latest_step, restore,
-                   restore_train_state, save, save_train_state)
+from .ckpt import (TRAIN_STATE_FORMAT, AsyncCheckpointWriter, latest_step,
+                   restore, restore_train_state, save, save_train_state)
 
-__all__ = ["TRAIN_STATE_FORMAT", "latest_step", "restore",
-           "restore_train_state", "save", "save_train_state"]
+__all__ = ["TRAIN_STATE_FORMAT", "AsyncCheckpointWriter", "latest_step",
+           "restore", "restore_train_state", "save", "save_train_state"]

@@ -10,7 +10,9 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import re
+import threading
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -112,6 +114,78 @@ def save_train_state(directory: str, step: int, values, opt_state,
     meta = {"format": TRAIN_STATE_FORMAT}
     meta.update(extra or {})
     return save(directory, step, tree, extra=meta)
+
+
+class AsyncCheckpointWriter:
+    """Background-thread checkpoint writes (mirrors the metrics sink).
+
+    ``submit`` enqueues one :func:`save_train_state` call and returns the
+    target path immediately — jax arrays are immutable, so holding
+    references is a consistent snapshot and the ``device_get`` +
+    ``np.savez`` cost moves off the caller (the Trainer driver loop).
+    Writes land in submission order through one worker thread; the
+    atomic ``.tmp`` + ``os.replace`` in :func:`save` means a reader
+    never sees a half-written file. ``flush`` blocks until everything
+    enqueued so far is on disk; ``close`` flushes, stops the thread and
+    re-raises the first write error (as ``flush`` does), so failures
+    are never silently dropped.
+    """
+
+    def __init__(self) -> None:
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop,
+                                        name="ckpt-writer", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:                       # close sentinel
+                return
+            if isinstance(item, threading.Event):  # flush barrier
+                item.set()
+                continue
+            args, kwargs = item
+            try:
+                save_train_state(*args, **kwargs)
+            except BaseException as e:             # surfaced on flush/close
+                if self._error is None:
+                    self._error = e
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
+
+    def submit(self, directory: str, step: int, values, opt_state,
+               extra_state: Optional[Dict] = None,
+               extra: Optional[Dict] = None) -> str:
+        """Enqueue one training snapshot; returns the path it will get."""
+        if not self._thread.is_alive():
+            raise RuntimeError("AsyncCheckpointWriter is closed")
+        self._q.put(((directory, step, values, opt_state),
+                     dict(extra_state=extra_state, extra=extra)))
+        return os.path.join(directory, f"step_{step:08d}.npz")
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until every submitted snapshot is on disk (re-raises the
+        first write error). With a timeout, returns False on expiry."""
+        if self._thread.is_alive():
+            barrier = threading.Event()
+            self._q.put(barrier)
+            if not barrier.wait(timeout):
+                return False
+        self._raise_pending()
+        return True
+
+    def close(self) -> None:
+        if self._thread.is_alive():
+            self._q.put(None)
+            # the worker drains everything queued before the sentinel,
+            # so joining IS the flush.
+            self._thread.join()
+        self._raise_pending()
 
 
 def _snapshot_keys(directory: str, step: Optional[int]):

@@ -1,0 +1,85 @@
+"""repro.comm — typed wire formats + radio channels + the bit ledger
+(DESIGN.md §9).
+
+    wire.py     RawGradientMsg / EchoMsg / SilentMsg message types and
+                the Codec zoo (fp32 / bf16 / int8 / topk) — each codec
+                knows its exact encoded bit size and is THE source of
+                truth for communication accounting
+    channel.py  the single-hop broadcast models: IdealBroadcast,
+                LossyBroadcast (seeded per-slot fading), MeteredBroadcast
+                (per-round bit budget) — jittable ChannelState threads
+                through the protocol slot loop
+    ledger.py   CommLedger: every transmitting layer (Trainer, echo-DP
+                rounds, protocol simulation) reports rounds into one
+                accounting object
+
+``CommConfig`` bundles one channel + one codec as a frozen (hashable,
+jit-static) pair; ``resolve`` builds it from a job's
+``scenario.comm`` section through the CHANNELS / CODECS registries, so
+``--set scenario.comm.codec=int8 --set scenario.comm.drop_prob=0.1``
+is all it takes to run a quantized, lossy scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .channel import (IDEAL, Channel, ChannelState, IdealBroadcast,
+                      LossyBroadcast, MeteredBroadcast)
+from .ledger import CommLedger, echo_round_bits, raw_round_bits
+from .wire import (BITS_PER_FLOAT, FP32, MSG_ECHO, MSG_RAW, MSG_SILENT,
+                   Bf16Codec, Codec, EchoMsg, Fp32Codec, Int8Codec, Message,
+                   RawGradientMsg, SilentMsg, TopKCodec, messages_from_round,
+                   payload_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """One resolved communication setup: how messages are encoded and
+    what medium carries them. Frozen + hashable, so it rides along as a
+    jit static argument everywhere the protocol does."""
+
+    channel: Channel = IDEAL
+    codec: Codec = FP32
+
+
+DEFAULT_COMM = CommConfig()
+
+
+def resolve(spec=None) -> CommConfig:
+    """Build a :class:`CommConfig` from a ``run.config.CommSpec`` (or
+    None for the paper's ideal fp32 default) via the registries.
+
+    Knobs that contradict the selected channel are rejected rather than
+    silently ignored — ``drop_prob`` without ``channel=lossy`` (or
+    ``budget_bits`` without ``channel=metered``) would otherwise run an
+    ideal-channel experiment whose config.json claims losses.
+    """
+    if spec is None:
+        return DEFAULT_COMM
+    if spec.drop_prob and spec.channel != "lossy":
+        raise ValueError(
+            f"scenario.comm.drop_prob={spec.drop_prob} has no effect on "
+            f"channel {spec.channel!r} — set scenario.comm.channel=lossy "
+            f"(or drop_prob=0)")
+    if spec.budget_bits and spec.channel != "metered":
+        raise ValueError(
+            f"scenario.comm.budget_bits={spec.budget_bits} has no effect "
+            f"on channel {spec.channel!r} — set "
+            f"scenario.comm.channel=metered (or budget_bits=0)")
+    from repro.run.registry import CHANNELS, CODECS
+    try:
+        channel = CHANNELS[spec.channel](spec)
+        codec = CODECS[spec.codec](spec)
+    except KeyError as e:              # did-you-mean text, CLI-friendly
+        raise ValueError(e.args[0]) from None
+    return CommConfig(channel=channel, codec=codec)
+
+
+__all__ = [
+    "BITS_PER_FLOAT", "FP32", "IDEAL", "MSG_ECHO", "MSG_RAW", "MSG_SILENT",
+    "Bf16Codec", "Channel", "ChannelState", "Codec", "CommConfig",
+    "CommLedger", "DEFAULT_COMM", "EchoMsg", "Fp32Codec", "IdealBroadcast",
+    "Int8Codec", "LossyBroadcast", "Message", "MeteredBroadcast",
+    "RawGradientMsg", "SilentMsg", "TopKCodec", "echo_round_bits",
+    "messages_from_round", "payload_bits", "raw_round_bits", "resolve",
+]

@@ -1,0 +1,162 @@
+"""Single-hop radio broadcast channels (DESIGN.md §9).
+
+The paper assumes a *reliable* single-hop broadcast: every slot is heard
+by the server and overheard by every worker. A :class:`Channel` makes
+that assumption explicit and swappable — the protocol slot loop threads
+a :class:`ChannelState` carry through ``lax.fori_loop`` instead of an
+ad-hoc bits array, so all channels are jittable and hashable (frozen
+dataclasses, safe as jit static args):
+
+    IdealBroadcast    today's semantics: nothing fades, nothing is
+                      rationed — bit accounting only.
+    LossyBroadcast    per-slot fading with a seeded PRNG. A faded slot
+                      is not *overheard*: a faded raw broadcast never
+                      enters the shared reference set R, and a faded
+                      echo forces the sender's raw retransmission (the
+                      paper's reliability assumption — the server must
+                      get *something*, and an echo whose broadcast faded
+                      cannot be re-verified, so the fallback is raw).
+    MeteredBroadcast  a per-round bit budget. A transmission that would
+                      exceed the remaining budget is not admitted: the
+                      worker stays silent and the server times it out.
+
+Two host-side hooks serve the coarse-grained echo-DP driver
+(``launch.engine.Trainer``), which models the round as one all-or-
+nothing echo attempt rather than n slots: ``round_echo_drops`` draws the
+round's faded-echo count from the same seeded PRNG, and ``allows_bits``
+gates the optimistic attempt against the metered budget. Driver-level
+metering is deliberately softer than the slot loop's: it refuses the
+echo *attempt*, but the raw fallback always transmits (and is charged on
+the ledger even over budget) — a silenced training round would stall
+optimization, whereas the protocol simulation can faithfully time a
+worker out for one round.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.run.registry import CHANNELS
+
+
+class ChannelState(NamedTuple):
+    """Carry threaded through the protocol slot loop."""
+
+    key: jax.Array           # PRNG state for fading draws
+    bits_used: jax.Array     # () float32 — bits admitted so far this round
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """Base channel: reliable, unmetered."""
+
+    name: ClassVar[str] = "channel"
+    seed: int = 0
+
+    # --- jittable slot-loop surface ----------------------------------
+
+    def init(self, key: Optional[jax.Array] = None) -> ChannelState:
+        """Fresh per-round state; ``key`` seeds the fading PRNG (falls
+        back to this channel's configured seed)."""
+        if key is None:
+            key = jax.random.PRNGKey(self.seed)
+        return ChannelState(key=key, bits_used=jnp.zeros((), jnp.float32))
+
+    def fade(self, state: ChannelState, slot) -> Tuple[ChannelState,
+                                                       jax.Array]:
+        """Did slot ``slot``'s broadcast fade? () bool."""
+        return state, jnp.asarray(False)
+
+    def admit(self, state: ChannelState, bits) -> Tuple[ChannelState,
+                                                        jax.Array]:
+        """Charge ``bits`` against the round; () bool = admitted."""
+        return state._replace(bits_used=state.bits_used + bits), \
+            jnp.asarray(True)
+
+    # --- host-side hooks for the coarse echo-DP driver ---------------
+
+    def round_echo_drops(self, round_index: int, n: int) -> int:
+        """How many of the round's n echo broadcasts fade (deterministic
+        in (seed, round_index) — the trainer's bits trajectory replays)."""
+        return 0
+
+    def allows_bits(self, bits: int) -> bool:
+        """Whether one round of ``bits`` fits the per-round budget."""
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class IdealBroadcast(Channel):
+    """The paper's reliable broadcast — today's semantics exactly."""
+
+    name: ClassVar[str] = "ideal"
+
+
+@dataclasses.dataclass(frozen=True)
+class LossyBroadcast(Channel):
+    """Seeded per-slot fading with probability ``drop_prob``."""
+
+    name: ClassVar[str] = "lossy"
+    drop_prob: float = 0.1
+
+    def fade(self, state, slot):
+        dropped = jax.random.bernoulli(jax.random.fold_in(state.key, slot),
+                                       self.drop_prob)
+        return state, dropped
+
+    def round_echo_drops(self, round_index: int, n: int) -> int:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), round_index)
+        return int(jax.random.bernoulli(key, self.drop_prob, (n,)).sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class MeteredBroadcast(Channel):
+    """Hard per-round bit budget; over-budget slots go silent."""
+
+    name: ClassVar[str] = "metered"
+    budget_bits: int = 0              # 0 = unlimited
+
+    def admit(self, state, bits):
+        bits = jnp.asarray(bits, jnp.float32)
+        if self.budget_bits <= 0:
+            return state._replace(bits_used=state.bits_used + bits), \
+                jnp.asarray(True)
+        ok = state.bits_used + bits <= float(self.budget_bits)
+        used = state.bits_used + jnp.where(ok, bits, 0.0)
+        return state._replace(bits_used=used), ok
+
+    def allows_bits(self, bits: int) -> bool:
+        return self.budget_bits <= 0 or bits <= self.budget_bits
+
+
+# Registry entries are builders ``(spec) -> Channel`` reading the knobs
+# (drop_prob / seed / budget_bits) off the job's CommSpec.
+
+
+@CHANNELS.register("ideal")
+def _build_ideal(spec=None) -> Channel:
+    return IdealBroadcast(seed=getattr(spec, "seed", 0) if spec else 0)
+
+
+@CHANNELS.register("lossy")
+def _build_lossy(spec=None) -> Channel:
+    if spec is None:
+        return LossyBroadcast()
+    drop = float(spec.drop_prob)
+    if not 0.0 <= drop < 1.0:
+        raise ValueError(f"scenario.comm.drop_prob must be in [0, 1), "
+                         f"got {drop}")
+    return LossyBroadcast(seed=spec.seed, drop_prob=drop)
+
+
+@CHANNELS.register("metered")
+def _build_metered(spec=None) -> Channel:
+    budget = getattr(spec, "budget_bits", 0) if spec else 0
+    return MeteredBroadcast(seed=getattr(spec, "seed", 0) if spec else 0,
+                            budget_bits=int(budget))
+
+
+IDEAL = IdealBroadcast()

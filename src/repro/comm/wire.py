@@ -1,0 +1,286 @@
+"""Typed wire formats for the radio broadcast (DESIGN.md §9).
+
+What a worker puts on the air is one of three messages:
+
+    RawGradientMsg   the d-dimensional gradient itself
+    EchoMsg          (norm ratio, coefficient vector, reference bitmap)
+    SilentMsg        nothing (crashed / timed-out worker)
+
+and a :class:`Codec` decides how the float payload of a message is
+encoded on the wire — and therefore *exactly how many bits it costs*.
+Codecs are the single source of truth for communication accounting:
+``core.types.raw_bits``/``echo_bits`` are now thin delegates to the
+ideal :class:`Fp32Codec`, and the protocol slot loop, the echo-DP
+trainer and the :class:`repro.comm.CommLedger` all price messages
+through the selected codec.
+
+Every codec is a frozen (hashable, jit-static) dataclass exposing
+
+    encode(vec)            -> payload (tuple of arrays)
+    decode(payload, m)     -> (m,) float32 vector
+    roundtrip(vec)         -> decode(encode(vec)) — jittable; what the
+                              receivers actually see
+    vector_bits(m)         -> exact encoded size of an m-vector (works
+                              on python ints AND traced ranks)
+    raw_msg_bits(d) / echo_msg_bits(n, rank)
+
+``payload_bits`` counts the real bits of an encoded payload so tests
+can assert the advertised ``vector_bits`` is honest. The lossy codecs
+(bf16 / int8 / top-k) open the quantized-gradient scenario axis; the
+fp32 codec reproduces the paper's closed-form accounting bit for bit.
+
+This module imports only jax — never ``repro.core`` — so ``core.types``
+can delegate here without a cycle. Codec builders register in
+``run.registry.CODECS``; ``resolve`` in ``repro.comm`` turns a
+``CommSpec`` into instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, List, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.run.registry import CODECS
+
+# Message kinds broadcast in a TDMA slot (source of truth; core.types
+# re-exports these for the protocol buffers).
+MSG_RAW = 0        # raw d-dimensional gradient
+MSG_ECHO = 1       # echo message (k, x, I)
+MSG_SILENT = 2     # crashed / absent worker (server times out -> Byzantine)
+
+# Float width of the paper's bit accounting (floats/doubles per dim).
+BITS_PER_FLOAT = 32
+
+Payload = Tuple[jax.Array, ...]
+Bits = Union[int, jax.Array]
+
+_DTYPE_BITS = {"float32": 32, "bfloat16": 16, "float16": 16, "int8": 8,
+               "int32": 32, "uint8": 8, "bool": 1}
+
+
+def payload_bits(payload: Payload) -> int:
+    """Actual bits of an encoded payload (host-side; tests assert this
+    equals the codec's advertised ``vector_bits``)."""
+    return sum(int(a.size) * _DTYPE_BITS[str(a.dtype)] for a in payload)
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base wire encoding. Subclasses override encode/decode/vector_bits;
+    message pricing (`raw_msg_bits`/`echo_msg_bits`) is shared."""
+
+    name: ClassVar[str] = "codec"
+    lossless: ClassVar[bool] = False
+
+    def encode(self, vec: jax.Array) -> Payload:
+        raise NotImplementedError
+
+    def decode(self, payload: Payload, m: int) -> jax.Array:
+        raise NotImplementedError
+
+    def roundtrip(self, vec: jax.Array) -> jax.Array:
+        """What the receivers decode; jittable, shape-preserving."""
+        return self.decode(self.encode(vec), vec.shape[-1])
+
+    def vector_bits(self, m: Bits) -> Bits:
+        raise NotImplementedError
+
+    def raw_msg_bits(self, d: Bits) -> Bits:
+        """Bits to broadcast a raw d-dimensional gradient (Sec. 2.1)."""
+        return self.vector_bits(d)
+
+    def echo_msg_bits(self, n: Bits, rank: Bits) -> Bits:
+        """Bits for an echo message ``(k, x, I)``: the (1 + |R|) floats
+        on the wire plus an n-bit membership bitmap for the sorted ID
+        list I (an upper bound on any practical encoding; O(n) total as
+        in the paper)."""
+        return self.vector_bits(1 + rank) + n
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp32Codec(Codec):
+    """The paper's ideal encoding: 32-bit floats, lossless. Reproduces
+    the closed-form ``raw_bits``/``echo_bits`` bit for bit."""
+
+    name: ClassVar[str] = "fp32"
+    lossless: ClassVar[bool] = True
+
+    def encode(self, vec):
+        return (vec.astype(jnp.float32),)
+
+    def decode(self, payload, m):
+        return payload[0]
+
+    def vector_bits(self, m):
+        return BITS_PER_FLOAT * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(Codec):
+    """bfloat16 truncation: half the bits, ~2^-8 relative error."""
+
+    name: ClassVar[str] = "bf16"
+
+    def encode(self, vec):
+        return (vec.astype(jnp.bfloat16),)
+
+    def decode(self, payload, m):
+        return payload[0].astype(jnp.float32)
+
+    def vector_bits(self, m):
+        return 16 * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(Codec):
+    """Absmax int8 quantization (SIGNSGD-style compressed gradients):
+    one fp32 scale + one signed byte per element."""
+
+    name: ClassVar[str] = "int8"
+
+    def encode(self, vec):
+        v = vec.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+        return (q, scale.astype(jnp.float32))
+
+    def decode(self, payload, m):
+        q, scale = payload
+        return q.astype(jnp.float32) * scale
+
+    def vector_bits(self, m):
+        return 8 * m + BITS_PER_FLOAT          # bytes + the shared scale
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(Codec):
+    """Top-k sparsification: the k largest-magnitude entries survive,
+    each shipped as (fp32 value, int32 index); the rest decode to 0."""
+
+    name: ClassVar[str] = "topk"
+    k: int = 32
+
+    def encode(self, vec):
+        v = vec.astype(jnp.float32)
+        kk = min(self.k, v.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(v), kk)
+        return (v[idx], idx.astype(jnp.int32))
+
+    def decode(self, payload, m):
+        vals, idx = payload
+        return jnp.zeros((m,), jnp.float32).at[idx].set(vals)
+
+    def vector_bits(self, m):
+        kk = min(self.k, m) if isinstance(m, int) else jnp.minimum(self.k, m)
+        return kk * (BITS_PER_FLOAT + 32)      # value + int32 index
+
+
+# Registry entries are builders ``(spec) -> Codec``: ``repro.comm.resolve``
+# calls CODECS[name](spec) so parametrised codecs read their knobs off the
+# job's CommSpec while the plain ones ignore it.
+
+
+@CODECS.register("fp32")
+def _build_fp32(spec=None) -> Codec:
+    return Fp32Codec()
+
+
+@CODECS.register("bf16")
+def _build_bf16(spec=None) -> Codec:
+    return Bf16Codec()
+
+
+@CODECS.register("int8")
+def _build_int8(spec=None) -> Codec:
+    return Int8Codec()
+
+
+@CODECS.register("topk")
+def _build_topk(spec=None) -> Codec:
+    return TopKCodec(k=getattr(spec, "topk", 32) if spec is not None else 32)
+
+
+FP32 = Fp32Codec()
+
+
+# ---------------------------------------------------------------------------
+# Typed messages (the host-side view of one broadcast slot)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RawGradientMsg:
+    """A raw d-dimensional gradient broadcast."""
+
+    grad: Any                       # (d,) array
+
+    kind: ClassVar[int] = MSG_RAW
+
+    def bits(self, codec: Codec, n: int) -> Bits:
+        return codec.raw_msg_bits(self.grad.shape[-1])
+
+    def payload(self, codec: Codec) -> Payload:
+        return codec.encode(self.grad)
+
+
+@dataclasses.dataclass(frozen=True)
+class EchoMsg:
+    """An echo message ``(k, x, I)``: norm ratio, projection
+    coefficients (masked to the reference set) and the reference
+    bitmap I."""
+
+    ratio: Any                      # () norm ratio ||g|| / ||Ax||
+    coeffs: Any                     # (n,) coefficients, zero outside ref
+    ref: Any                        # (n,) bool reference bitmap
+
+    kind: ClassVar[int] = MSG_ECHO
+
+    def bits(self, codec: Codec, n: int) -> Bits:
+        rank = int(jnp.sum(self.ref))
+        return codec.echo_msg_bits(n, rank)
+
+    def payload(self, codec: Codec) -> Payload:
+        dense = jnp.concatenate([jnp.reshape(self.ratio, (1,)),
+                                 jnp.asarray(self.coeffs)[
+                                     jnp.asarray(self.ref)]])
+        return codec.encode(dense)
+
+
+@dataclasses.dataclass(frozen=True)
+class SilentMsg:
+    """Nothing on the air: a crashed or over-budget worker."""
+
+    kind: ClassVar[int] = MSG_SILENT
+
+    def bits(self, codec: Codec, n: int) -> int:
+        return 0
+
+
+Message = Union[RawGradientMsg, EchoMsg, SilentMsg]
+
+
+def messages_from_round(round_msgs) -> List[Message]:
+    """Decode a dense ``core.types.RoundMessages`` buffer (anything with
+    ``kind``/``raw``/``echo_k``/``echo_x``/``echo_ref`` fields) into the
+    typed per-slot messages — the host-side analysis view."""
+    import numpy as np
+
+    kinds = np.asarray(round_msgs.kind)
+    out: List[Message] = []
+    for j, kind in enumerate(kinds):
+        if kind == MSG_RAW:
+            out.append(RawGradientMsg(grad=round_msgs.raw[j]))
+        elif kind == MSG_ECHO:
+            out.append(EchoMsg(ratio=round_msgs.echo_k[j],
+                               coeffs=round_msgs.echo_x[j],
+                               ref=round_msgs.echo_ref[j]))
+        else:
+            out.append(SilentMsg())
+    return out

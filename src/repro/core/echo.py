@@ -131,6 +131,30 @@ def is_linearly_independent(
     return independent_from_projection(proj, mask, g, tol)
 
 
+def wire_norm_ratio(
+    R: jax.Array,
+    mask: jax.Array,
+    x: jax.Array,
+    g: jax.Array,
+) -> jax.Array:
+    """Norm ratio ``k = ||g|| / ||A x||`` for the coefficients *as
+    transmitted*.
+
+    When a lossy codec quantizes the echo coefficients, the sender must
+    compute the ratio against the quantized reconstruction ``A x̂`` (not
+    its exact projection) or the server-side ``g~ = k A x̂`` loses the
+    paper's ``||g~|| = ||g||`` invariant. With the ideal fp32 codec
+    ``x̂ == x`` and this is bit-for-bit the ratio
+    :func:`echo_decision_from_projection` computes.
+    """
+    Rm = R * mask[:, None]
+    echo = (x * mask) @ Rm
+    g_norm = jnp.linalg.norm(g)
+    echo_norm = jnp.linalg.norm(echo)
+    return jnp.where(echo_norm > 0,
+                     g_norm / jnp.maximum(echo_norm, 1e-30), 0.0)
+
+
 def reconstruct_echo(
     G_server: jax.Array,
     ref_mask: jax.Array,

@@ -8,28 +8,42 @@ detection of echoes referencing unheard workers, and CGC-filtered sum update.
 
 Everything is fixed-shape and jittable; the slot loop is a lax.fori_loop.
 
+Communication itself is delegated to ``repro.comm`` (DESIGN.md §9): a
+:class:`~repro.comm.CommConfig` picks the wire :class:`~repro.comm.Codec`
+(what a broadcast costs in bits, and what quantization the receivers see)
+and the :class:`~repro.comm.Channel` (ideal / lossy / metered broadcast).
+The slot loop threads the channel's :class:`~repro.comm.ChannelState`
+through its carry — fading and budget admission are part of the jitted
+round. Under the default ideal-fp32 comm config every value and every bit
+count is bit-for-bit the paper's closed-form accounting.
+
 A note on the reference sets R_j: in the paper each worker keeps its own R_j,
 but every worker hears the same raw broadcasts in the same slot order and
 applies the same deterministic independence test — so R_j is exactly the
 shared in-order independent prefix known at slot j. We therefore keep ONE
 reference buffer keyed by broadcaster ID and snapshot its mask per slot.
+(On a lossy channel a faded raw broadcast is skipped by *every* overhearer,
+so the reference set stays shared — it just grows more slowly. The
+independence test runs on the sender-side projection; quantization noise is
+treated as preserving independence.)
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.comm import ChannelState, CommConfig, CommLedger, DEFAULT_COMM
 
 from . import aggregators as agg_lib
 from .byzantine import AttackPlan
 from .cgc import cgc_aggregate
 from .echo import (echo_decision_from_projection, independent_from_projection,
-                   project_onto_span, reconstruct_echo)
+                   project_onto_span, reconstruct_echo, wire_norm_ratio)
 from .types import (MSG_ECHO, MSG_RAW, MSG_SILENT, ProtocolConfig, RoundStats,
-                    ServerState, echo_bits, raw_bits)
+                    ServerState)
 
 
 class CommState(NamedTuple):
@@ -42,15 +56,17 @@ class CommState(NamedTuple):
     rmask: jax.Array      # (n,) bool — rows of R that are in the reference set
     bits: jax.Array       # (n,) float bits transmitted per worker
     echoed: jax.Array     # (n,) bool — worker sent an echo message
+    chan: ChannelState    # broadcast-channel carry (fading PRNG + budget)
 
 
 def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
-          grads: jax.Array, byz_mask: jax.Array, plan: AttackPlan
-          ) -> CommState:
+          grads: jax.Array, byz_mask: jax.Array, plan: AttackPlan,
+          comm: CommConfig) -> CommState:
     """One TDMA slot: worker i broadcasts; server + all workers process."""
     n, d = grads.shape
     g_i = grads[i]
     is_byz = byz_mask[i]
+    codec, channel = comm.codec, comm.channel
 
     # --- Worker i decides what to broadcast (lines 14-24) ----------------
     # One Gram solve serves both the echo decision (Eq. 7) and the
@@ -64,19 +80,58 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     honest_mode = jnp.where(dec.send_echo, MSG_ECHO, MSG_RAW)
     mode = jnp.where(is_byz, plan.mode[i], honest_mode).astype(jnp.int32)
 
-    echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
-    echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
+    # --- Channel: per-slot fading ----------------------------------------
+    # A faded echo cannot be verified, so the sender retransmits raw
+    # (the paper's reliability assumption); a faded raw still reaches the
+    # server but is NOT overheard, shrinking the shared reference set.
+    chan, faded = channel.fade(st.chan, i)
+    fellback = (mode == MSG_ECHO) & faded
+    mode = jnp.where(fellback, MSG_RAW, mode)
+
+    # --- Wire coding ------------------------------------------------------
+    # Receivers see the codec's reconstruction of every float payload.
+    # ``codec.lossless`` is trace-time static: the fp32 default skips the
+    # roundtrips and the ratio recompute entirely, so its jaxpr (and every
+    # value in it) is exactly the pre-comm slot loop.
     echo_ref = jnp.where(is_byz, plan.echo_ref[i], st.rmask)
+    echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
+    if codec.lossless:
+        raw_wire = raw_msg
+        echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
+    else:
+        raw_wire = codec.roundtrip(raw_msg)
+        echo_x = codec.roundtrip(echo_x)
+        # Honest senders compute the norm ratio against the coefficients
+        # AS TRANSMITTED so ||g~|| == ||g|| survives quantization;
+        # Byzantine senders forge theirs freely.
+        k_honest = wire_norm_ratio(st.R, st.rmask, echo_x, raw_msg)
+        echo_k = codec.roundtrip(
+            jnp.where(is_byz, plan.echo_k[i], k_honest)[None])[0]
 
     is_raw = mode == MSG_RAW
     is_echo = mode == MSG_ECHO
+
+    # --- Bit pricing + budget admission (Sec. 2.1 via the codec) ---------
+    rank = jnp.sum(echo_ref & st.received)
+    raw_cost = jnp.float32(codec.raw_msg_bits(d))
+    echo_cost = jnp.asarray(codec.echo_msg_bits(n, rank)).astype(jnp.float32)
+    attempt = jnp.where(
+        is_echo, echo_cost,
+        jnp.where(is_raw,
+                  jnp.where(fellback, echo_cost + raw_cost, raw_cost),
+                  0.0))
+    chan, ok = channel.admit(chan, attempt)
+    mode = jnp.where(ok, mode, MSG_SILENT)   # over budget: server times out
+    is_raw = is_raw & ok
+    is_echo = is_echo & ok
+    bits_i = jnp.where(ok, attempt, 0.0)
 
     # --- Server processes the message (lines 33-41) ----------------------
     # Echo referencing an unheard worker == provable Byzantine (lines 36-37).
     bad_ref = jnp.any(echo_ref & ~st.received)
     detected_i = is_echo & bad_ref
     g_echo = reconstruct_echo(st.G, echo_ref & st.received, echo_k, echo_x)
-    g_tilde = jnp.where(is_raw, raw_msg,
+    g_tilde = jnp.where(is_raw, raw_wire,
                         jnp.where(is_echo & ~bad_ref, g_echo,
                                   jnp.zeros((d,), grads.dtype)))
     G = st.G.at[i].set(g_tilde)
@@ -86,19 +141,15 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     # --- All later workers overhear raw broadcasts (lines 26-31) ---------
     indep = independent_from_projection(proj, st.rmask, raw_msg,
                                         cfg.indep_tol)
-    add = is_raw & indep
-    R = jnp.where(add, st.R.at[i].set(raw_msg), st.R)
+    overheard = ~faded & ok
+    add = is_raw & indep & overheard
+    R = jnp.where(add, st.R.at[i].set(raw_wire), st.R)
     rmask = st.rmask.at[i].set(add | st.rmask[i])
 
-    # --- Bit accounting (Sec. 2.1 cost model) -----------------------------
-    rank = jnp.sum(echo_ref & st.received)
-    bits_i = jnp.where(
-        is_raw, float(raw_bits(d)),
-        jnp.where(is_echo, echo_bits(n, rank).astype(jnp.float32), 0.0))
     bits = st.bits.at[i].set(bits_i)
     echoed = st.echoed.at[i].set(is_echo)
 
-    return CommState(G, received, detected, R, rmask, bits, echoed)
+    return CommState(G, received, detected, R, rmask, bits, echoed, chan)
 
 
 def communication_phase(
@@ -106,8 +157,15 @@ def communication_phase(
     grads: jax.Array,
     byz_mask: jax.Array,
     plan: AttackPlan,
+    comm: Optional[CommConfig] = None,
+    chan_key: Optional[jax.Array] = None,
 ) -> Tuple[ServerState, RoundStats]:
-    """Run the n TDMA slots; return the server view and round statistics."""
+    """Run the n TDMA slots; return the server view and round statistics.
+
+    ``comm`` selects the wire codec + broadcast channel (default: the
+    paper's ideal fp32 setup); ``chan_key`` seeds this round's fading
+    draws (defaults to the channel's configured seed)."""
+    comm = comm if comm is not None else DEFAULT_COMM
     n, d = grads.shape
     st = CommState(
         G=jnp.zeros((n, d), grads.dtype),
@@ -117,8 +175,10 @@ def communication_phase(
         rmask=jnp.zeros((n,), bool),
         bits=jnp.zeros((n,), jnp.float32),
         echoed=jnp.zeros((n,), bool),
+        chan=comm.channel.init(chan_key),
     )
-    body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask, plan=plan)
+    body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask, plan=plan,
+                   comm=comm)
     st = jax.lax.fori_loop(0, n, body, st)
 
     server = ServerState(G=st.G, received=st.received, detected=st.detected)
@@ -142,7 +202,7 @@ def aggregate(server: ServerState, f: int, aggregator: str = "cgc"
     return agg_lib.AGGREGATORS[aggregator](G, f)
 
 
-@partial(jax.jit, static_argnames=("cfg", "aggregator"))
+@partial(jax.jit, static_argnames=("cfg", "aggregator", "comm"))
 def echo_cgc_round(
     cfg: ProtocolConfig,
     w: jax.Array,
@@ -150,19 +210,22 @@ def echo_cgc_round(
     byz_mask: jax.Array,
     plan: AttackPlan,
     aggregator: str = "cgc",
+    comm: Optional[CommConfig] = None,
+    chan_key: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, ServerState, RoundStats]:
     """One full Echo-CGC round given precomputed worker gradients.
 
     Returns (w_next, server_state, stats). ``grads[j]`` is what an *honest*
     worker j would send; Byzantine rows are overridden by ``plan``.
     """
-    server, stats = communication_phase(cfg, grads, byz_mask, plan)
+    server, stats = communication_phase(cfg, grads, byz_mask, plan,
+                                        comm=comm, chan_key=chan_key)
     g_agg = aggregate(server, cfg.f, aggregator)
     w_next = w - cfg.eta * g_agg
     return w_next, server, stats
 
 
-@partial(jax.jit, static_argnames=("cfg", "aggregator"))
+@partial(jax.jit, static_argnames=("cfg", "aggregator", "comm"))
 def pointwise_round(
     cfg: ProtocolConfig,
     w: jax.Array,
@@ -170,19 +233,21 @@ def pointwise_round(
     byz_mask: jax.Array,
     plan: AttackPlan,
     aggregator: str = "cgc",
+    comm: Optional[CommConfig] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Prior-algorithm baseline round (point-to-point network, no echoes).
 
-    Every worker uploads its raw gradient: bits = n * 32 * d. Used for the
-    communication-complexity comparison and for pure-CGC [11] / Krum [4]
-    baselines.
+    Every worker uploads its raw gradient: bits = n * codec.raw_msg_bits(d)
+    (= n * 32 * d for fp32). Used for the communication-complexity
+    comparison and for pure-CGC [11] / Krum [4] baselines.
     """
     n, d = grads.shape
+    codec = (comm if comm is not None else DEFAULT_COMM).codec
     G = jnp.where(byz_mask[:, None], plan.raw, grads)
     g_agg = (cgc_aggregate(G, cfg.f) if aggregator == "cgc"
              else agg_lib.AGGREGATORS[aggregator](G, cfg.f))
     w_next = w - cfg.eta * g_agg
-    bits = jnp.float32(n * raw_bits(d))
+    bits = jnp.float32(n * codec.raw_msg_bits(d))
     return w_next, bits
 
 
@@ -196,13 +261,18 @@ def run_training(
     rounds: int,
     aggregator: str = "cgc",
     use_radio: bool = True,
+    comm: Optional[CommConfig] = None,
+    ledger: Optional[CommLedger] = None,
 ):
     """Multi-round driver: Echo-CGC (use_radio) or point-to-point baseline.
 
     Returns a dict of per-round traces: dist2 (||w-w*||^2), value, bits,
-    n_echo, n_detected.
+    n_echo, n_detected. A :class:`~repro.comm.CommLedger` passed as
+    ``ledger`` gets one record per simulated round (the simulation's
+    reporting hook into the shared accounting surface).
     """
     n = cfg.n
+    comm = comm if comm is not None else DEFAULT_COMM
 
     def one_round(carry, key_t):
         w = carry
@@ -211,14 +281,17 @@ def run_training(
         true_grad = cost.grad(w)
         plan = attack_fn(keys[n], grads, byz_mask, w, true_grad)
         if use_radio:
+            # fold_in (not a wider split) keeps grads/attack draws
+            # bitwise-identical to the pre-channel code path.
+            chan_key = jax.random.fold_in(key_t, n + 1)
             w_next, server, stats = echo_cgc_round(
-                cfg, w, grads, byz_mask, plan, aggregator)
+                cfg, w, grads, byz_mask, plan, aggregator, comm, chan_key)
             bits = jnp.sum(stats.bits_sent)
             n_echo = stats.n_echo
             n_det = stats.n_detected
         else:
             w_next, bits = pointwise_round(cfg, w, grads, byz_mask, plan,
-                                           aggregator)
+                                           aggregator, comm)
             n_echo = jnp.int32(0)
             n_det = jnp.int32(0)
         out = dict(
@@ -233,4 +306,7 @@ def run_training(
     keys = jax.random.split(key, rounds)
     w_final, trace = jax.lax.scan(one_round, w0, keys)
     trace["w_final"] = w_final
+    if ledger is not None:
+        d = w0.shape[-1]
+        ledger.record_protocol_trace(trace, n, d, comm.codec)
     return trace

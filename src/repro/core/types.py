@@ -16,13 +16,10 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-# Message kinds broadcast in a TDMA slot.
-MSG_RAW = 0        # raw d-dimensional gradient
-MSG_ECHO = 1       # echo message (k, x, I)
-MSG_SILENT = 2     # crashed / absent worker (server times out -> Byzantine)
-
-# Float width used by the paper's bit accounting (floats/doubles per dim).
-BITS_PER_FLOAT = 32
+# Message kinds + the paper's float width now live with the wire formats
+# (repro.comm.wire) and are re-exported here for the protocol buffers.
+from repro.comm.wire import (BITS_PER_FLOAT, FP32, MSG_ECHO,  # noqa: F401
+                             MSG_RAW, MSG_SILENT)
 
 
 class RoundMessages(NamedTuple):
@@ -66,8 +63,13 @@ class ProtocolConfig(NamedTuple):
 
 
 def raw_bits(d: int) -> int:
-    """Bits to broadcast a raw gradient: d floats (paper Sec. 2.1)."""
-    return BITS_PER_FLOAT * d
+    """Bits to broadcast a raw gradient: d floats (paper Sec. 2.1).
+
+    Delegates to the ideal fp32 codec — ``repro.comm.wire`` owns the
+    wire-format bit accounting; this closed form is the fp32 special
+    case kept for the paper-facing call sites.
+    """
+    return FP32.raw_msg_bits(d)
 
 
 def echo_bits(n: int, rank: jax.Array | int) -> jax.Array | int:
@@ -75,6 +77,7 @@ def echo_bits(n: int, rank: jax.Array | int) -> jax.Array | int:
 
     One float for the norm ratio, ``|R|`` floats for the coefficients, and an
     n-bit membership bitmap for the sorted ID list ``I`` (an upper bound on
-    any practical encoding of I; O(n) total as in the paper).
+    any practical encoding of I; O(n) total as in the paper). Delegates to
+    the ideal fp32 codec in ``repro.comm.wire``.
     """
-    return BITS_PER_FLOAT * (1 + rank) + n
+    return FP32.echo_msg_bits(n, rank)

@@ -42,6 +42,23 @@ F32 = jnp.float32
 _RIDGE = 1e-6
 
 
+def round_comm_bits(codec, n: int, d: int, k: int, all_echo: bool,
+                    attempted: bool = True) -> int:
+    """Bits one echo-DP driver round costs under ``codec``.
+
+    An attempted optimistic round has every worker broadcast an echo over
+    the k-reference basis (:func:`repro.comm.echo_round_bits`); when the
+    round is invalid (or was never attempted — e.g. a metered channel
+    refused it) every worker retransmits its raw gradient on top. The
+    driver reports this into the shared :class:`repro.comm.CommLedger`.
+    """
+    from repro.comm import echo_round_bits, raw_round_bits
+    bits = echo_round_bits(codec, n, k) if attempted else 0
+    if not (attempted and all_echo):
+        bits += raw_round_bits(codec, n, d)
+    return bits
+
+
 def init_basis(values: Any, k: int) -> List[Any]:
     """K zero reference pytrees shaped like the gradient (f32)."""
     zero = jax.tree.map(lambda v: jnp.zeros(v.shape, F32), values)
@@ -76,12 +93,19 @@ def _ridged(gram: jax.Array) -> jax.Array:
 
 
 def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
-                      axes: Sequence[str], f: int, r: float
+                      axes: Sequence[str], f: int, r: float,
+                      codec=None
                       ) -> Tuple[Any, jax.Array, Dict[str, jax.Array]]:
     """Coefficient-space CGC over the worker axes.
 
     Returns (aggregate, all_echo, diags); the aggregate is only valid
     when ``all_echo`` is True (the driver falls back otherwise).
+
+    ``codec`` (a :class:`repro.comm.Codec`, or None for the lossless
+    default) is applied to each worker's transmitted coefficient vector:
+    the all-gather carries the codec's reconstruction, so a quantized
+    wire format degrades the shared aggregate exactly as it would on the
+    air. The Eq. 7 test stays sender-local on the exact projection.
     """
     axes = tuple(axes)
     K = len(basis)
@@ -97,8 +121,9 @@ def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
     n = int(jax.lax.psum(1, axes))
     all_echo = n_ok == n
 
-    # O(K)-per-worker exchange: coefficients + norms only.
-    xs = jax.lax.all_gather(x, axes)                       # (n, K)
+    # O(K)-per-worker exchange: coefficients + norms only, wire-coded.
+    x_wire = x if codec is None else codec.roundtrip(x)
+    xs = jax.lax.all_gather(x_wire, axes)                  # (n, K)
     norms = _gather_scalar(g_norm, axes)                   # (n,)
     proj_norms = jnp.sqrt(jnp.maximum(
         jnp.einsum("nk,kl,nl->n", xs, gram, xs), 1e-30))

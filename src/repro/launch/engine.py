@@ -45,12 +45,12 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
-from repro.core.types import echo_bits, raw_bits
+from repro.comm import CommConfig, CommLedger, DEFAULT_COMM, raw_round_bits
 from repro.run.registry import TRAIN_STRATEGIES
 from repro.dist import (AGG_FNS, ShardCtx, inject_byzantine, make_shard_ctx,
                         tree_shardings)
 from repro.dist.echo_dp import (basis_gram, echo_dp_aggregate, init_basis,
-                                roll_basis)
+                                roll_basis, round_comm_bits)
 from repro.models import model as M
 from repro.optim import Optimizer, clip_by_global_norm
 
@@ -72,6 +72,9 @@ class TrainSettings:
     fsdp: bool = False             # shard params+opt over the data axes
                                    # (blockwise CGC in the gather VJP)
     remat: str = "full"            # "full" | "save_psum" (§Perf HC2)
+    # Communication setup (repro.comm): wire codec + broadcast channel.
+    # None = the paper's ideal fp32 comm (bitwise the pre-comm engine).
+    comm: Optional[CommConfig] = None
 
 
 # ---------------------------------------------------------------------------
@@ -450,8 +453,14 @@ class EchoDpStrategy(_StrategyBase):
     def aggregate(self, env, grads, settings, data_axes, extra):
         basis = list(extra)
         gram = basis_gram(basis)
+        # lossy codecs quantize the transmitted coefficient vectors; the
+        # lossless default keeps the jaxpr identical to the pre-comm step.
+        codec = settings.comm.codec if settings.comm is not None else None
+        if codec is not None and codec.lossless:
+            codec = None
         agg, all_echo, diags = echo_dp_aggregate(
-            grads, basis, gram, data_axes, settings.f, settings.echo_r)
+            grads, basis, gram, data_axes, settings.f, settings.echo_r,
+            codec=codec)
         return agg, dict(diags, all_echo=all_echo)
 
 
@@ -627,10 +636,19 @@ class Trainer:
     coefficient-space step; when any worker fails the echo test (Eq. 7)
     the round is re-run with the exact CGC step (``ReplicatedStrategy``
     with ``return_aggregate=True``) and the basis rolls with the raw
-    aggregate. Per-round bit accounting follows the paper: an echo
-    attempt costs ``n * echo_bits(n, K)``; a raw (fallback) round adds
-    ``n * raw_bits(d)`` on top; the all-raw baseline is
-    ``n * raw_bits(d)`` every round.
+    aggregate.
+
+    Communication accounting flows through ``repro.comm``: the wire
+    codec prices every round (an echo attempt costs
+    ``n * echo_msg_bits(n, K)``, a raw/fallback round adds
+    ``n * raw_msg_bits(d)``, the all-raw baseline is ``n *
+    raw_msg_bits(d)`` per round — the paper's closed form under fp32),
+    the broadcast channel can fade echo slots (forcing the raw fallback,
+    seeded + reproducible) or refuse over-budget attempts, and every
+    round reports into one :class:`~repro.comm.CommLedger` whose fields
+    feed the metrics sink. Checkpoint writes happen on a background
+    thread (``ckpt_lib.AsyncCheckpointWriter``) so the driver loop never
+    blocks on .npz serialization; ``restore``/``close`` flush it.
     """
 
     def __init__(self, strategy, cfg, opt: Optimizer,
@@ -645,6 +663,8 @@ class Trainer:
         self.settings = settings
         self.config = config
         self.mesh = mesh
+        self.comm = settings.comm if settings.comm is not None \
+            else DEFAULT_COMM
         self.bundle = strategy.build(cfg, opt, settings, mesh, global_batch)
         self.step_fn = jax.jit(self.bundle.fn)
         self.fallback_fn = None
@@ -660,12 +680,29 @@ class Trainer:
                                 printer)
         self.n_workers = self.bundle.ctx.num_workers
         self._d: Optional[int] = None
-        self.n_rounds = 0
-        self.n_echo = 0
-        self.bits_sent = 0
-        self.bits_baseline = 0
+        self.ledger = CommLedger()
+        self._ckpt_writer: Optional[ckpt_lib.AsyncCheckpointWriter] = None
         self._first_loss: Optional[float] = None
         self._last_loss: Optional[float] = None
+
+    # Legacy counter surface — reads delegate to the comm ledger, which
+    # is the single accounting authority now.
+
+    @property
+    def n_rounds(self) -> int:
+        return self.ledger.rounds
+
+    @property
+    def n_echo(self) -> int:
+        return self.ledger.echo_rounds
+
+    @property
+    def bits_sent(self) -> int:
+        return self.ledger.bits_sent
+
+    @property
+    def bits_baseline(self) -> int:
+        return self.ledger.bits_baseline
 
     # --- state management -------------------------------------------
 
@@ -688,6 +725,8 @@ class Trainer:
 
     def restore(self, like: TrainState, step: Optional[int] = None
                 ) -> TrainState:
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.flush()     # pending async saves land first
         extra_like = {"basis": like.basis} if like.basis is not None else None
         values, opt_state, extra, at, complete = ckpt_lib.restore_train_state(
             self.config.ckpt_dir, like.values, like.opt_state,
@@ -705,15 +744,28 @@ class Trainer:
             if extra is not None else like.basis
         return TrainState(values, opt_state, at, basis)
 
-    def save(self, state: TrainState) -> Optional[str]:
+    def save(self, state: TrainState, wait: bool = True) -> Optional[str]:
+        """Checkpoint ``state``; returns the target .npz path.
+
+        The write runs on the background checkpoint thread (jax arrays
+        are immutable, so enqueueing references is snapshot-safe).
+        ``wait=True`` (the default for direct calls) blocks until it is
+        on disk; the driver loop passes ``wait=False`` so periodic
+        checkpoints never stall training.
+        """
         if not self.config.ckpt_dir:
             return None
+        if self._ckpt_writer is None:
+            self._ckpt_writer = ckpt_lib.AsyncCheckpointWriter()
         extra_state = ({"basis": state.basis}
                        if state.basis is not None else None)
-        return ckpt_lib.save_train_state(
+        path = self._ckpt_writer.submit(
             self.config.ckpt_dir, state.step, state.values, state.opt_state,
             extra_state=extra_state,
             extra={"strategy": self.bundle.name})
+        if wait:
+            self._ckpt_writer.flush()
+        return path
 
     # --- the loop ----------------------------------------------------
 
@@ -728,31 +780,52 @@ class Trainer:
         step_arr = jnp.asarray(state.step)
         n = self.n_workers
         d = self._grad_dim(state.values)
-        raw_round = n * raw_bits(d)
+        codec, channel = self.comm.codec, self.comm.channel
+        raw_round = raw_round_bits(codec, n, d)
         record: Dict[str, Any] = {"step": state.step,
                                   "strategy": self.bundle.name}
+        echoed = False
 
         if self.bundle.needs_basis:
             K = self.settings.echo_k
-            echo_round = n * int(echo_bits(n, K))
-            v, o, m, agg = self.step_fn(state.values, state.opt_state,
-                                        batch, step_arr, state.basis)
-            all_echo = bool(m["all_echo"])
-            if all_echo:
-                bits = echo_round
+            echo_round = n * int(codec.echo_msg_bits(n, K))
+            # A metered channel can refuse the optimistic attempt when a
+            # whole echo round would blow the per-round budget.
+            attempted = channel.allows_bits(echo_round)
+            # A faded echo slot cannot be verified: its sender retransmits
+            # raw, so the coefficient-space aggregate (which needs every
+            # echo delivered) is invalid and the round falls back. The
+            # draw depends only on (seed, step, n) — the bits trajectory
+            # replays exactly — so it happens BEFORE the optimistic step:
+            # a round the channel already doomed skips straight to the
+            # fallback instead of paying for two full train steps.
+            drops = channel.round_echo_drops(state.step, n) if attempted \
+                else 0
+            all_echo = False
+            if attempted and drops == 0:
+                v, o, m, agg = self.step_fn(state.values, state.opt_state,
+                                            batch, step_arr, state.basis)
+                all_echo = bool(m["all_echo"])
+            echoed = attempted and all_echo and drops == 0
+            if echoed:
                 rolled = self.config.roll_policy == "always"
                 basis = roll_basis(state.basis, agg) if rolled \
                     else state.basis
             else:
-                # optimistic round invalid: fall back to the exact CGC
+                # optimistic round invalid (Eq. 7 failed, echo slots
+                # faded, or never attempted): fall back to the exact CGC
                 # step and roll the basis with the raw aggregate.
                 v, o, m, agg = self.fallback_fn(
                     state.values, state.opt_state, batch, step_arr)
-                bits = echo_round + raw_round
                 basis = roll_basis(state.basis, agg)
                 rolled = True
-            self.n_echo += int(all_echo)
-            record.update(all_echo=all_echo, basis_rolled=rolled)
+            bits = round_comm_bits(codec, n, d, K, all_echo and drops == 0,
+                                   attempted)
+            record.update(all_echo=echoed, basis_rolled=rolled)
+            if drops:
+                record["echo_drops"] = drops
+            if not attempted:
+                record["comm_refused"] = True
             new_state = TrainState(v, o, state.step + 1, basis)
         else:
             out = self.step_fn(state.values, state.opt_state, batch,
@@ -761,16 +834,12 @@ class Trainer:
             bits = raw_round
             new_state = TrainState(v, o, state.step + 1, None)
 
-        self.n_rounds += 1
-        self.bits_sent += bits
-        self.bits_baseline += raw_round
         loss = float(m["loss"])
         if self._first_loss is None:
             self._first_loss = loss
         self._last_loss = loss
-        record.update(loss=loss, bits=bits,
-                      bits_cumulative=self.bits_sent,
-                      bits_baseline_cumulative=self.bits_baseline)
+        record.update(loss=loss, **self.ledger.record_round(
+            bits=bits, baseline=raw_round, echoed=echoed))
         for k in ("echo_frac", "grad_global_norm", "cgc_threshold",
                   "cgc_clipped_frac"):
             if k in m:
@@ -789,31 +858,38 @@ class Trainer:
             if cfg.ckpt_dir and cfg.ckpt_every \
                     and state.step % cfg.ckpt_every == 0 \
                     and state.step < steps:
-                self.save(state)
+                self.save(state, wait=False)   # off the driver thread
         if cfg.ckpt_dir:
+            # the final snapshot is synchronous: fit() returning means it
+            # is durable even if the caller never close()s (the periodic
+            # saves above are the ones that must stay off the hot loop).
             self.save(state)
         summary = self.summary()
         summary["wall_s"] = round(time.time() - t0, 2)
         return state, summary
 
     def close(self) -> None:
-        """Release the metrics sink (call when done with the Trainer —
-        fit() can be called again to continue, so it never closes)."""
+        """Release the metrics sink and the background checkpoint writer
+        (call when done with the Trainer — fit() can be called again to
+        continue, so it never closes)."""
         self.sink.close()
+        if self._ckpt_writer is not None:
+            self._ckpt_writer.close()
+            self._ckpt_writer = None
 
     def summary(self) -> Dict[str, Any]:
+        led = self.ledger.summary()
         s: Dict[str, Any] = {
             "strategy": self.bundle.name,
-            "rounds": self.n_rounds,
+            "rounds": led["rounds"],
             "workers": self.n_workers,
-            "bits_sent": self.bits_sent,
-            "bits_baseline": self.bits_baseline,
+            "bits_sent": led["bits_sent"],
+            "bits_baseline": led["bits_baseline"],
             "first_loss": self._first_loss,
             "final_loss": self._last_loss,
         }
-        if self.bundle.needs_basis and self.n_rounds:
-            s["echo_rounds"] = self.n_echo
-            s["echo_rate"] = self.n_echo / self.n_rounds
-            s["bits_saving"] = 1.0 - self.bits_sent / max(
-                self.bits_baseline, 1)
+        if self.bundle.needs_basis and led["rounds"]:
+            s["echo_rounds"] = led["echo_rounds"]
+            s["echo_rate"] = led["echo_rate"]
+            s["bits_saving"] = led["bits_saving"]
         return s

@@ -12,26 +12,29 @@ job.json [--set key.path=value ...]``) is a thin shell over these
 facades; the legacy per-entrypoint CLIs adapt their flags into a
 RunConfig and call the same functions.
 """
-from .config import (SCHEMA_VERSION, BenchSpec, DataSpec, DryrunSpec,
-                     MeshSpec, ModelSpec, RunConfig, SamplingSpec,
-                     ScenarioSpec, ServeSpec, TrainSpec, apply_overrides,
-                     config_hash)
+from .config import (SCHEMA_VERSION, BenchSpec, CommSpec, DataSpec,
+                     DryrunSpec, MeshSpec, ModelSpec, RunConfig,
+                     SamplingSpec, ScenarioSpec, ServeSpec, TrainSpec,
+                     apply_overrides, config_hash)
 from .facade import (BenchResult, DryrunResult, RunResult, ServeResult,
                      TrainResult, bench, dryrun, serve, train)
-from .registry import (AGGREGATORS, ATTACKS, COLLECTIVE_AGGREGATORS,
-                       NORM_BACKENDS, PAGED_ATTN_BACKENDS, SCALE_BACKENDS,
+from .registry import (AGGREGATORS, ATTACKS, CHANNELS, CODECS,
+                       COLLECTIVE_AGGREGATORS, NORM_BACKENDS,
+                       PAGED_ATTN_BACKENDS, SCALE_BACKENDS,
                        TRAIN_STRATEGIES, DuplicateRegistrationError,
                        Registry, available)
 from .rundir import make_run_dir, run_dir_tag
+from .sweep import sweep
 
 __all__ = [
-    "SCHEMA_VERSION", "BenchSpec", "DataSpec", "DryrunSpec", "MeshSpec",
-    "ModelSpec", "RunConfig", "SamplingSpec", "ScenarioSpec", "ServeSpec",
-    "TrainSpec", "apply_overrides", "config_hash",
+    "SCHEMA_VERSION", "BenchSpec", "CommSpec", "DataSpec", "DryrunSpec",
+    "MeshSpec", "ModelSpec", "RunConfig", "SamplingSpec", "ScenarioSpec",
+    "ServeSpec", "TrainSpec", "apply_overrides", "config_hash",
     "BenchResult", "DryrunResult", "RunResult", "ServeResult",
     "TrainResult", "bench", "dryrun", "serve", "train",
-    "AGGREGATORS", "ATTACKS", "COLLECTIVE_AGGREGATORS", "NORM_BACKENDS",
+    "AGGREGATORS", "ATTACKS", "CHANNELS", "CODECS",
+    "COLLECTIVE_AGGREGATORS", "NORM_BACKENDS",
     "PAGED_ATTN_BACKENDS", "SCALE_BACKENDS", "TRAIN_STRATEGIES",
     "DuplicateRegistrationError", "Registry", "available",
-    "make_run_dir", "run_dir_tag",
+    "make_run_dir", "run_dir_tag", "sweep",
 ]

@@ -9,7 +9,7 @@ metrics:
     RunConfig
       model     ModelSpec | None   architecture (None: quadratic cost runs)
       mesh      MeshSpec           host-device forcing + MoE impl
-      scenario  ScenarioSpec       aggregator / attack / f / echo / data
+      scenario  ScenarioSpec       aggregator / attack / f / echo / data / comm
       train     TrainSpec | None   trainer workload
       serve     ServeSpec | None   serving workload (incl. sampling)
       dryrun    DryrunSpec | None  lower+compile workload
@@ -44,14 +44,35 @@ class SamplingSpec:
     ``temperature == 0`` is exact greedy argmax (the default — bitwise
     the pre-sampling engine). ``temperature > 0`` softmax-samples, with
     the distribution truncated to the ``top_k`` largest logits when
-    ``top_k > 0``. ``seed`` makes runs reproducible: the engine derives
-    one PRNG key per dispatch from it, so the same submissions produce
-    the same tokens.
+    ``top_k > 0`` and/or to the nucleus (smallest set of tokens whose
+    cumulative probability reaches ``top_p``) when ``0 < top_p < 1`` —
+    both filters compose, top-k first. ``seed`` makes runs reproducible:
+    the engine derives one PRNG key per dispatch from it, so the same
+    submissions produce the same tokens.
     """
 
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 0.0               # 0 (or >= 1) disables nucleus
     seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Communication setup: how gradients/echoes are wire-coded and what
+    broadcast medium carries them (``repro.comm``, DESIGN.md §9).
+
+    ``codec`` prices (and for lossy codecs, quantizes) every message;
+    ``channel`` is the single-hop radio model. The defaults are the
+    paper's ideal reliable fp32 broadcast — bitwise the pre-comm stack.
+    """
+
+    channel: str = "ideal"           # registry: channels (ideal|lossy|metered)
+    codec: str = "fp32"              # registry: codecs (fp32|bf16|int8|topk)
+    drop_prob: float = 0.0           # lossy: per-slot fade probability
+    seed: int = 0                    # channel PRNG seed
+    budget_bits: int = 0             # metered: per-round bit budget (0 = off)
+    topk: int = 32                   # topk codec: entries kept per vector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +123,7 @@ class ScenarioSpec:
     echo_k: int = 4                  # echo-DP reference basis size
     echo_r: float = 0.9              # echo-DP deviation ratio (Eq. 7)
     data: DataSpec = DataSpec()
+    comm: CommSpec = CommSpec()      # wire codec + broadcast channel
 
 
 @dataclasses.dataclass(frozen=True)

@@ -196,6 +196,7 @@ def train(cfg: RunConfig) -> TrainResult:
 
     import jax
 
+    from repro.comm import resolve as resolve_comm
     from repro.data import make_batch_iterator
     from repro.launch.engine import (Trainer, TrainerConfig, TrainSettings,
                                      TRAIN_STRATEGIES)
@@ -211,7 +212,8 @@ def train(cfg: RunConfig) -> TrainResult:
         aggregator=scen.aggregator, f=scen.f, n_byz=scen.n_byz,
         byz_mode=scen.attack, microbatches=tspec.microbatches,
         clip_norm=tspec.clip_norm, echo_k=scen.echo_k, echo_r=scen.echo_r,
-        moe_impl=cfg.mesh.moe_impl, fsdp=tspec.strategy == "fsdp")
+        moe_impl=cfg.mesh.moe_impl, fsdp=tspec.strategy == "fsdp",
+        comm=resolve_comm(scen.comm))
     optimizers = {"adamw": adamw, "sgd": sgd}
     if tspec.optimizer not in optimizers:
         raise ValueError(f"unknown train.optimizer {tspec.optimizer!r}; "
@@ -244,8 +246,12 @@ def train(cfg: RunConfig) -> TrainResult:
                                     resume=tspec.resume,
                                     metrics_path=metrics_path),
                       loss_fn=loss_fn)
+    comm_tag = (f" comm={scen.comm.channel}/{scen.comm.codec}"
+                if (scen.comm.channel, scen.comm.codec) != ("ideal", "fp32")
+                else "")
     print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
-          f"aggregator={scen.aggregator} f={scen.f} run_dir={run_dir}")
+          f"aggregator={scen.aggregator} f={scen.f}{comm_tag} "
+          f"run_dir={run_dir}")
 
     if quadratic:
         state = trainer.init_state(values)

@@ -92,6 +92,8 @@ class Registry(Mapping):
 #   NORM_BACKENDS          kernels/ops.py           tree_sq_norm dispatch
 #   SCALE_BACKENDS         kernels/ops.py           scale_rows dispatch
 #   PAGED_ATTN_BACKENDS    kernels/ops.py           paged decode attention
+#   CODECS                 comm/wire.py             wire-format builders
+#   CHANNELS               comm/channel.py          broadcast channel builders
 # ---------------------------------------------------------------------------
 
 AGGREGATORS = Registry("aggregator")
@@ -101,6 +103,8 @@ TRAIN_STRATEGIES = Registry("train strategy")
 NORM_BACKENDS = Registry("norm kernel backend")
 SCALE_BACKENDS = Registry("scale kernel backend")
 PAGED_ATTN_BACKENDS = Registry("paged-attention kernel backend")
+CODECS = Registry("wire codec")
+CHANNELS = Registry("broadcast channel")
 
 _REGISTRIES: Dict[str, Registry] = {
     "aggregators": AGGREGATORS,
@@ -110,12 +114,14 @@ _REGISTRIES: Dict[str, Registry] = {
     "norm_backends": NORM_BACKENDS,
     "scale_backends": SCALE_BACKENDS,
     "paged_attn_backends": PAGED_ATTN_BACKENDS,
+    "codecs": CODECS,
+    "channels": CHANNELS,
 }
 
 # modules whose import populates the registries above
 _HOSTS = ("repro.core.aggregators", "repro.core.byzantine",
           "repro.dist.collectives", "repro.launch.engine",
-          "repro.kernels.ops")
+          "repro.kernels.ops", "repro.comm.wire", "repro.comm.channel")
 
 
 def load_plugins() -> None:

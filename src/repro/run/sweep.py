@@ -1,0 +1,71 @@
+"""Grid expansion over RunConfig dotted paths (DESIGN.md §8).
+
+``sweep(base, {"train.lr": [1e-3, 3e-4], "scenario.f": [0, 1]})``
+expands the cartesian product of the grid axes into one fully-resolved
+:class:`RunConfig` per point, reusing the CLI's dotted-path override
+machinery — so every value coerces exactly as ``--set`` would and an
+unknown path fails with the same did-you-mean error before anything
+runs. Each point's ``name`` gets a deterministic ``key=value`` suffix,
+and ``out_dir`` optionally emits one loadable job file per point:
+
+    from repro import run
+    cfgs = run.sweep(base, {"train.lr": [1e-3, 3e-4]},
+                     out_dir="experiments/jobs/lr-sweep")
+    for cfg in cfgs:
+        run.train(cfg)
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import re
+from typing import Dict, List, Sequence
+
+from .config import RunConfig, apply_overrides
+
+_SAFE = re.compile(r"[^A-Za-z0-9._=+-]+")
+
+
+def _point_suffix(assignment: Dict[str, object]) -> str:
+    parts = [f"{key.rsplit('.', 1)[-1]}={value}"
+             for key, value in assignment.items()]
+    return _SAFE.sub("-", "-".join(parts))
+
+
+def sweep(base: RunConfig, grid: Dict[str, Sequence],
+          out_dir: str | None = None) -> List[RunConfig]:
+    """Expand ``grid`` (dotted path -> candidate values) over ``base``.
+
+    Returns the configs in row-major order of the grid's insertion
+    order. With ``out_dir``, writes ``<name>.json`` per point (the file
+    set IS the sweep: each job reruns standalone through
+    ``python -m repro train --config ...``).
+    """
+    if not grid:
+        raise ValueError("sweep needs at least one grid axis, e.g. "
+                         "{'train.lr': [1e-3, 3e-4]}")
+    axes = [(key, list(values)) for key, values in grid.items()]
+    for key, values in axes:
+        if not values:
+            raise ValueError(f"sweep axis {key!r} has no values")
+    configs: List[RunConfig] = []
+    for combo in itertools.product(*(values for _, values in axes)):
+        assignment = {key: value
+                      for (key, _), value in zip(axes, combo)}
+        cfg = apply_overrides(base, [f"{k}={v}"
+                                     for k, v in assignment.items()])
+        cfg = apply_overrides(
+            cfg, [f"name={base.name}-{_point_suffix(assignment)}"])
+        configs.append(cfg)
+    names = [cfg.name for cfg in configs]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(
+            f"sweep points collide on name(s) {dupes} (values sanitize "
+            f"to the same suffix) — rename the base config or "
+            f"disambiguate the grid values")
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        for cfg in configs:
+            cfg.save(os.path.join(out_dir, f"{cfg.name}.json"))
+    return configs

@@ -58,7 +58,8 @@ class ServeConfig:
     log_every: int = 10
     # token sampling policy: temperature 0 = exact greedy argmax (the
     # pre-sampling engine, bitwise); > 0 softmax-samples, truncated to
-    # the top_k largest logits when top_k > 0, seeded per dispatch.
+    # the top_k largest logits (top_k > 0) and/or the top_p nucleus
+    # (0 < top_p < 1), seeded per dispatch.
     sampling: SamplingSpec = SamplingSpec()
 
 
@@ -131,8 +132,9 @@ class ServeEngine:
 
         The spec is trace-time static: the greedy default compiles to
         exactly the old argmax (bitwise), temperature > 0 compiles to a
-        seeded categorical over the (optionally top-k-truncated)
-        temperature-scaled logits.
+        seeded categorical over the temperature-scaled logits, truncated
+        by top-k and/or the top-p nucleus when enabled (top-k first, as
+        the conventional composition).
         """
         s = self.serve.sampling
         if s.temperature <= 0.0:
@@ -150,6 +152,16 @@ class ServeEngine:
             kth = jax.lax.top_k(scaled, min(s.top_k,
                                             scaled.shape[-1]))[0][..., -1:]
             scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        if 0.0 < s.top_p < 1.0:
+            # nucleus: keep the smallest descending-prob prefix whose
+            # cumulative mass reaches top_p. A token survives iff the
+            # mass *before* it is < top_p, so the top token always does.
+            desc = jnp.sort(scaled, axis=-1)[..., ::-1]
+            probs = jax.nn.softmax(desc, axis=-1)
+            before = jnp.cumsum(probs, axis=-1) - probs
+            kept = jnp.where(before < s.top_p, desc, jnp.inf)
+            cutoff = jnp.min(kept, axis=-1, keepdims=True)
+            scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
         return jax.random.categorical(key, scaled, axis=-1).astype(
             jnp.int32)
 

@@ -110,6 +110,45 @@ def test_train_state_legacy_values_only(tmp_path):
         np.asarray(a), np.asarray(b)), values, v2)
 
 
+def test_async_writer_roundtrip_and_flush(tmp_path):
+    """AsyncCheckpointWriter: submit returns the target path immediately,
+    flush makes it durable, writes land in submission order, close is
+    idempotent and a closed writer refuses new work."""
+    from repro.optim import adamw
+    opt = adamw(0.1)
+    values = _tree(4)
+    state = opt.init(values)
+    w = ck.AsyncCheckpointWriter()
+    paths = [w.submit(str(tmp_path), s, values, state,
+                      extra={"strategy": "replicated"}) for s in (3, 9)]
+    assert paths[1].endswith("step_00000009.npz")
+    assert w.flush()
+    assert ck.latest_step(str(tmp_path)) == 9
+    v2, s2, _, step, complete = ck.restore_train_state(
+        str(tmp_path), values, state)
+    assert complete and step == 9
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), values, v2)
+    w.close()
+    w.close()                                  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(str(tmp_path), 10, values, state)
+
+
+def test_async_writer_surfaces_errors_on_flush(tmp_path):
+    """A failed background write must not vanish: flush re-raises it."""
+    w = ck.AsyncCheckpointWriter()
+    bad = tmp_path / "file"
+    bad.write_text("not a directory")
+    w.submit(str(bad / "sub"), 0, {"x": jnp.ones(2)}, {"m": jnp.ones(2)})
+    with pytest.raises(RuntimeError, match="async checkpoint"):
+        w.flush()
+    # the writer survives the error and keeps serving
+    w.submit(str(tmp_path), 1, {"x": jnp.ones(2)}, {"m": jnp.ones(2)})
+    assert w.flush()
+    w.close()
+
+
 def test_training_resume_equivalence(tmp_path):
     """Save at step k, restore, continue — identical to uninterrupted run."""
     from repro.optim import adamw

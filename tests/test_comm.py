@@ -1,0 +1,395 @@
+"""repro.comm: wire codecs, broadcast channels, the bit ledger, and
+their integration with the protocol simulation and the echo-DP driver
+(DESIGN.md §9)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.comm import (CommConfig, CommLedger, DEFAULT_COMM, EchoMsg,
+                        IdealBroadcast, Int8Codec, LossyBroadcast,
+                        MeteredBroadcast, RawGradientMsg, SilentMsg,
+                        TopKCodec, payload_bits, raw_round_bits, resolve)
+from repro.core import byzantine, costfns, protocol
+from repro.core.types import ProtocolConfig, echo_bits, raw_bits
+
+ALL_CODECS = (comm.Fp32Codec(), comm.Bf16Codec(), Int8Codec(),
+              TopKCodec(k=8))
+
+
+def _setup(n=12, d=24, seed=0, r=0.3):
+    g = jnp.tile(jax.random.normal(jax.random.PRNGKey(seed), (d,)), (n, 1))
+    cfg = ProtocolConfig(n=n, f=1, r=r, eta=0.01)
+    plan = byzantine.no_attack(jax.random.PRNGKey(1), jnp.zeros((n, d)),
+                               jnp.zeros(n, bool), None, None)
+    return cfg, g, plan
+
+
+# ---------------------------------------------------------------------------
+# Codecs
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_codec_is_the_closed_form():
+    """The ideal codec IS core.types.raw_bits/echo_bits, bit for bit —
+    the codecs replaced the closed-form constants as source of truth."""
+    c = DEFAULT_COMM.codec
+    for d in (1, 50, 1000):
+        assert c.raw_msg_bits(d) == raw_bits(d) == 32 * d
+    for n in (4, 10, 64):
+        for rank in (0, 1, n // 2, n):
+            assert c.echo_msg_bits(n, rank) == echo_bits(n, rank) \
+                == 32 * (1 + rank) + n
+    # the traced-rank path agrees with the python-int path
+    got = jax.jit(lambda r: c.echo_msg_bits(10, r))(jnp.int32(3))
+    assert int(got) == echo_bits(10, 3)
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS, ids=lambda c: c.name)
+def test_codec_bit_size_is_honest(codec):
+    """The advertised vector_bits equals the actual encoded payload."""
+    for m in (1, 5, 37, 256):
+        v = jax.random.normal(jax.random.PRNGKey(m), (m,))
+        assert payload_bits(codec.encode(v)) == int(codec.vector_bits(m))
+
+
+@pytest.mark.parametrize("codec", ALL_CODECS, ids=lambda c: c.name)
+def test_codec_roundtrip_error_bounds(codec):
+    v = jax.random.normal(jax.random.PRNGKey(7), (64,))
+    rt = codec.roundtrip(v)
+    assert rt.shape == v.shape and rt.dtype == jnp.float32
+    err = np.abs(np.asarray(rt) - np.asarray(v))
+    if codec.lossless:
+        assert np.array_equal(np.asarray(rt), np.asarray(v))
+    elif codec.name == "bf16":
+        assert np.all(err <= np.abs(np.asarray(v)) / 128 + 1e-7)
+    elif codec.name == "int8":
+        scale = float(np.max(np.abs(np.asarray(v)))) / 127.0
+        assert np.all(err <= scale * 0.5 + 1e-7)
+    elif codec.name == "topk":
+        # kept entries are exact, dropped entries decode to zero
+        rt_np, v_np = np.asarray(rt), np.asarray(v)
+        kept = rt_np != 0.0
+        assert kept.sum() <= codec.k
+        np.testing.assert_array_equal(rt_np[kept], v_np[kept])
+        # the k largest magnitudes all survived
+        order = np.argsort(-np.abs(v_np))[:codec.k]
+        assert kept[order].all()
+
+
+def test_typed_messages_price_like_the_codec():
+    n, d = 10, 40
+    c = DEFAULT_COMM.codec
+    raw = RawGradientMsg(grad=jnp.ones((d,)))
+    assert raw.bits(c, n) == raw_bits(d)
+    ref = jnp.zeros((n,), bool).at[jnp.array([0, 3, 4])].set(True)
+    echo = EchoMsg(ratio=jnp.float32(1.5),
+                   coeffs=jnp.ones((n,)) * ref, ref=ref)
+    assert echo.bits(c, n) == echo_bits(n, 3)
+    assert SilentMsg().bits(c, n) == 0
+    # the dense payload (ratio + referenced coefficients) prices the
+    # float part of the message
+    assert payload_bits(echo.payload(c)) == 32 * (1 + 3)
+
+
+def test_messages_from_round_decodes_the_dense_buffers():
+    from repro.core.types import MSG_ECHO, MSG_RAW, MSG_SILENT, RoundMessages
+    n, d = 4, 6
+    rm = RoundMessages(
+        kind=jnp.array([MSG_RAW, MSG_ECHO, MSG_SILENT, MSG_RAW]),
+        raw=jnp.arange(n * d, dtype=jnp.float32).reshape(n, d),
+        echo_k=jnp.ones((n,)),
+        echo_x=jnp.zeros((n, n)).at[1, 0].set(2.0),
+        echo_ref=jnp.zeros((n, n), bool).at[1, 0].set(True))
+    msgs = comm.messages_from_round(rm)
+    assert [type(m) for m in msgs] == [RawGradientMsg, EchoMsg, SilentMsg,
+                                       RawGradientMsg]
+    assert msgs[1].bits(DEFAULT_COMM.codec, n) == echo_bits(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# Channels in the protocol slot loop
+# ---------------------------------------------------------------------------
+
+
+def test_ideal_channel_is_bitwise_todays_protocol():
+    """comm=None, comm=DEFAULT_COMM and an explicitly-built ideal/fp32
+    config all produce identical results — the redesign is invisible
+    until a scenario opts in."""
+    cfg, g, plan = _setup()
+    byz = jnp.zeros(cfg.n, bool)
+    a = protocol.communication_phase(cfg, g, byz, plan)
+    b = protocol.communication_phase(cfg, g, byz, plan, comm=DEFAULT_COMM)
+    c = protocol.communication_phase(cfg, g, byz, plan,
+                                     comm=CommConfig(IdealBroadcast(),
+                                                     comm.Fp32Codec()))
+    for x, y in ((a, b), (a, c)):
+        np.testing.assert_array_equal(np.asarray(x[0].G), np.asarray(y[0].G))
+        np.testing.assert_array_equal(np.asarray(x[1].bits_sent),
+                                      np.asarray(y[1].bits_sent))
+
+
+def test_lossy_channel_seeded_and_shrinks_reference_set():
+    cfg, g, plan = _setup(n=16)
+    byz = jnp.zeros(cfg.n, bool)
+    lossy = CommConfig(channel=LossyBroadcast(drop_prob=0.5, seed=3))
+    _, s1 = protocol.communication_phase(cfg, g, byz, plan, comm=lossy)
+    _, s2 = protocol.communication_phase(cfg, g, byz, plan, comm=lossy)
+    # deterministic under the configured seed
+    np.testing.assert_array_equal(np.asarray(s1.bits_sent),
+                                  np.asarray(s2.bits_sent))
+    # a different round key moves the fades
+    other = protocol.communication_phase(
+        cfg, g, byz, plan, comm=lossy,
+        chan_key=jax.random.PRNGKey(99))[1]
+    assert not np.array_equal(np.asarray(s1.bits_sent),
+                              np.asarray(other.bits_sent))
+    # identical gradients: ideally rank_R == 1 with slot 0 raw; heavy
+    # fading makes later workers raw-retransmit (echo fallback costs
+    # echo + raw bits) and faded raws never enter R
+    _, ideal_stats = protocol.communication_phase(cfg, g, byz, plan)
+    assert int(s1.n_echo) < int(ideal_stats.n_echo)
+    assert float(jnp.sum(s1.bits_sent)) > float(
+        jnp.sum(ideal_stats.bits_sent))
+    # every slot was still received by the server (reliability assumption)
+    assert bool(jnp.all(protocol.communication_phase(
+        cfg, g, byz, plan, comm=lossy)[0].received))
+
+
+def test_metered_channel_budget_is_hard():
+    cfg, g, plan = _setup(n=10, d=50)
+    byz = jnp.zeros(cfg.n, bool)
+    budget = int(1.5 * raw_bits(50))          # fits the slot-0 raw + echoes
+    metered = CommConfig(channel=MeteredBroadcast(budget_bits=budget))
+    server, stats = protocol.communication_phase(cfg, g, byz, plan,
+                                                 comm=metered)
+    assert float(jnp.sum(stats.bits_sent)) <= budget
+    # an impossible budget silences everyone
+    tiny = CommConfig(channel=MeteredBroadcast(budget_bits=8))
+    server2, stats2 = protocol.communication_phase(cfg, g, byz, plan,
+                                                   comm=tiny)
+    assert float(jnp.sum(stats2.bits_sent)) == 0.0
+    assert not bool(jnp.any(server2.received))
+
+
+def test_quantized_echo_keeps_norm_invariant():
+    """int8 wire coding: the sender recomputes the norm ratio against
+    the coefficients AS TRANSMITTED (echo.wire_norm_ratio), so the
+    paper's ||g~|| == ||g|| reconstruction invariant survives
+    quantization."""
+    n, d = 10, 30
+    key = jax.random.PRNGKey(3)
+    base = jax.random.normal(key, (d,))
+    grads = base + 0.05 * jax.random.normal(jax.random.fold_in(key, 1),
+                                            (n, d))
+    cfg = ProtocolConfig(n=n, f=1, r=0.5, eta=0.01)
+    plan = byzantine.no_attack(key, jnp.zeros((n, d)), jnp.zeros(n, bool),
+                               None, None)
+    int8 = CommConfig(codec=Int8Codec())
+    server, stats = protocol.communication_phase(cfg, grads,
+                                                 jnp.zeros(n, bool), plan,
+                                                 comm=int8)
+    assert int(stats.n_echo) >= n // 2
+    gn = np.linalg.norm(np.asarray(grads), axis=1)
+    rn = np.linalg.norm(np.asarray(server.G), axis=1)
+    np.testing.assert_allclose(rn, gn, rtol=2e-3)
+    # and the echo slots got int8 prices, cheaper than fp32 echoes
+    echo_slots = np.asarray(stats.echo_sent)
+    fp32_cost = np.asarray([echo_bits(n, 1)] * n, dtype=np.float32)
+    assert np.all(np.asarray(stats.bits_sent)[echo_slots]
+                  < fp32_cost[echo_slots])
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_matches_closed_form_on_ideal_channel():
+    """Protocol simulation reporting: the ledger's cumulative bits are
+    exactly the trace's (closed-form fp32) bits, and the baseline is the
+    paper's n * 32 * d per round."""
+    key = jax.random.PRNGKey(0)
+    d, n, rounds = 16, 8, 12
+    cost = costfns.quadratic(key, d=d, sigma=0.05)
+    cfg = ProtocolConfig(n=n, f=1, r=0.5, eta=0.05)
+    ledger = CommLedger()
+    trace = protocol.run_training(cfg, cost, byzantine.no_attack,
+                                  jnp.zeros(n, bool), key, jnp.ones(d),
+                                  rounds=rounds, ledger=ledger)
+    assert ledger.rounds == rounds
+    assert ledger.bits_sent == int(np.asarray(trace["bits"]).sum())
+    assert ledger.bits_baseline == rounds * n * raw_bits(d)
+    assert ledger.bits_sent < ledger.bits_baseline
+    assert 0.0 < ledger.bits_saving < 1.0
+    assert ledger.echo_rounds == int((np.asarray(trace["n_echo"]) > 0).sum())
+    s = ledger.summary()
+    assert s["bits_sent"] == ledger.bits_sent
+    assert s["echo_rate"] == ledger.echo_rounds / rounds
+
+
+def test_round_cost_helpers():
+    from repro.dist.echo_dp import round_comm_bits
+    c = DEFAULT_COMM.codec
+    n, d, k = 8, 128, 4
+    assert raw_round_bits(c, n, d) == n * raw_bits(d)
+    assert comm.echo_round_bits(c, n, k) == n * int(echo_bits(n, k))
+    assert round_comm_bits(c, n, d, k, all_echo=True) \
+        == n * int(echo_bits(n, k))
+    assert round_comm_bits(c, n, d, k, all_echo=False) \
+        == n * int(echo_bits(n, k)) + n * raw_bits(d)
+    assert round_comm_bits(c, n, d, k, all_echo=False, attempted=False) \
+        == n * raw_bits(d)
+
+
+# ---------------------------------------------------------------------------
+# Config surface: resolve + registries
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_builds_from_the_registries():
+    from repro.run import CommSpec, available
+
+    assert resolve(None) is DEFAULT_COMM
+    got = resolve(CommSpec())
+    assert got.channel.name == "ideal" and got.codec.name == "fp32"
+    got = resolve(CommSpec(channel="lossy", codec="topk", drop_prob=0.25,
+                           seed=7, topk=16))
+    assert isinstance(got.channel, LossyBroadcast)
+    assert got.channel.drop_prob == 0.25 and got.channel.seed == 7
+    assert isinstance(got.codec, TopKCodec) and got.codec.k == 16
+    got = resolve(CommSpec(channel="metered", budget_bits=1024))
+    assert isinstance(got.channel, MeteredBroadcast)
+    assert got.channel.budget_bits == 1024
+    # unknown names: ValueError with the known alternatives (CLI-friendly)
+    with pytest.raises(ValueError, match="fp32"):
+        resolve(CommSpec(codec="fp64"))
+    with pytest.raises(ValueError, match="lossy"):
+        resolve(CommSpec(channel="fading"))
+    with pytest.raises(ValueError, match="drop_prob"):
+        resolve(CommSpec(channel="lossy", drop_prob=1.5))
+    # knobs inconsistent with the selected channel are rejected, not
+    # silently ignored (a half-specified lossy scenario would otherwise
+    # run ideal while its config.json claims losses)
+    with pytest.raises(ValueError, match="channel=lossy"):
+        resolve(CommSpec(drop_prob=0.1))
+    with pytest.raises(ValueError, match="channel=metered"):
+        resolve(CommSpec(channel="lossy", drop_prob=0.1, budget_bits=64))
+    names = available()
+    assert names["codecs"] == ["bf16", "fp32", "int8", "topk"]
+    assert names["channels"] == ["ideal", "lossy", "metered"]
+
+
+def test_comm_config_is_jit_static():
+    cc = CommConfig(channel=LossyBroadcast(drop_prob=0.3, seed=1),
+                    codec=Int8Codec())
+    assert hash(cc) == hash(CommConfig(LossyBroadcast(drop_prob=0.3, seed=1),
+                                       Int8Codec()))
+    g = jax.jit(lambda x, comm: comm.codec.roundtrip(x),
+                static_argnames=("comm",))
+    a = g(jnp.arange(4.0), cc)
+    b = g(jnp.arange(4.0), cc)                 # same static key: cache hit
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# End to end: the echo-DP trainer on a lossy, quantized scenario
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess(body: str):
+    """Run a snippet under 8 fake CPU devices; raise on failure."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+JOB = os.path.join(os.path.dirname(__file__), "..", "experiments", "jobs",
+                   "lossy_echo_cgc.json")
+
+
+def test_lossy_job_end_to_end_reproducible(tmp_path):
+    """The acceptance scenario: the lossy/int8 quadratic job runs end to
+    end through the train facade with a seeded, replayable bits
+    trajectory, and fades force raw fallbacks the ledger prices."""
+    out = _run_subprocess(f"""
+        import json
+        from repro import run
+
+        base = run.RunConfig.load({str(JOB)!r})
+        base = run.apply_overrides(
+            base, ["train.steps=6", "runs_root=" + {str(tmp_path)!r}])
+
+        results = [run.train(base) for _ in range(2)]
+        trajs = []
+        for res in results:
+            recs = [json.loads(l) for l in
+                    open(res.metrics_path).read().splitlines()]
+            trajs.append([(r["bits"], r["bits_cumulative"],
+                           r["all_echo"], r.get("echo_drops", 0))
+                          for r in recs])
+        assert trajs[0] == trajs[1], trajs     # seeded: replays exactly
+        bits = [t[0] for t in trajs[0]]
+        assert len(bits) == 6
+        s = results[0].summary
+        assert s["bits_sent"] == trajs[0][-1][1]
+        # int8 echo rounds are cheaper than the all-raw fp32 baseline
+        assert s["bits_sent"] < s["bits_baseline"]
+        print("OK", [t[2] for t in trajs[0]], s["bits_saving"])
+    """)
+    assert out.startswith("OK") or "OK" in out
+
+
+def test_trainer_metered_channel_skips_unaffordable_echo():
+    """A metered channel whose budget can't fit one echo round makes the
+    driver skip the optimistic attempt and go straight to raw."""
+    _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.comm import CommConfig, MeteredBroadcast
+        from repro.core import costfns
+        from repro.launch.engine import (EchoDpStrategy, Trainer,
+                                         TrainerConfig, TrainSettings)
+        from repro.optim import sgd
+
+        n, d, K = 8, 64, 4
+        cost = costfns.quadratic(jax.random.PRNGKey(0), d=d, mu=0.5, L=1.0,
+                                 sigma=0.0)
+
+        def loss_fn(values, batch):
+            w = values["w"]
+            return cost.value(w) + w @ jnp.mean(batch["eps"], 0), {}
+
+        mesh = jax.make_mesh((8,), ("data",))
+        comm = CommConfig(channel=MeteredBroadcast(budget_bits=16))
+        settings = TrainSettings(aggregator="cgc", f=1, echo_k=K,
+                                 echo_r=0.9, comm=comm)
+        tr = Trainer(EchoDpStrategy(loss_fn=loss_fn), None, sgd(0.02),
+                     settings, mesh, n, TrainerConfig(log_every=100),
+                     printer=lambda s: None)
+        state = tr.init_state({"w": jnp.ones((d,)) * 2.0})
+        with jax.set_mesh(mesh):
+            for s in range(3):
+                key = jax.random.fold_in(jax.random.PRNGKey(7), s)
+                batch = {"eps": 1e-4 * jax.random.normal(key, (n, d))}
+                state, rec = tr.run_round(state, batch)
+                assert rec["comm_refused"] and not rec["all_echo"]
+        from repro.core.types import raw_bits
+        assert tr.bits_sent == 3 * n * raw_bits(d)   # raw only, no echoes
+        print("OK")
+    """)

@@ -119,12 +119,52 @@ def test_kernel_cgc_matches_ref_property(n, d, seed):
 
 
 # ---------------------------------------------------------------------------
+# Wire codecs (repro.comm, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+from repro.comm import (Bf16Codec, Fp32Codec, Int8Codec,  # noqa: E402
+                        TopKCodec, payload_bits)
+
+_CODEC_BUILDERS = [Fp32Codec, Bf16Codec, Int8Codec,
+                   lambda: TopKCodec(k=8)]
+
+
+@settings(**SETTINGS)
+@given(which=st.integers(0, len(_CODEC_BUILDERS) - 1),
+       m=st.integers(1, 256), seed=st.integers(0, 99),
+       scale=st.floats(1e-6, 1e6))
+def test_codec_roundtrip_and_bit_size_property(which, m, seed, scale):
+    """Every codec: encode -> decode round-trips shape/dtype with its
+    documented error bound, and the advertised vector_bits equals the
+    bits actually in the encoded payload."""
+    codec = _CODEC_BUILDERS[which]()
+    v = scale * jax.random.normal(jax.random.PRNGKey(seed), (m,))
+    payload = codec.encode(v)
+    assert payload_bits(payload) == int(codec.vector_bits(m))
+    rt = codec.decode(payload, m)
+    assert rt.shape == v.shape and rt.dtype == jnp.float32
+    err = np.abs(np.asarray(rt) - np.asarray(v))
+    vmax = float(np.max(np.abs(np.asarray(v)))) + 1e-30
+    if codec.lossless:
+        assert np.array_equal(np.asarray(rt), np.asarray(v))
+    elif codec.name == "bf16":
+        assert np.all(err <= np.abs(np.asarray(v)) / 128 + 1e-7 * vmax)
+    elif codec.name == "int8":
+        assert np.all(err <= vmax / 127 * 0.5 + 1e-6 * vmax)
+    else:                                      # topk: kept entries exact
+        kept = np.asarray(rt) != 0.0
+        np.testing.assert_array_equal(np.asarray(rt)[kept],
+                                      np.asarray(v)[kept])
+        assert kept.sum() <= codec.k
+
+
+# ---------------------------------------------------------------------------
 # RunConfig JSON round-trip (repro.run, DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
-from repro.run import (RunConfig, DataSpec, MeshSpec, ModelSpec,  # noqa: E402
-                       SamplingSpec, ScenarioSpec, ServeSpec, TrainSpec,
-                       apply_overrides, available, config_hash)
+from repro.run import (RunConfig, CommSpec, DataSpec, MeshSpec,  # noqa: E402
+                       ModelSpec, SamplingSpec, ScenarioSpec, ServeSpec,
+                       TrainSpec, apply_overrides, available, config_hash)
 
 _NAMES = available()
 _FINITE = st.floats(allow_nan=False, allow_infinity=False, width=64)
@@ -134,13 +174,17 @@ _FINITE = st.floats(allow_nan=False, allow_infinity=False, width=64)
 @given(agg=st.sampled_from(_NAMES["collective_aggregators"]),
        attack=st.sampled_from(_NAMES["attacks"]),
        strategy=st.sampled_from(_NAMES["train_strategies"]),
+       codec=st.sampled_from(_NAMES["codecs"]),
+       channel=st.sampled_from(_NAMES["channels"]),
+       drop=st.floats(0.0, 0.999),
        f=st.integers(0, 50), steps=st.integers(0, 10 ** 6),
        lr=_FINITE, echo_r=_FINITE, noise=_FINITE,
        temp=_FINITE, top_k=st.integers(0, 10 ** 4),
        smoke=st.booleans(), devices=st.integers(0, 512),
        name=st.text(max_size=40),
        drop_train=st.booleans(), drop_serve=st.booleans())
-def test_runconfig_json_roundtrip_property(agg, attack, strategy, f, steps,
+def test_runconfig_json_roundtrip_property(agg, attack, strategy, codec,
+                                           channel, drop, f, steps,
                                            lr, echo_r, noise, temp, top_k,
                                            smoke, devices, name,
                                            drop_train, drop_serve):
@@ -154,7 +198,9 @@ def test_runconfig_json_roundtrip_property(agg, attack, strategy, f, steps,
         mesh=MeshSpec(devices=devices),
         scenario=ScenarioSpec(aggregator=agg, attack=attack, f=f,
                               echo_r=echo_r,
-                              data=DataSpec(noise=noise)),
+                              data=DataSpec(noise=noise),
+                              comm=CommSpec(channel=channel, codec=codec,
+                                            drop_prob=drop)),
         train=None if drop_train else TrainSpec(strategy=strategy,
                                                 steps=steps, lr=lr),
         serve=None if drop_serve else ServeSpec(

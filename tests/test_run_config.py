@@ -142,3 +142,69 @@ def test_frozen_tree():
         cfg.name = "x"
     with pytest.raises(dataclasses.FrozenInstanceError):
         cfg.mesh.devices = 3
+
+
+# ---------------------------------------------------------------------------
+# Comm section + sweep grid expansion
+# ---------------------------------------------------------------------------
+
+
+def test_comm_spec_roundtrip_and_overrides():
+    """scenario.comm rides the same JSON round-trip + --set machinery as
+    every other section, and legacy job files (no comm key) still load
+    with the ideal fp32 defaults."""
+    from repro.run import CommSpec, ScenarioSpec
+
+    cfg = RunConfig(scenario=ScenarioSpec(
+        comm=CommSpec(channel="lossy", codec="int8", drop_prob=0.1,
+                      seed=3)))
+    assert RunConfig.from_json(cfg.to_json()) == cfg
+    out = apply_overrides(RunConfig(), [
+        "scenario.comm.codec=int8", "scenario.comm.channel=lossy",
+        "scenario.comm.drop_prob=0.25"])
+    assert out.scenario.comm.codec == "int8"
+    assert out.scenario.comm.drop_prob == 0.25
+    legacy = RunConfig.from_json(
+        '{"schema_version": 1, "scenario": {"aggregator": "cgc"}}')
+    assert legacy.scenario.comm == CommSpec()
+    with pytest.raises(ValueError, match="no field"):
+        apply_overrides(RunConfig(), ["scenario.comm.drop=0.1"])
+
+
+def test_sweep_expands_grid_and_emits_job_files(tmp_path):
+    from repro.run import sweep
+
+    base = RunConfig(name="base", train=TrainSpec())
+    grid = {"train.lr": [1e-3, 3e-4], "scenario.f": [0, 1, 2]}
+    cfgs = sweep(base, grid, out_dir=str(tmp_path))
+    assert len(cfgs) == 6
+    # row-major in grid insertion order; values land typed
+    assert [c.train.lr for c in cfgs] == [1e-3] * 3 + [3e-4] * 3
+    assert [c.scenario.f for c in cfgs] == [0, 1, 2, 0, 1, 2]
+    assert all(isinstance(c.scenario.f, int) for c in cfgs)
+    # names are unique and suffixed with the point's assignment
+    names = [c.name for c in cfgs]
+    assert len(set(names)) == 6 and all(n.startswith("base-") for n in names)
+    # one loadable job file per point == the sweep reruns from artifacts
+    import os
+    files = sorted(os.listdir(tmp_path))
+    assert len(files) == 6
+    for cfg in cfgs:
+        back = RunConfig.load(str(tmp_path / f"{cfg.name}.json"))
+        assert back == cfg
+
+
+def test_sweep_validates_its_grid():
+    from repro.run import sweep
+
+    base = RunConfig(train=TrainSpec())
+    with pytest.raises(ValueError, match="at least one"):
+        sweep(base, {})
+    with pytest.raises(ValueError, match="no values"):
+        sweep(base, {"train.lr": []})
+    with pytest.raises(ValueError, match="no field"):
+        sweep(base, {"train.lrz": [1.0]})
+    # two values that sanitize to the same name suffix would clobber
+    # each other's job file — rejected instead of silently overwriting
+    with pytest.raises(ValueError, match="collide"):
+        sweep(base, {"scenario.attack": ["sign flip", "sign-flip"]})

@@ -353,3 +353,38 @@ def test_sampling_greedy_default_matches_reference():
         got = _sampled_run(SamplingSpec(temperature=0.0, seed=seed),
                            [(prompt, 8)])
         assert got == [want]
+
+
+def test_nucleus_sampling_seeded_determinism():
+    """top-p (nucleus) sampling: same seed -> identical tokens across
+    engines, different seed moves at least one token, and every id
+    respects the vocab (the nucleus mask never leaks -inf or padding)."""
+    from repro.serve import SamplingSpec
+
+    subs = [([5, 6, 7], 10), ([9, 1, 2, 3], 12)]
+    spec = SamplingSpec(temperature=0.8, top_p=0.9, seed=0)
+    a = _sampled_run(spec, subs)
+    b = _sampled_run(spec, subs)
+    assert a == b
+    c = _sampled_run(SamplingSpec(temperature=0.8, top_p=0.9, seed=1), subs)
+    assert a != c
+    assert all(0 <= t < CFG.vocab_size for toks in a + c for t in toks)
+    # top-k composes with top-p (k first, then the nucleus) and stays
+    # deterministic under one seed
+    both = SamplingSpec(temperature=0.8, top_k=16, top_p=0.9, seed=0)
+    assert _sampled_run(both, subs) == _sampled_run(both, subs)
+
+
+def test_nucleus_tiny_top_p_is_greedy():
+    """A nucleus smaller than any single token's probability keeps only
+    the argmax: top_p -> 0 degenerates to greedy decoding exactly."""
+    from repro.serve import SamplingSpec
+
+    values = _values()
+    prompt = [3, 1, 4, 1, 5]
+    want = _ref_greedy(values, prompt, 8)
+    for seed in (0, 123):
+        got = _sampled_run(
+            SamplingSpec(temperature=0.7, top_p=1e-6, seed=seed),
+            [(prompt, 8)])
+        assert got == [want]
