@@ -1,0 +1,105 @@
+"""The standing bench trajectory: BENCH_*.json record I/O + the gate.
+
+Each suite (train / kernels / serve) appends one record per run to a
+JSON array at the repo root:
+
+    [{"git_sha": "...", "timestamp": "...", "metrics": {...}}, ...]
+
+and declares a ``GATE`` mapping over the *machine-portable* subset of
+its metrics — ratios (fused-vs-unfused speedup, continuous/fixed
+speedup, echo rate, bits saving) and correctness booleans, never
+absolute wall-clock, so a record emitted on a laptop can gate a CI
+runner. ``gate()`` compares a fresh metrics dict against the last
+committed record and reports every key that regressed by more than the
+threshold (default 20%) in its bad direction.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import subprocess
+from typing import Any, Dict, List, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BENCH_FILES = {
+    "train": "BENCH_train.json",
+    "kernels": "BENCH_kernels.json",
+    "serve": "BENCH_serve.json",
+}
+
+
+def bench_path(suite: str, out_dir: Optional[str] = None) -> str:
+    return os.path.join(out_dir or REPO_ROOT, BENCH_FILES[suite])
+
+
+def git_sha(default: str = "unknown") -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else default
+    except OSError:
+        return default
+
+
+def load_records(path: str) -> List[Dict[str, Any]]:
+    """The trajectory at ``path``; [] when absent or empty."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        text = fh.read().strip()
+    if not text:
+        return []
+    records = json.loads(text)
+    if not isinstance(records, list):
+        raise ValueError(f"{path}: expected a JSON array of records")
+    return records
+
+
+def append_record(path: str, metrics: Dict[str, Any],
+                  sha: Optional[str] = None) -> Dict[str, Any]:
+    """Append {git_sha, timestamp, metrics} to the array at ``path``."""
+    records = load_records(path)
+    record = {
+        "git_sha": sha if sha is not None else git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "metrics": metrics,
+    }
+    records.append(record)
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(records, fh, indent=2)
+        fh.write("\n")
+    return record
+
+
+def gate(last_metrics: Dict[str, Any], new_metrics: Dict[str, Any],
+         directions: Dict[str, str], threshold: float = 0.2
+         ) -> List[str]:
+    """Regression check: for each gated key, fail when the new value is
+    worse than the last recorded one by more than ``threshold``
+    (relative). ``directions`` maps key -> "higher" (bigger is better)
+    or "lower". Keys absent from either side are skipped (a new metric
+    starts gating once it has a baseline record)."""
+    failures = []
+    for key, direction in directions.items():
+        if direction not in ("higher", "lower"):
+            raise ValueError(f"gate direction for {key!r} must be "
+                             f"'higher' or 'lower', got {direction!r}")
+        if key not in last_metrics or key not in new_metrics:
+            continue
+        last, new = float(last_metrics[key]), float(new_metrics[key])
+        if direction == "higher":
+            bad = new < last * (1.0 - threshold)
+        else:
+            bad = new > last * (1.0 + threshold)
+        if bad:
+            failures.append(
+                f"{key}: {new:.4g} vs last {last:.4g} "
+                f"(>{threshold:.0%} regression, want {direction})")
+    return failures

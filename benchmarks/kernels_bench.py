@@ -4,9 +4,14 @@ On this CPU container the numbers are NOT TPU performance — they validate
 the harness and provide the shape sweep used on real hardware (where
 interpret=False). us_per_call is the jnp reference path (the production
 fallback); derived reports allclose agreement.
+
+``bench()`` is the BENCH_kernels.json suite: the gated metrics are
+machine-relative ratios (fused-vs-unfused speedup on the same process)
+and correctness booleans, never absolute timings.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -24,6 +29,16 @@ def _time(fn, *args, iters=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _median_time(fn, *args, iters=9):
+    jax.block_until_ready(fn(*args))  # compile / warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e6
 
 
 def run(out_dir: str = "experiments"):
@@ -62,4 +77,88 @@ def run(out_dir: str = "experiments"):
         ok = np.allclose(np.asarray(out, np.float32),
                          np.asarray(exp, np.float32), rtol=5e-2, atol=5e-2)
         results.append((f"decode_attn_B{B}_T{T}", us, f"allclose={ok}"))
+
+    m = fused_cgc_metrics()
+    results.append(("cgc_fused_n16_d1048576", m["fused_us"],
+                    f"speedup={m['fused_speedup']:.2f}x"))
     return results
+
+
+def fused_cgc_metrics(n: int = 16, d: int = 1 << 20, f: int = 4):
+    """Fused-vs-unfused CGC round on one (n, d) table.
+
+    unfused: the pre-fusion driver structure — separate jitted stages
+    with the threshold picked on the host between them (norms kernel ->
+    device->host sync -> sort -> scale+sum kernel), three passes over
+    the table. fused: ``ops.cgc_fused_aggregate``, one dispatch, no
+    host round-trip. The ratio is the gated metric; the absolute
+    timings are informational only.
+    """
+    G = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+
+    norms_jit = jax.jit(lambda G: jnp.linalg.norm(G, axis=-1))
+    scalesum_jit = jax.jit(
+        lambda G, s: jnp.sum(G.astype(jnp.float32) * s[:, None], axis=0))
+
+    def unfused(G):
+        norms = np.asarray(norms_jit(G))          # device->host sync
+        thr = np.sort(norms)[n - f - 1]           # host-side top-k
+        scales = np.minimum(1.0, thr / np.maximum(norms, 1e-12))
+        return scalesum_jit(G, jnp.asarray(scales, jnp.float32))
+
+    fused = jax.jit(lambda G: ops.cgc_fused_aggregate(G, f)[0])
+
+    unfused_us = _median_time(unfused, G)
+    fused_us = _median_time(fused, G)
+
+    # correctness cross-checks ride along as gated booleans
+    Gs = jax.random.normal(jax.random.PRNGKey(3), (13, 1000))
+    want, _, _ = ref.cgc_fused_aggregate_ref(Gs, 3)
+    ops.set_cgc_backend("jnp")
+    agg_jnp, _, _ = ops.cgc_fused_aggregate(Gs, 3)
+    ops.set_cgc_backend("pallas")
+    agg_pal, _, _ = ops.cgc_fused_aggregate(Gs, 3)
+    ops.set_cgc_backend("auto")
+    bitwise_jnp = bool(np.array_equal(
+        np.asarray(agg_jnp),
+        np.asarray(jnp.sum(cgc_filter(Gs, 3), axis=0))))
+    allclose_pal = bool(np.allclose(np.asarray(agg_pal), np.asarray(want),
+                                    rtol=1e-5, atol=1e-5))
+
+    v = jax.random.normal(jax.random.PRNGKey(4), (5000,))
+    ops.set_codec_pack_backend("jnp")
+    qj, sj = ops.int8_pack(v)
+    vj, ij = ops.topk_pack(v, 64)
+    ops.set_codec_pack_backend("pallas")
+    qp, sp = ops.int8_pack(v)
+    vp, ip = ops.topk_pack(v, 64)
+    ops.set_codec_pack_backend("auto")
+    int8_bitwise = bool(np.array_equal(np.asarray(qj), np.asarray(qp))
+                        and float(sj) == float(sp))
+    topk_bitwise = bool(np.array_equal(np.asarray(ij), np.asarray(ip))
+                        and np.array_equal(np.asarray(vj), np.asarray(vp)))
+
+    return {
+        "fused_speedup": unfused_us / fused_us,
+        "fused_us": fused_us,
+        "unfused_us": unfused_us,
+        "cgc_fused_bitwise_jnp": float(bitwise_jnp),
+        "cgc_fused_allclose_pallas": float(allclose_pal),
+        "int8_pack_bitwise": float(int8_bitwise),
+        "topk_pack_bitwise": float(topk_bitwise),
+    }
+
+
+# gated keys of bench(): ratios + correctness flags, machine-portable
+GATE = {
+    "fused_speedup": "higher",
+    "cgc_fused_bitwise_jnp": "higher",
+    "cgc_fused_allclose_pallas": "higher",
+    "int8_pack_bitwise": "higher",
+    "topk_pack_bitwise": "higher",
+}
+
+
+def bench():
+    """BENCH_kernels.json metrics for one run."""
+    return fused_cgc_metrics()

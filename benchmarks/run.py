@@ -1,4 +1,7 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure, plus the
+standing bench trajectory.
+
+Legacy CSV mode (no flags, optional suite-name filter):
 
   fig1           : Figure 1a-d, Eq. 29 curves (the paper's numerical study)
   comm_cost      : measured bits / echo fraction vs the C and p bounds
@@ -7,19 +10,37 @@
   roofline_table : deliverable (g) — three roofline terms per arch x shape
 
 Prints ``name,us_per_call,derived`` CSV; artifacts land in experiments/.
+
+Trajectory mode (``--emit`` / ``--gate``): each suite in ``--suites``
+(train / kernels / serve) exposes ``bench() -> metrics`` and a ``GATE``
+direction map; ``--gate`` fails (exit 1) when any gated metric regresses
+>``--threshold`` vs the LAST record in the suite's BENCH_*.json, and
+``--emit`` appends a fresh ``{git_sha, timestamp, metrics}`` record:
+
+    python benchmarks/run.py --emit --gate --suites kernels serve
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; add the root so `from benchmarks import ...` resolves, and
+# src/ so `repro` imports even without an editable install.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-def main() -> None:
+
+def main_csv(only=None) -> None:
     from benchmarks import (comm_cost, convergence, fig1, kernels_bench,
                             roofline_table)
     mods = [("fig1", fig1), ("comm_cost", comm_cost),
             ("convergence", convergence), ("kernels", kernels_bench),
             ("roofline", roofline_table)]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
     for name, mod in mods:
         if only and name != only:
@@ -31,6 +52,75 @@ def main() -> None:
         except Exception as e:  # keep the harness running
             print(f"{name},ERROR,{type(e).__name__}: {e}", flush=True)
             raise
+
+
+def _suite(name):
+    if name == "train":
+        from benchmarks import train_bench as mod
+    elif name == "kernels":
+        from benchmarks import kernels_bench as mod
+    elif name == "serve":
+        from benchmarks import serve_bench as mod
+    else:
+        raise SystemExit(f"unknown suite {name!r} "
+                         f"(known: train kernels serve)")
+    return mod
+
+
+def main_trajectory(args) -> int:
+    from benchmarks import bench_io
+
+    failed = False
+    for name in args.suites:
+        mod = _suite(name)
+        path = bench_io.bench_path(name, args.out_dir)
+        print(f"[{name}] running bench() ...", flush=True)
+        metrics = mod.bench()
+        print(f"[{name}] {json.dumps(metrics)}", flush=True)
+        if args.gate:
+            records = bench_io.load_records(path)
+            if records:
+                failures = bench_io.gate(records[-1]["metrics"], metrics,
+                                         mod.GATE, args.threshold)
+                for msg in failures:
+                    print(f"[{name}] GATE FAIL {msg}", flush=True)
+                    failed = True
+                if not failures:
+                    print(f"[{name}] gate ok vs "
+                          f"{records[-1]['git_sha'][:12]}", flush=True)
+            else:
+                print(f"[{name}] gate skipped: no prior record in "
+                      f"{path}", flush=True)
+        if args.emit:
+            rec = bench_io.append_record(path, metrics)
+            print(f"[{name}] emitted record {rec['git_sha'][:12]} -> "
+                  f"{path}", flush=True)
+    return 1 if failed else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="legacy CSV mode: run just this table")
+    ap.add_argument("--emit", action="store_true",
+                    help="append a {git_sha, timestamp, metrics} record "
+                         "to each suite's BENCH_*.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on >threshold regression vs the last "
+                         "BENCH_*.json record")
+    ap.add_argument("--suites", nargs="+",
+                    default=["train", "kernels", "serve"],
+                    choices=["train", "kernels", "serve"],
+                    help="trajectory suites to run")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative regression tolerance (default 0.2)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for BENCH_*.json (default: repo root)")
+    args = ap.parse_args()
+
+    if args.emit or args.gate:
+        sys.exit(main_trajectory(args))
+    main_csv(args.only)
 
 
 if __name__ == '__main__':

@@ -30,6 +30,29 @@ def config_from_flags(args) -> "run.RunConfig":
             seed=args.seed))
 
 
+# gated keys of bench(): the continuous/fixed ratio is measured on one
+# machine within one process, so it ports across hardware
+GATE = {"speedup": "higher"}
+
+
+def bench():
+    """BENCH_serve.json metrics for one run: the continuous-vs-fixed
+    throughput ratio (gated) plus absolute tokens/s and latency
+    percentiles (informational)."""
+    from repro.run.config import BenchSpec
+    from repro.serve.bench import run_bench
+
+    res = run_bench("qwen3-0.6b", BenchSpec(), verbose=False)
+    return {
+        "speedup": res["speedup"],
+        "fixed_tokens_per_s": res["fixed"]["tokens_per_s"],
+        "continuous_tokens_per_s": res["continuous"]["tokens_per_s"],
+        "continuous_p50_s": res["continuous"]["latency_p50_s"],
+        "continuous_p99_s": res["continuous"]["latency_p99_s"],
+        "preemptions": res["continuous"].get("preemptions", 0),
+    }
+
+
 def main(argv=None):
     from repro.run import facade
 

@@ -29,10 +29,14 @@ can assert the advertised ``vector_bits`` is honest. The lossy codecs
 (bf16 / int8 / top-k) open the quantized-gradient scenario axis; the
 fp32 codec reproduces the paper's closed-form accounting bit for bit.
 
-This module imports only jax — never ``repro.core`` — so ``core.types``
-can delegate here without a cycle. Codec builders register in
-``run.registry.CODECS``; ``resolve`` in ``repro.comm`` turns a
-``CommSpec`` into instances.
+This module imports only jax at module load — never ``repro.core`` — so
+``core.types`` can delegate here without a cycle. The lossy codecs'
+pack/unpack math dispatches lazily through ``repro.kernels.ops``
+(``REPRO_CODEC_BACKEND``): streaming Pallas kernels
+(``kernels/codec_pack.py``) on TPU, the same inline jnp math elsewhere —
+payload shapes, dtypes and bit accounting are identical either way.
+Codec builders register in ``run.registry.CODECS``; ``resolve`` in
+``repro.comm`` turns a ``CommSpec`` into instances.
 """
 from __future__ import annotations
 
@@ -146,14 +150,14 @@ class Int8Codec(Codec):
     name: ClassVar[str] = "int8"
 
     def encode(self, vec):
-        v = vec.astype(jnp.float32)
-        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
-        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
-        return (q, scale.astype(jnp.float32))
+        from repro.kernels import ops
+        q, scale = ops.int8_pack(vec)
+        return (q, scale)
 
     def decode(self, payload, m):
+        from repro.kernels import ops
         q, scale = payload
-        return q.astype(jnp.float32) * scale
+        return ops.int8_unpack(q, scale, m)
 
     def vector_bits(self, m):
         return 8 * m + BITS_PER_FLOAT          # bytes + the shared scale
@@ -168,14 +172,13 @@ class TopKCodec(Codec):
     k: int = 32
 
     def encode(self, vec):
-        v = vec.astype(jnp.float32)
-        kk = min(self.k, v.shape[-1])
-        _, idx = jax.lax.top_k(jnp.abs(v), kk)
-        return (v[idx], idx.astype(jnp.int32))
+        from repro.kernels import ops
+        return ops.topk_pack(vec, self.k)
 
     def decode(self, payload, m):
+        from repro.kernels import ops
         vals, idx = payload
-        return jnp.zeros((m,), jnp.float32).at[idx].set(vals)
+        return ops.topk_unpack(vals, idx, m)
 
     def vector_bits(self, m):
         kk = min(self.k, m) if isinstance(m, int) else jnp.minimum(self.k, m)

@@ -49,5 +49,13 @@ def cgc_filter(G: jax.Array, f: int) -> jax.Array:
 
 
 def cgc_aggregate(G: jax.Array, f: int) -> jax.Array:
-    """Filtered *sum* g^t = sum_j CGC(g_j) (paper line 44)."""
-    return jnp.sum(cgc_filter(G, f), axis=0)
+    """Filtered *sum* g^t = sum_j CGC(g_j) (paper line 44).
+
+    Dispatches through ``kernels.ops.cgc_fused_aggregate``: on TPU the
+    whole round (norms, threshold, clip, reduce) is ONE streaming Pallas
+    launch with no host round-trip; elsewhere the jnp backend is bitwise
+    ``sum(cgc_filter(G, f))`` (``REPRO_CGC_BACKEND`` override).
+    """
+    from repro.kernels import ops
+    agg, _, _ = ops.cgc_fused_aggregate(G, f)
+    return agg

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §5).
 
   cgc_clip.py         — fused norm+clip over (n, d) gradients (server agg)
+                        incl. the single-launch fused CGC round
+                        (norms + in-kernel threshold + clip + reduce)
+  codec_pack.py       — wire-codec int8 / top-k pack+unpack streaming
+                        kernels (comm/wire.py quantized broadcasts)
   echo_project.py     — single-pass Gram reduction for the echo projection
   decode_attention.py — flash-decode GQA over long KV caches, contiguous
                         and paged (scalar-prefetch block-table gather)

@@ -17,9 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cgc_clip as _cgc
+from repro.kernels import codec_pack as _pack
 from repro.kernels import decode_attention as _dec
 from repro.kernels import echo_project as _gram
-from repro.run.registry import (NORM_BACKENDS, PAGED_ATTN_BACKENDS,
+from repro.run.registry import (CGC_BACKENDS, CODEC_PACK_BACKENDS,
+                                NORM_BACKENDS, PAGED_ATTN_BACKENDS,
                                 Registry, SCALE_BACKENDS)
 
 F32 = jnp.float32
@@ -78,6 +80,8 @@ _norm_switch = _BackendSwitch("REPRO_NORM_BACKEND", NORM_BACKENDS)
 _scale_switch = _BackendSwitch("REPRO_SCALE_BACKEND", SCALE_BACKENDS)
 _paged_attn_switch = _BackendSwitch("REPRO_PAGED_ATTN_BACKEND",
                                     PAGED_ATTN_BACKENDS)
+_cgc_switch = _BackendSwitch("REPRO_CGC_BACKEND", CGC_BACKENDS)
+_codec_switch = _BackendSwitch("REPRO_CODEC_BACKEND", CODEC_PACK_BACKENDS)
 
 
 def set_norm_backend(name: str) -> None:
@@ -107,6 +111,24 @@ def paged_attn_backend() -> str:
     return _paged_attn_switch.resolve()
 
 
+def set_cgc_backend(name: str) -> None:
+    """Select the fused CGC aggregation backend (server-side round)."""
+    _cgc_switch.set(name)
+
+
+def cgc_backend() -> str:
+    return _cgc_switch.resolve()
+
+
+def set_codec_pack_backend(name: str) -> None:
+    """Select the wire-codec pack/unpack backend (comm/wire.py)."""
+    _codec_switch.set(name)
+
+
+def codec_pack_backend() -> str:
+    return _codec_switch.resolve()
+
+
 @NORM_BACKENDS.register("jnp")
 def _tree_sq_norm_jnp(leaves, block_d: int) -> jax.Array:
     return sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves)
@@ -116,9 +138,8 @@ def _tree_sq_norm_jnp(leaves, block_d: int) -> jax.Array:
 def _tree_sq_norm_pallas(leaves, block_d: int) -> jax.Array:
     flat = [g.astype(F32).reshape(-1) for g in leaves]
     v = jnp.concatenate(flat) if len(flat) > 1 else flat[0]
-    d = v.shape[0]
-    bd = min(block_d, max(128, d))
-    G = _pad_to(_pad_to(v[None, :], 8, 0), bd, 1)
+    bd = _block_for(v.shape[0], block_d)
+    G = pad_rows(v[None, :], bd)
     return _cgc.row_sq_norms(G, bd, not _on_tpu())[0]
 
 
@@ -146,6 +167,24 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _block_for(d: int, block_d: int) -> int:
+    """The d-tile for a row of length d: ``block_d`` once rows are long
+    enough, else the next power of two (>= 128, so tiles stay
+    lane-aligned — ``max(128, d)`` would hand pallas an unaligned tile
+    for d like 1000)."""
+    if d >= block_d:
+        return block_d
+    return min(block_d, max(128, 1 << (d - 1).bit_length()))
+
+
+def pad_rows(G: jax.Array, block_d: int) -> jax.Array:
+    """Pad an (n, d) stack to kernel shape: n -> multiple of 8 sublanes,
+    d -> multiple of ``block_d``. The one padding path every row-stack
+    kernel wrapper shares; a no-op (same array, no copy) when the caller
+    already holds a padded table."""
+    return _pad_to(_pad_to(G, 8, 0), block_d, 1)
+
+
 @functools.partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
 def cgc_clip(G: jax.Array, f: int, block_d: int = 2048,
              interpret: bool | None = None) -> jax.Array:
@@ -153,9 +192,8 @@ def cgc_clip(G: jax.Array, f: int, block_d: int = 2048,
     if interpret is None:
         interpret = not _on_tpu()
     n, d = G.shape
-    bd = min(block_d, max(128, 1 << (d - 1).bit_length() if d < block_d
-                          else block_d))
-    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    bd = _block_for(d, block_d)
+    Gp = pad_rows(G, bd)
     sq = _cgc.row_sq_norms(Gp, bd, interpret)[:n]
     norms = jnp.sqrt(sq)
     thr = jnp.sort(norms)[n - f - 1]
@@ -171,8 +209,8 @@ def cgc_norms(G: jax.Array, block_d: int = 2048,
     if interpret is None:
         interpret = not _on_tpu()
     n, d = G.shape
-    bd = min(block_d, max(128, d))
-    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    bd = _block_for(d, block_d)
+    Gp = pad_rows(G, bd)
     return jnp.sqrt(_cgc.row_sq_norms(Gp, bd, interpret)[:n])
 
 
@@ -188,9 +226,9 @@ def echo_project(A: jax.Array, mask: jax.Array, g: jax.Array,
     if interpret is None:
         interpret = not _on_tpu()
     n, d = A.shape
-    bd = min(block_d, max(128, d))
+    bd = _block_for(d, block_d)
     Am = A * mask[:, None]
-    Ap = _pad_to(_pad_to(Am, 8, 0), bd, 1)
+    Ap = pad_rows(Am, bd)
     gp = _pad_to(g[None], bd, 1)[0]
     gram, b = _gram.gram_and_proj(Ap, gp, bd, interpret)
     gram, b = gram[:n, :n], b[:n]
@@ -229,8 +267,8 @@ def _scale_rows_jnp(G: jax.Array, scale: jax.Array,
 def _scale_rows_pallas(G: jax.Array, scale: jax.Array,
                        block_d: int) -> jax.Array:
     n, d = G.shape
-    bd = min(block_d, max(128, d))
-    Gp = _pad_to(_pad_to(G, 8, 0), bd, 1)
+    bd = _block_for(d, block_d)
+    Gp = pad_rows(G, bd)
     scale_p = jnp.pad(scale.astype(F32), (0, Gp.shape[0] - n))
     return _cgc.scale_rows(Gp, scale_p, bd, not _on_tpu())[:n, :d]
 
@@ -243,6 +281,171 @@ def scale_rows(G: jax.Array, scale: jax.Array,
     (``REPRO_SCALE_BACKEND`` / ``set_scale_backend`` override).
     """
     return _scale_switch.impl()(G, scale, block_d)
+
+
+# ---------------------------------------------------------------------------
+# Fused CGC aggregation (the whole server-side round in one dispatch)
+# ---------------------------------------------------------------------------
+
+
+@CGC_BACKENDS.register("jnp")
+def _cgc_fused_jnp(G: jax.Array, f: int, block_d: int):
+    """Reference backend: bitwise-identical to
+    ``sum(core.cgc.cgc_filter(G, f))`` under the jnp scale backend (same
+    norm, threshold, scale, cast and reduction order)."""
+    from repro.core.cgc import cgc_scales
+    norms = jnp.linalg.norm(G, axis=-1)
+    scales = cgc_scales(norms, f)
+    scaled = (G.astype(F32) * scales.astype(F32)[:, None]).astype(G.dtype)
+    scaled = scaled.astype(jnp.result_type(G.dtype, scales.dtype))
+    return jnp.sum(scaled, axis=0), norms, scales
+
+
+@CGC_BACKENDS.register("pallas")
+def _cgc_fused_pallas(G: jax.Array, f: int, block_d: int):
+    n, d = G.shape
+    bd = _block_for(d, block_d)
+    Gp = pad_rows(G, bd)
+    agg, sq, scale = _cgc.cgc_fused_aggregate(Gp, f, n, bd, not _on_tpu())
+    out_dtype = jnp.result_type(G.dtype, F32)
+    return (agg[0, :d].astype(out_dtype), jnp.sqrt(sq[:n, 0]),
+            scale[:n, 0])
+
+
+def cgc_fused_aggregate(G: jax.Array, f: int, block_d: int = 2048):
+    """One-dispatch CGC round on an (n, d) stack: returns
+    ``(aggregate (d,), norms (n,), scales (n,))``.
+
+    Replaces the norms -> host-side sort -> ``scale_rows`` -> sum chain
+    of ``core.cgc``: the "pallas" backend streams the table through
+    ``cgc_clip.cgc_fused_aggregate`` (threshold derived in-kernel, no
+    device->host sync, no (n, d) intermediate); the "jnp" backend is the
+    bitwise reference chain (``REPRO_CGC_BACKEND`` / ``set_cgc_backend``
+    override). ``f`` must be a static python int.
+    """
+    n = G.shape[0]
+    if not 0 <= f < n:
+        raise ValueError(f"need 0 <= f < n, got f={f}, n={n}")
+    return _cgc_switch.impl()(G, f, block_d)
+
+
+# ---------------------------------------------------------------------------
+# Wire-codec pack/unpack (comm/wire.py quantized broadcasts)
+# ---------------------------------------------------------------------------
+
+
+def _codec_layout(m: int, block_c: int):
+    """Tile layout for a length-m vector: columns of the (ROWS, cols)
+    reshape plus the lane tile, cols a multiple of the tile."""
+    need = -(-m // _pack.ROWS)
+    bc = _block_for(need, block_c)
+    return -(-need // bc) * bc, bc
+
+
+def _as_tiles(v: jax.Array, cols: int) -> jax.Array:
+    v = v.astype(F32).reshape(-1)
+    return jnp.pad(v, (0, _pack.ROWS * cols - v.shape[0])).reshape(
+        _pack.ROWS, cols)
+
+
+class _JnpCodecPack:
+    """Bitwise replica of the inline comm/wire.py codec math."""
+
+    @staticmethod
+    def int8_pack(v, block_c):
+        v = v.astype(F32)
+        scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(v / scale), -127, 127).astype(jnp.int8)
+        return q, scale.astype(F32)
+
+    @staticmethod
+    def int8_unpack(q, scale, m, block_c):
+        return q.astype(F32) * scale
+
+    @staticmethod
+    def topk_pack(v, k, block_c):
+        v = v.astype(F32)
+        kk = min(k, v.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(v), kk)
+        return v[idx], idx.astype(jnp.int32)
+
+    @staticmethod
+    def topk_unpack(vals, idx, m, block_c):
+        return jnp.zeros((m,), F32).at[idx].set(vals)
+
+
+class _PallasCodecPack:
+    """Streaming codec_pack.py kernels over the (ROWS, cols) tiling."""
+
+    @staticmethod
+    def int8_pack(v, block_c):
+        m = v.shape[-1]
+        cols, bc = _codec_layout(m, block_c)
+        q, scale = _pack.int8_pack(_as_tiles(v, cols), bc, not _on_tpu())
+        return q.reshape(-1)[:m], scale[0, 0]
+
+    @staticmethod
+    def int8_unpack(q, scale, m, block_c):
+        cols, bc = _codec_layout(m, block_c)
+        qt = jnp.pad(q.reshape(-1), (0, _pack.ROWS * cols - m)).reshape(
+            _pack.ROWS, cols)
+        return _pack.int8_unpack(qt, scale, bc, not _on_tpu()
+                                 ).reshape(-1)[:m]
+
+    @staticmethod
+    def topk_pack(v, k, block_c):
+        m = v.shape[-1]
+        kk = min(k, m)
+        cols, bc = _codec_layout(m, block_c)
+        while _pack.ROWS * bc < kk:      # every tile must hold >= kk
+            bc *= 2
+            cols = -(-cols // bc) * bc
+        vals_c, idx_c = _pack.topk_pack_candidates(
+            _as_tiles(v, cols), kk, bc, not _on_tpu())
+        flat_v, flat_i = vals_c.reshape(-1), idx_c.reshape(-1)
+        # exact global top-k over the tiny candidate table, with
+        # lax.top_k's tie order (descending |v|, then ascending index);
+        # tile pad slots (idx -1) and v's zero padding (idx >= m) lose
+        valid = (flat_i >= 0) & (flat_i < m)
+        key = jnp.where(valid, jnp.abs(flat_v), -1.0)
+        rank = jnp.where(valid, flat_i, jnp.iinfo(jnp.int32).max)
+        sel = jnp.lexsort((rank, -key))[:kk]
+        return flat_v[sel], flat_i[sel].astype(jnp.int32)
+
+    @staticmethod
+    def topk_unpack(vals, idx, m, block_c):
+        cols, bc = _codec_layout(m, block_c)
+        return _pack.topk_unpack(vals, idx, cols, bc, not _on_tpu()
+                                 ).reshape(-1)[:m]
+
+
+CODEC_PACK_BACKENDS.add("jnp", _JnpCodecPack)
+CODEC_PACK_BACKENDS.add("pallas", _PallasCodecPack)
+
+
+def int8_pack(v: jax.Array, block_c: int = _pack.DEFAULT_BLOCK_C):
+    """(m,) float -> ((m,) int8, () fp32 absmax scale). The Int8Codec
+    encode path; dispatches via ``REPRO_CODEC_BACKEND``."""
+    return _codec_switch.impl().int8_pack(v, block_c)
+
+
+def int8_unpack(q: jax.Array, scale: jax.Array, m: int,
+                block_c: int = _pack.DEFAULT_BLOCK_C) -> jax.Array:
+    """((m,) int8, scale) -> (m,) fp32 dequantized."""
+    return _codec_switch.impl().int8_unpack(q, scale, m, block_c)
+
+
+def topk_pack(v: jax.Array, k: int,
+              block_c: int = _pack.DEFAULT_BLOCK_C):
+    """(m,) float -> ((kk,) values, (kk,) int32 indices), kk=min(k, m),
+    ordered exactly as ``lax.top_k`` over |v|."""
+    return _codec_switch.impl().topk_pack(v, k, block_c)
+
+
+def topk_unpack(vals: jax.Array, idx: jax.Array, m: int,
+                block_c: int = _pack.DEFAULT_BLOCK_C) -> jax.Array:
+    """Sparse (values, indices) -> (m,) dense fp32."""
+    return _codec_switch.impl().topk_unpack(vals, idx, m, block_c)
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,

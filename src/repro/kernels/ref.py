@@ -27,6 +27,17 @@ def cgc_clip_ref(G: jax.Array, f: int, eps: float = 1e-12) -> jax.Array:
     return (G.astype(F32) * scale[:, None]).astype(G.dtype)
 
 
+def cgc_fused_aggregate_ref(G: jax.Array, f: int, eps: float = 1e-12):
+    """The fused CGC round's contract: (sum of clipped rows, row norms,
+    clip scales) — the transparent chain the one-launch kernel matches."""
+    norms = cgc_norms_ref(G)
+    n = norms.shape[0]
+    thr = jnp.sort(norms)[n - f - 1]
+    scale = jnp.minimum(1.0, thr / jnp.maximum(norms, eps))
+    agg = jnp.sum(G.astype(F32) * scale[:, None], axis=0)
+    return agg, norms, scale
+
+
 def gram_ref(A: jax.Array, g: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Echo projection inputs: (A A^T, A g) for row-stacked gradients.
 

@@ -42,6 +42,7 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
@@ -666,7 +667,17 @@ class Trainer:
         self.comm = settings.comm if settings.comm is not None \
             else DEFAULT_COMM
         self.bundle = strategy.build(cfg, opt, settings, mesh, global_batch)
-        self.step_fn = jax.jit(self.bundle.fn)
+        # Donation audit (DESIGN.md §10): a plain round consumes
+        # (values, opt_state) and returns their successors, so both
+        # buffers are donated — XLA updates weights and moments in place
+        # instead of holding two copies of the model live. The echo-DP
+        # OPTIMISTIC step must NOT donate: when Eq. 7 fails its outputs
+        # are discarded and the same inputs re-enter the exact fallback
+        # step, so they have to survive the call. The fallback itself is
+        # terminal for the round and donates. Batches are never donated
+        # (callers may replay them).
+        donate = () if self.bundle.needs_basis else (0, 1)
+        self.step_fn = jax.jit(self.bundle.fn, donate_argnums=donate)
         self.fallback_fn = None
         if self.bundle.needs_basis:
             fb = ReplicatedStrategy(
@@ -675,7 +686,8 @@ class Trainer:
                                               return_aggregate=True)
             self.fallback_bundle = fb.build(cfg, opt, fb_settings, mesh,
                                             global_batch)
-            self.fallback_fn = jax.jit(self.fallback_bundle.fn)
+            self.fallback_fn = jax.jit(self.fallback_bundle.fn,
+                                       donate_argnums=(0, 1))
         self.sink = MetricsSink(config.metrics_path, config.log_every,
                                 printer)
         self.n_workers = self.bundle.ctx.num_workers
@@ -710,10 +722,15 @@ class Trainer:
         """Fresh state (placed per the strategy's shardings); resumes
         from ``config.ckpt_dir`` when ``config.resume`` is set and a
         checkpoint exists."""
+        # the step fns donate their (values, opt_state) arguments, so the
+        # state must own its buffers — never alias what the caller holds
+        values = jax.tree.map(jnp.copy, values)
         if self.bundle.value_shardings is not None:
             values = jax.device_put(values, self.bundle.value_shardings)
         if opt_state is None:
             opt_state = self.opt.init(values)
+        else:
+            opt_state = jax.tree.map(jnp.copy, opt_state)
         basis = (init_basis(values, self.settings.echo_k)
                  if self.bundle.needs_basis else None)
         state = TrainState(values, opt_state, 0, basis)
@@ -747,20 +764,29 @@ class Trainer:
     def save(self, state: TrainState, wait: bool = True) -> Optional[str]:
         """Checkpoint ``state``; returns the target .npz path.
 
-        The write runs on the background checkpoint thread (jax arrays
-        are immutable, so enqueueing references is snapshot-safe).
+        The write runs on the background checkpoint thread.
         ``wait=True`` (the default for direct calls) blocks until it is
         on disk; the driver loop passes ``wait=False`` so periodic
-        checkpoints never stall training.
+        checkpoints never stall training. An async save snapshots the
+        state to host memory first: the step fns donate their input
+        buffers, so by the time the writer thread serializes, the
+        device arrays of this round may already have been consumed by
+        the next one.
         """
         if not self.config.ckpt_dir:
             return None
         if self._ckpt_writer is None:
             self._ckpt_writer = ckpt_lib.AsyncCheckpointWriter()
+        values, opt_state = state.values, state.opt_state
         extra_state = ({"basis": state.basis}
                        if state.basis is not None else None)
+        if not wait:
+            snap = lambda t: jax.tree.map(      # noqa: E731
+                lambda x: np.array(x, copy=True), t)
+            values, opt_state = snap(values), snap(opt_state)
+            extra_state = snap(extra_state)
         path = self._ckpt_writer.submit(
-            self.config.ckpt_dir, state.step, state.values, state.opt_state,
+            self.config.ckpt_dir, state.step, values, opt_state,
             extra_state=extra_state,
             extra={"strategy": self.bundle.name})
         if wait:

@@ -92,6 +92,8 @@ class Registry(Mapping):
 #   NORM_BACKENDS          kernels/ops.py           tree_sq_norm dispatch
 #   SCALE_BACKENDS         kernels/ops.py           scale_rows dispatch
 #   PAGED_ATTN_BACKENDS    kernels/ops.py           paged decode attention
+#   CGC_BACKENDS           kernels/ops.py           fused CGC aggregation
+#   CODEC_PACK_BACKENDS    kernels/ops.py           codec pack/unpack kernels
 #   CODECS                 comm/wire.py             wire-format builders
 #   CHANNELS               comm/channel.py          broadcast channel builders
 # ---------------------------------------------------------------------------
@@ -103,6 +105,8 @@ TRAIN_STRATEGIES = Registry("train strategy")
 NORM_BACKENDS = Registry("norm kernel backend")
 SCALE_BACKENDS = Registry("scale kernel backend")
 PAGED_ATTN_BACKENDS = Registry("paged-attention kernel backend")
+CGC_BACKENDS = Registry("fused-CGC kernel backend")
+CODEC_PACK_BACKENDS = Registry("codec pack/unpack kernel backend")
 CODECS = Registry("wire codec")
 CHANNELS = Registry("broadcast channel")
 
@@ -114,6 +118,8 @@ _REGISTRIES: Dict[str, Registry] = {
     "norm_backends": NORM_BACKENDS,
     "scale_backends": SCALE_BACKENDS,
     "paged_attn_backends": PAGED_ATTN_BACKENDS,
+    "cgc_backends": CGC_BACKENDS,
+    "codec_pack_backends": CODEC_PACK_BACKENDS,
     "codecs": CODECS,
     "channels": CHANNELS,
 }

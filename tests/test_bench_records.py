@@ -1,0 +1,80 @@
+"""The bench trajectory plane: BENCH_*.json records + the regression gate.
+
+``benchmarks/bench_io.py`` owns the record schema the CI bench-smoke leg
+gates on; these tests pin load/append/gate semantics without running any
+actual benchmark.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import bench_io  # noqa: E402
+
+
+def test_append_and_load_records(tmp_path):
+    path = str(tmp_path / "sub" / "BENCH_kernels.json")
+    assert bench_io.load_records(path) == []
+    rec = bench_io.append_record(path, {"fused_speedup": 1.5}, sha="abc123")
+    assert rec["git_sha"] == "abc123"
+    assert set(rec) == {"git_sha", "timestamp", "metrics"}
+    bench_io.append_record(path, {"fused_speedup": 1.6}, sha="def456")
+    records = bench_io.load_records(path)
+    assert [r["git_sha"] for r in records] == ["abc123", "def456"]
+    assert records[-1]["metrics"] == {"fused_speedup": 1.6}
+    # the file is plain JSON (an array), readable without bench_io
+    assert json.loads((tmp_path / "sub" / "BENCH_kernels.json")
+                      .read_text()) == records
+
+
+def test_append_defaults_to_repo_sha(tmp_path):
+    rec = bench_io.append_record(str(tmp_path / "BENCH_train.json"),
+                                 {"echo_rate": 0.8})
+    assert isinstance(rec["git_sha"], str) and rec["git_sha"]
+    assert "T" in rec["timestamp"]          # isoformat
+
+
+def test_bench_path_naming(tmp_path):
+    p = bench_io.bench_path("serve", str(tmp_path))
+    assert p == str(tmp_path / "BENCH_serve.json")
+    # default out_dir is the repo root
+    assert bench_io.bench_path("train").endswith(
+        os.path.join("repo", "BENCH_train.json")) or \
+        bench_io.bench_path("train").startswith(bench_io.REPO_ROOT)
+    with pytest.raises(KeyError):
+        bench_io.bench_path("nope", str(tmp_path))
+
+
+def test_gate_directions_and_threshold():
+    last = {"fused_speedup": 2.0, "p99_s": 1.0, "extra": 5.0}
+    dirs = {"fused_speedup": "higher", "p99_s": "lower"}
+    # inside tolerance both ways
+    assert bench_io.gate(last, {"fused_speedup": 1.61, "p99_s": 1.19},
+                         dirs) == []
+    # "higher" metric dropping >20% fails
+    fails = bench_io.gate(last, {"fused_speedup": 1.59, "p99_s": 1.0}, dirs)
+    assert len(fails) == 1 and "fused_speedup" in fails[0]
+    # "lower" metric rising >20% fails
+    fails = bench_io.gate(last, {"fused_speedup": 2.0, "p99_s": 1.21}, dirs)
+    assert len(fails) == 1 and "p99_s" in fails[0]
+    # custom threshold
+    assert bench_io.gate(last, {"fused_speedup": 1.1}, dirs,
+                         threshold=0.5) == []
+    # ungated keys are ignored; gated keys missing from either side skip
+    assert bench_io.gate({"extra": 5.0}, {"extra": 1.0}, dirs) == []
+    assert bench_io.gate(last, {"p99_s": 0.9}, dirs) == []
+    with pytest.raises(ValueError):
+        bench_io.gate(last, last, {"fused_speedup": "sideways"})
+
+
+def test_gate_boolean_flags():
+    """Correctness flags ride the gate as 1.0/0.0 'higher' metrics: a
+    flag flipping true->false is a >20% drop and fails."""
+    dirs = {"cgc_fused_bitwise_jnp": "higher"}
+    assert bench_io.gate({"cgc_fused_bitwise_jnp": 1.0},
+                         {"cgc_fused_bitwise_jnp": 1.0}, dirs) == []
+    fails = bench_io.gate({"cgc_fused_bitwise_jnp": 1.0},
+                          {"cgc_fused_bitwise_jnp": 0.0}, dirs)
+    assert len(fails) == 1

@@ -1,0 +1,102 @@
+"""Codec pack/unpack kernels vs the wire-format oracles.
+
+The Pallas backend of ``kernels.ops.int8_pack``/``topk_pack`` must be
+BITWISE the jnp codec math (same absmax/round/clip order, same
+``lax.top_k`` ordering incl. tie-breaks), so switching backends never
+perturbs payloads, bit accounting or training trajectories.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.wire import Int8Codec, TopKCodec, payload_bits
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _vec(m, seed=0):
+    return jax.random.normal(jax.random.fold_in(KEY, m * 31 + seed), (m,))
+
+
+def _both(fn):
+    """Run fn() under the jnp backend then the pallas backend."""
+    try:
+        ops.set_codec_pack_backend("jnp")
+        a = fn()
+        ops.set_codec_pack_backend("pallas")
+        b = fn()
+    finally:
+        ops.set_codec_pack_backend("auto")
+    return a, b
+
+
+@pytest.mark.parametrize("m", [1, 7, 128, 1000, 5000, 40000])
+def test_int8_pack_backends_bitwise(m):
+    v = _vec(m)
+    (qj, sj), (qp, sp) = _both(lambda: ops.int8_pack(v))
+    assert qp.shape == (m,) and qp.dtype == jnp.int8
+    assert sp.shape == () and sp.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(qj), np.asarray(qp))
+    assert float(sj) == float(sp)
+    dj, dp = _both(lambda: ops.int8_unpack(qj, sj, m))
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    # dequantization error bounded by half a quantization step
+    step = float(sj)
+    assert np.max(np.abs(np.asarray(dj) - np.asarray(v))) <= step * 0.5001
+
+
+@pytest.mark.parametrize("m,k", [(1, 1), (10, 32), (128, 32), (1000, 32),
+                                 (5000, 200), (40000, 64)])
+def test_topk_pack_backends_bitwise(m, k):
+    v = _vec(m, seed=1)
+    kk = min(k, m)
+    (vj, ij), (vp, ip) = _both(lambda: ops.topk_pack(v, k))
+    assert vp.shape == (kk,) and ip.shape == (kk,)
+    assert ip.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(ij), np.asarray(ip))
+    np.testing.assert_array_equal(np.asarray(vj), np.asarray(vp))
+    dj, dp = _both(lambda: ops.topk_unpack(vj, ij, m))
+    np.testing.assert_array_equal(np.asarray(dj), np.asarray(dp))
+    # the oracle: exactly lax.top_k over |v|
+    _, idx = jax.lax.top_k(jnp.abs(v), kk)
+    np.testing.assert_array_equal(np.asarray(ij), np.asarray(idx))
+
+
+def test_topk_ties_and_zeros():
+    """Crafted ties: many equal magnitudes and zeros — both backends
+    must reproduce lax.top_k's stable (lowest-index-first) order, and
+    never surface the zero padding the tiled layout adds."""
+    v = jnp.zeros((300,)).at[jnp.arange(0, 300, 7)].set(1.0).at[5].set(-1.0)
+    for k in [3, 16, 50, 80, 300]:
+        (vj, ij), (vp, ip) = _both(lambda: ops.topk_pack(v, k))
+        np.testing.assert_array_equal(np.asarray(ij), np.asarray(ip))
+        np.testing.assert_array_equal(np.asarray(vj), np.asarray(vp))
+        assert np.all(np.asarray(ip) < 300)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_codec_roundtrip_and_bit_honesty(backend):
+    """The wire codecs ride the dispatch: payload shapes/dtypes (and so
+    ``payload_bits``) are identical on both backends, and roundtrips
+    reconstruct within codec error."""
+    v = _vec(1000, seed=2)
+    try:
+        ops.set_codec_pack_backend(backend)
+        c8, ctk = Int8Codec(), TopKCodec(k=32)
+        p8 = c8.encode(v)
+        assert payload_bits(p8) == c8.vector_bits(1000)
+        r8 = c8.roundtrip(v)
+        ptk = ctk.encode(v)
+        assert payload_bits(ptk) == ctk.vector_bits(1000)
+        rtk = ctk.roundtrip(v)
+    finally:
+        ops.set_codec_pack_backend("auto")
+    assert r8.shape == (1000,) and rtk.shape == (1000,)
+    np.testing.assert_allclose(np.asarray(r8), np.asarray(v), atol=0.05)
+    # topk decode: exactly k entries survive, the rest are zero
+    nz = np.nonzero(np.asarray(rtk))[0]
+    assert len(nz) <= 32
+    with pytest.raises(ValueError):
+        ops.set_codec_pack_backend("nope")

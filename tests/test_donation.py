@@ -1,0 +1,170 @@
+"""Buffer-donation audit regression tests (DESIGN.md §10).
+
+The train step and the serve decode/prefill dispatches must donate
+their state-carrying arguments (weights+opt moments, KV caches/page
+pools) so XLA updates them in place instead of double-buffering the
+largest live allocations. These tests pin the audit's findings:
+donation is visible both behaviorally (the donated input buffer is
+deleted after the call) and in the compiled memory analysis (non-zero
+alias bytes, where the backend reports it).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.engine import (ReplicatedStrategy, Trainer, TrainerConfig,
+                                 TrainSettings)
+from repro.optim import sgd
+
+
+def _loss(values, batch):
+    w = values["w"]
+    return 0.5 * jnp.sum((w - 1.0) ** 2) + w @ jnp.mean(batch["eps"], 0), {}
+
+
+def _trainer(d=16):
+    return Trainer(ReplicatedStrategy(loss_fn=_loss), None, sgd(0.1),
+                   TrainSettings(aggregator="mean"), None, 4,
+                   TrainerConfig(), printer=lambda s: None)
+
+
+def _alias_bytes(jitted, *args):
+    stats = jitted.lower(*args).compile().memory_analysis()
+    if stats is None or not hasattr(stats, "alias_size_in_bytes"):
+        pytest.skip("backend reports no memory analysis")
+    return stats.alias_size_in_bytes
+
+
+def test_train_step_donates_state():
+    """The plain train step donates (values, opt_state): the compiled
+    executable aliases them to outputs and the input buffers are dead
+    after one round."""
+    tr = _trainer()
+    state = tr.init_state({"w": jnp.zeros((16,))})
+    batch = {"eps": 0.05 * jax.random.normal(jax.random.PRNGKey(0),
+                                             (4, 16))}
+    assert _alias_bytes(tr.step_fn, state.values, state.opt_state, batch,
+                        jnp.asarray(0)) > 0
+    pre_w = state.values["w"]
+    state, _ = tr.run_round(state, batch)
+    assert pre_w.is_deleted()
+    assert not state.values["w"].is_deleted()
+    # ...and the next round runs fine on the successor buffers
+    state, rec = tr.run_round(state, batch)
+    assert np.isfinite(rec["loss"])
+
+
+def test_init_state_copies_caller_buffers():
+    """Donation must never consume arrays the CALLER still holds:
+    init_state deep-copies, so the same values dict can seed several
+    trainers (the checkpoint tests do exactly this)."""
+    values = {"w": jnp.zeros((16,))}
+    batch = {"eps": 0.05 * jax.random.normal(jax.random.PRNGKey(1),
+                                             (4, 16))}
+    trA, trB = _trainer(), _trainer()
+    sA = trA.init_state(values)
+    assert sA.values["w"] is not values["w"]
+    trA.run_round(sA, batch)
+    assert not values["w"].is_deleted()
+    sB = trB.init_state(values)            # still usable
+    sB, rec = trB.run_round(sB, batch)
+    assert np.isfinite(rec["loss"])
+
+
+def test_async_save_snapshots_before_donation(tmp_path):
+    """fit() checkpoints off-thread while the NEXT round donates the
+    state the writer is serializing — save(wait=False) must snapshot to
+    host first, so the restored checkpoint matches the step it named."""
+    import itertools
+
+    def batches():
+        for s in itertools.count():
+            key = jax.random.fold_in(jax.random.PRNGKey(3), s)
+            yield {"eps": 0.05 * jax.random.normal(key, (4, 16))}
+
+    tr = _trainer()
+    tr.config = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2)
+    state, _ = tr.fit(tr.init_state({"w": jnp.zeros((16,))}), batches(), 6)
+    tr.close()
+    tr2 = _trainer()
+    tr2.config = TrainerConfig(ckpt_dir=str(tmp_path), resume=True)
+    back = tr2.init_state({"w": jnp.zeros((16,))})
+    assert back.step == 6
+    np.testing.assert_array_equal(np.asarray(back.values["w"]),
+                                  np.asarray(state.values["w"]))
+
+
+def test_serve_bench_step_donates_cache():
+    """The fixed-batch serving baseline donates its contiguous KV cache
+    to every step — the dominant allocation is single-buffered."""
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import make_serve_step
+    from repro.models import model as M
+    from repro.models.nn import split_params
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    values, _ = split_params(M.init_params(cfg, jax.random.PRNGKey(0)))
+    serve_step, _ = make_serve_step(cfg, None, 2)
+    step_jit = jax.jit(serve_step, donate_argnums=(1,))
+    cache, _ = split_params(M.init_cache(cfg, 2, 16))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    assert _alias_bytes(step_jit, values, cache, tok, pos) > 0
+    cache_leaf = jax.tree.leaves(cache)[0]
+    _, cache = step_jit(values, cache, tok, pos)
+    assert cache_leaf.is_deleted()
+    # weights are NOT donated — they serve every request
+    assert not jax.tree.leaves(values)[0].is_deleted()
+
+
+def test_echo_optimistic_step_keeps_inputs_alive():
+    """The echo-DP optimistic step must NOT donate: when Eq. 7 fails,
+    the SAME (values, opt_state) re-enter the exact fallback step, so
+    they must survive the optimistic call. The fallback is terminal for
+    the round and does donate. (8 fake devices, so a subprocess.)"""
+    from test_engine import _run_subprocess
+
+    _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.launch.engine import (EchoDpStrategy, Trainer,
+                                         TrainerConfig, TrainSettings)
+        from repro.optim import sgd
+
+        n, d, K = 8, 64, 4
+
+        def loss_fn(values, batch):
+            w = values["w"]
+            return 0.5 * jnp.sum(w ** 2) + w @ jnp.mean(batch["eps"], 0), {}
+
+        def batch_for(step, scale):
+            key = jax.random.fold_in(jax.random.PRNGKey(7), step)
+            return {"eps": scale * jax.random.normal(key, (n, d))}
+
+        mesh = jax.make_mesh((8,), ("data",))
+        tr = Trainer(EchoDpStrategy(loss_fn=loss_fn), None, sgd(0.02),
+                     TrainSettings(aggregator="cgc", f=1, echo_k=K,
+                                   echo_r=0.9),
+                     mesh, n, TrainerConfig(log_every=100))
+        state = tr.init_state({"w": jnp.ones((d,)) * 2.0})
+        with jax.set_mesh(mesh):
+            # round 0: zero basis -> fallback; its inputs are donated
+            pre = state.values["w"]
+            state, rec = tr.run_round(state, batch_for(0, 1e-4))
+            assert not rec["all_echo"]
+            assert pre.is_deleted(), "fallback must donate its inputs"
+            # quiet round: optimistic echo step succeeds and must have
+            # left its inputs alive (they were NOT donated)
+            pre = state.values["w"]
+            state, rec = tr.run_round(state, batch_for(1, 1e-4))
+            assert rec["all_echo"]
+            assert not pre.is_deleted(), \\
+                "optimistic echo step must not donate"
+            # shock round: optimistic step runs AND fails Eq. 7; the
+            # surviving inputs then feed the fallback, which donates them
+            pre = state.values["w"]
+            state, rec = tr.run_round(state, batch_for(2, 10.0))
+            assert not rec["all_echo"]
+            assert pre.is_deleted()
+        print("OK")
+    """)

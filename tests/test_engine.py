@@ -83,7 +83,12 @@ def test_echo_driver_multi_round_quadratic():
         with jax.set_mesh(mesh):
             for s in range(rounds):
                 batch = batch_for(s)
-                pre = state
+                # the fallback step donates (values, opt_state), so the
+                # replay oracle below needs its own copies of the
+                # pre-round buffers
+                pre = type(state)(jax.tree.map(jnp.copy, state.values),
+                                  jax.tree.map(jnp.copy, state.opt_state),
+                                  state.step, state.basis)
                 state, rec = tr.run_round(state, batch)
                 recs.append(rec)
                 if not rec["all_echo"]:
