@@ -3,7 +3,14 @@
 Each suite (train / kernels / serve) appends one record per run to a
 JSON array at the repo root:
 
-    [{"git_sha": "...", "timestamp": "...", "metrics": {...}}, ...]
+    [{"git_sha": "...", "dirty": false, "timestamp": "...",
+      "metrics": {...}}, ...]
+
+``git_sha`` is HEAD at emission time, which for the usual
+emit-then-commit workflow is the PARENT of the commit that carries the
+record — ``dirty`` (uncommitted changes present) flags exactly that
+case, and ``--sha`` on ``benchmarks/run.py`` lets a caller stamp the
+intended commit explicitly.
 
 and declares a ``GATE`` mapping over the *machine-portable* subset of
 its metrics — ratios (fused-vs-unfused speedup, continuous/fixed
@@ -44,6 +51,18 @@ def git_sha(default: str = "unknown") -> str:
         return default
 
 
+def git_dirty() -> bool:
+    """True when the tree holds uncommitted changes — the emitted sha
+    then names the parent of the commit the record belongs to."""
+    try:
+        out = subprocess.run(["git", "status", "--porcelain"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        return out.returncode != 0 or bool(out.stdout.strip())
+    except OSError:
+        return True
+
+
 def load_records(path: str) -> List[Dict[str, Any]]:
     """The trajectory at ``path``; [] when absent or empty."""
     if not os.path.exists(path):
@@ -59,11 +78,17 @@ def load_records(path: str) -> List[Dict[str, Any]]:
 
 
 def append_record(path: str, metrics: Dict[str, Any],
-                  sha: Optional[str] = None) -> Dict[str, Any]:
-    """Append {git_sha, timestamp, metrics} to the array at ``path``."""
+                  sha: Optional[str] = None,
+                  dirty: Optional[bool] = None) -> Dict[str, Any]:
+    """Append {git_sha, dirty, timestamp, metrics} to the array at
+    ``path``. An explicit ``sha`` overrides the HEAD lookup (and marks
+    the record clean unless ``dirty`` says otherwise)."""
     records = load_records(path)
+    if dirty is None:
+        dirty = False if sha is not None else git_dirty()
     record = {
         "git_sha": sha if sha is not None else git_sha(),
+        "dirty": dirty,
         "timestamp": datetime.datetime.now(
             datetime.timezone.utc).isoformat(timespec="seconds"),
         "metrics": metrics,

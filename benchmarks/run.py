@@ -92,8 +92,9 @@ def main_trajectory(args) -> int:
                 print(f"[{name}] gate skipped: no prior record in "
                       f"{path}", flush=True)
         if args.emit:
-            rec = bench_io.append_record(path, metrics)
-            print(f"[{name}] emitted record {rec['git_sha'][:12]} -> "
+            rec = bench_io.append_record(path, metrics, sha=args.sha)
+            tag = " (dirty)" if rec.get("dirty") else ""
+            print(f"[{name}] emitted record {rec['git_sha'][:12]}{tag} -> "
                   f"{path}", flush=True)
     return 1 if failed else 0
 
@@ -114,6 +115,9 @@ def main() -> None:
                     help="trajectory suites to run")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="relative regression tolerance (default 0.2)")
+    ap.add_argument("--sha", default=None,
+                    help="stamp emitted records with this sha instead of "
+                         "HEAD (provenance for emit-before-commit runs)")
     ap.add_argument("--out-dir", default=None,
                     help="directory for BENCH_*.json (default: repo root)")
     args = ap.parse_args()

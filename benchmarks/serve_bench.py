@@ -30,26 +30,45 @@ def config_from_flags(args) -> "run.RunConfig":
             seed=args.seed))
 
 
-# gated keys of bench(): the continuous/fixed ratio is measured on one
-# machine within one process, so it ports across hardware
-GATE = {"speedup": "higher"}
+# gated keys of bench(): ratios/flags measured on one machine within one
+# process, so they port across hardware — the continuous/fixed speedup,
+# the prefix-cache hit rate + prefill-compute saving on the shared-prefix
+# trace, and the greedy-output bitwise-equality flag (cache on == off)
+GATE = {
+    "speedup": "higher",
+    "prefix_hit_rate": "higher",
+    "prefill_saved": "higher",
+    "prefix_outputs_equal": "higher",
+}
 
 
 def bench():
-    """BENCH_serve.json metrics for one run: the continuous-vs-fixed
-    throughput ratio (gated) plus absolute tokens/s and latency
-    percentiles (informational)."""
+    """BENCH_serve.json metrics for one run: the gated ratios above plus
+    absolute tokens/s, latency, p50/p99 TTFT/ITL, and preemption rate
+    (informational)."""
     from repro.run.config import BenchSpec
     from repro.serve.bench import run_bench
 
     res = run_bench("qwen3-0.6b", BenchSpec(), verbose=False)
+    on = res["shared_on"]
     return {
         "speedup": res["speedup"],
+        "prefix_hit_rate": res["prefix_hit_rate"],
+        "prefill_saved": res["prefill_saved"],
+        "prefix_outputs_equal": res["prefix_outputs_equal"],
+        "shared_speedup": res["shared_speedup"],
         "fixed_tokens_per_s": res["fixed"]["tokens_per_s"],
         "continuous_tokens_per_s": res["continuous"]["tokens_per_s"],
         "continuous_p50_s": res["continuous"]["latency_p50_s"],
         "continuous_p99_s": res["continuous"]["latency_p99_s"],
         "preemptions": res["continuous"].get("preemptions", 0),
+        "shared_tokens_per_s": on["tokens_per_s"],
+        "ttft_p50_s": on["ttft_p50_s"],
+        "ttft_p99_s": on["ttft_p99_s"],
+        "itl_p50_s": on["itl_p50_s"],
+        "itl_p99_s": on["itl_p99_s"],
+        "preemption_rate": on["preemption_rate"],
+        "cow_copies": on["cow_copies"],
     }
 
 

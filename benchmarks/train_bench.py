@@ -1,4 +1,5 @@
-"""Train-loop bench: the echo-DP driver on the paper's quadratic cost.
+"""Train-loop bench: the echo-DP driver on the paper's quadratic cost,
+plus the remat-policy sweep for the LM strategies.
 
 Runs the real ``launch.engine.Trainer`` (optimistic echo rounds + exact
 CGC fallback) for a fixed seeded schedule and reports the trajectory
@@ -8,7 +9,15 @@ functions of the seeded run (decisions have wide margins), so they gate
 cleanly across machines; wall-clock per round rides along as
 information only.
 
-The driver needs multiple workers, so the run happens in a subprocess
+The remat sweep (DESIGN.md §12 HC2) runs the reduced LM through the
+replicated strategy under both ``TrainSettings.remat`` policies —
+``full`` (recompute everything in backward) and ``save_psum`` (keep
+cross-worker psum results) — in one process, and reports the loss-match
+flag (gated: the policy must stay numerically inert) and the speed
+ratio (informational: remat trades compute for memory, so the ratio is
+hardware-shaped).
+
+The drivers need multiple workers, so each run happens in a subprocess
 with 8 fake CPU devices (the calling process has already initialised
 jax single-device).
 """
@@ -72,25 +81,85 @@ print(json.dumps({
 }))
 """
 
-# gated keys: deterministic trajectory ratios, machine-portable
+_REMAT_BODY = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, time
+import jax
+import numpy as np
+from repro.configs import get_config, reduced
+from repro.data import make_batch_iterator
+from repro.launch.engine import Trainer, TrainerConfig, TrainSettings
+from repro.models import model as M
+from repro.models.nn import split_params
+from repro.optim import sgd
+
+cfg = reduced(get_config("qwen3-0.6b"))
+batch, seq, rounds = 8, 32, 3
+mesh = jax.make_mesh((8,), ("data",))
+it = make_batch_iterator(cfg, batch, seq, seed=0)
+batches = [next(it) for _ in range(2 * rounds)]
+
+walls, losses = {}, {}
+for remat in ("full", "save_psum"):
+    tr = Trainer("replicated", cfg, sgd(1e-3),
+                 TrainSettings(aggregator="mean", remat=remat), mesh,
+                 batch, TrainerConfig(log_every=10**9),
+                 printer=lambda s: None)
+    values, _ = split_params(M.init_params(cfg, jax.random.PRNGKey(0)))
+    state = tr.init_state(values)
+    ls = []
+    with jax.set_mesh(mesh):
+        for b in batches[:rounds]:       # warm the executable
+            state, rec = tr.run_round(state, b)
+            ls.append(rec["loss"])
+        t0 = time.perf_counter()
+        for b in batches[rounds:]:       # timed steady-state rounds
+            state, rec = tr.run_round(state, b)
+            ls.append(rec["loss"])
+        walls[remat] = time.perf_counter() - t0
+    losses[remat] = ls
+
+print(json.dumps({
+    "remat_loss_match": float(np.allclose(losses["full"],
+                                          losses["save_psum"],
+                                          rtol=1e-4, atol=1e-6)),
+    "remat_savepsum_speedup": walls["full"] / walls["save_psum"],
+    "us_per_round_full": walls["full"] / rounds * 1e6,
+    "us_per_round_save_psum": walls["save_psum"] / rounds * 1e6,
+}))
+"""
+
+# gated keys: deterministic trajectory ratios/flags, machine-portable
+# (the remat speed ratio is informational — remat trades compute for
+# memory, so its sign is hardware-shaped)
 GATE = {
     "echo_rate": "higher",
     "bits_saving": "higher",
     "loss_decreased": "higher",
+    "remat_loss_match": "higher",
 }
 
 
-def bench():
-    """BENCH_train.json metrics for one run (subprocess driver)."""
+def _run_body(body: str):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
     env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(_BODY)],
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
                        capture_output=True, text=True, env=env, timeout=600)
     if r.returncode != 0:
         raise RuntimeError(f"train bench failed:\n{r.stdout}\n{r.stderr}")
     return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def bench():
+    """BENCH_train.json metrics for one run: the echo-DP driver plus the
+    LM remat-policy sweep (subprocess drivers)."""
+    metrics = _run_body(_BODY)
+    metrics.update(_run_body(_REMAT_BODY))
+    return metrics
 
 
 def run(out_dir: str = "experiments"):

@@ -154,6 +154,19 @@ class ServeSpec:
     gen: int = 32
     token_budget: int = 256
     decode_quantum: int = 8
+    # SLO / redundancy knobs (DESIGN.md §11): prefill_chunk caps the
+    # prompt tokens one lane prefills per step (0 = whole prompt at
+    # once); prefix_cache enables cross-request CoW prefix sharing;
+    # shared_prefix_len prepends that many common "system prompt"
+    # tokens to every generated request; priority/deadline_s/tenants
+    # set the submitted requests' scheduling class (deadline_s 0 =
+    # none; tenants > 1 round-robins tenant labels).
+    prefill_chunk: int = 0
+    prefix_cache: bool = True
+    shared_prefix_len: int = 0
+    priority: int = 0
+    deadline_s: float = 0.0
+    tenants: int = 1
     seed: int = 0
     log_every: int = 5
     metrics_path: Optional[str] = None   # None: <run_dir>/metrics.jsonl
@@ -181,6 +194,12 @@ class BenchSpec:
     rate: float = 100.0              # Poisson arrival rate (req/s)
     page_size: int = 8
     num_pages: int = 64
+    # shared-prefix leg: every request = shared_prefix_len common tokens
+    # + a prompt_len unique tail, run with prefix sharing on vs off
+    # (36 is deliberately NOT page_size-aligned so the divergent-tail
+    # copy-on-write path runs in the standing record, not just tests)
+    shared_prefix_len: int = 36
+    prefill_chunk: int = 16
     seed: int = 0
 
 

@@ -341,17 +341,28 @@ def serve(cfg: RunConfig) -> ServeResult:
         num_pages=spec.num_pages,
         max_blocks_per_seq=spec.max_blocks_per_seq,
         token_budget=spec.token_budget,
-        decode_quantum=spec.decode_quantum, metrics_path=metrics_path,
+        decode_quantum=spec.decode_quantum,
+        prefill_chunk=spec.prefill_chunk,
+        prefix_cache=spec.prefix_cache, metrics_path=metrics_path,
         log_every=spec.log_every, sampling=spec.sampling),
         mesh=mesh, moe_impl=cfg.mesh.moe_impl)
 
     rng = np.random.default_rng(spec.seed)
+    # a shared "system prompt" every request starts with — the prefix
+    # cache turns its prefill into page adoptions after the first request
+    shared = rng.integers(0, model_cfg.vocab_size,
+                          size=spec.shared_prefix_len).tolist() \
+        if spec.shared_prefix_len else []
     handles = []
-    for _ in range(spec.requests):
+    for i in range(spec.requests):
         plen = int(rng.integers(2, max(spec.prompt_len, 2) + 1))
         gen = int(rng.integers(1, max(spec.gen, 1) + 1))
-        prompt = rng.integers(0, model_cfg.vocab_size, size=plen).tolist()
-        handles.append(engine.submit(prompt, max_new=gen))
+        prompt = shared + rng.integers(0, model_cfg.vocab_size,
+                                       size=plen).tolist()
+        handles.append(engine.submit(
+            prompt, max_new=gen, priority=spec.priority,
+            deadline_s=spec.deadline_s or None,
+            tenant=f"t{i % max(spec.tenants, 1)}"))
 
     engine.drain(max_steps=100 * spec.requests * (spec.gen + 2))
     engine.sched.check_invariants()
@@ -374,7 +385,14 @@ def print_serve_summary(result: ServeResult) -> None:
           f"{summary['preemptions']} preemptions")
     print(f"latency p50={summary['latency_p50_s']}s "
           f"p99={summary['latency_p99_s']}s "
-          f"ttft p50={summary['ttft_p50_s']}s")
+          f"ttft p50={summary['ttft_p50_s']}s "
+          f"p99={summary['ttft_p99_s']}s "
+          f"itl p50={summary['itl_p50_s']}s")
+    if summary.get("prefix_hit_tokens"):
+        print(f"prefix cache: hit rate "
+              f"{100.0 * summary['prefix_hit_rate']:.1f}% "
+              f"({summary['prefix_hit_tokens']} tokens adopted, "
+              f"{summary['cow_copies']} CoW copies)")
 
 
 # ---------------------------------------------------------------------------

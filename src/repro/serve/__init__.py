@@ -1,10 +1,12 @@
-"""repro.serve — continuous-batching serving subsystem (DESIGN.md §7).
+"""repro.serve — continuous-batching serving subsystem (DESIGN.md §7, §11).
 
-  kv_cache.py   paged KV cache: fixed-size pages, block tables, free list
-  scheduler.py  FCFS token-budget admission, prefill/decode interleave,
-                preempt-longest on block-pool OOM
-  engine.py     ServeEngine: jitted paged prefill/decode over ShardCtx
-  api.py        RequestHandle + jsonl serving metrics
+  kv_cache.py   paged KV cache: ref-counted pages, content-addressed
+                prefix index, copy-on-write sharing
+  scheduler.py  SLO-aware admission (priority / deadline / tenant
+                fairness), chunked prefill, class-ordered preemption
+  engine.py     ServeEngine: jitted paged prefill/decode over ShardCtx,
+                streaming token delivery
+  api.py        RequestHandle + jsonl serving metrics (TTFT / ITL)
 
 The paged attention hot path dispatches through
 ``kernels.ops.paged_decode_attention`` (Pallas on TPU,
@@ -14,14 +16,16 @@ from repro.run.config import SamplingSpec
 
 from .api import FINISHED, RUNNING, WAITING, RequestHandle, ServeMetrics
 from .engine import ServeConfig, ServeEngine
-from .kv_cache import (SCRATCH_PAGE, BlockAllocator, PagedKVCache,
-                       contiguous_from_paged, paged_from_contiguous)
+from .kv_cache import (SCRATCH_PAGE, AdmitPlan, BlockAllocator,
+                       PagedKVCache, PrefixPagePool, contiguous_from_paged,
+                       copy_pages, paged_from_contiguous)
 from .scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
     "FINISHED", "RUNNING", "WAITING", "RequestHandle", "SamplingSpec",
     "ServeMetrics",
-    "ServeConfig", "ServeEngine", "SCRATCH_PAGE", "BlockAllocator",
-    "PagedKVCache", "contiguous_from_paged", "paged_from_contiguous",
+    "ServeConfig", "ServeEngine", "SCRATCH_PAGE", "AdmitPlan",
+    "BlockAllocator", "PagedKVCache", "PrefixPagePool", "copy_pages",
+    "contiguous_from_paged", "paged_from_contiguous",
     "Scheduler", "SchedulerConfig",
 ]

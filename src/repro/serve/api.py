@@ -1,20 +1,28 @@
-"""Request/response surface + serving metrics (DESIGN.md §7).
+"""Request/response surface + serving metrics (DESIGN.md §7, §11).
 
 A :class:`RequestHandle` is both the scheduler's unit of work and the
 caller's view of a request: ``ServeEngine.submit`` returns one, the
 engine mutates it as the request moves WAITING -> RUNNING -> FINISHED
 (preemption sends it back to WAITING with its progress kept), and
-``tokens`` accumulates the generated ids.
+``tokens`` accumulates the generated ids. SLO fields ride on the handle:
+``priority`` (lower = more important), an optional soft ``deadline_s``,
+and a ``tenant`` label feeding the scheduler's fairness counters.
+
+Streaming: ``take_new()`` drains the tokens generated since the last
+call (a cursor, not a copy of history), so callers can emit tokens as
+decode steps complete — ``ServeEngine.stream`` wraps it in a generator
+and makes TTFT measurable at the API surface.
 
 :class:`ServeMetrics` mirrors the trainer's metrics contract: one jsonl
 record per engine step through the same (non-blocking) ``MetricsSink``,
-plus throughput / latency counters aggregated into ``summary()``.
+plus throughput / latency counters aggregated into ``summary()`` —
+p50/p99 TTFT and ITL (inter-token latency), and the preemption rate.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -34,6 +42,12 @@ class RequestHandle:
     max_new: int                      # generation budget
     eos: Optional[int] = None         # stop token (None: run to max_new)
 
+    # SLO class (scheduler sort keys; defaults reduce to FCFS)
+    priority: int = 0                 # lower = more important
+    deadline_s: Optional[float] = None  # soft deadline after submit
+    tenant: str = "default"           # fairness accounting bucket
+    arrival: int = 0                  # submit sequence number (tiebreak)
+
     status: str = WAITING
     tokens: List[int] = dataclasses.field(default_factory=list)  # generated
     t_submit: float = 0.0
@@ -45,10 +59,22 @@ class RequestHandle:
     slot: Optional[int] = None        # decode lane
     blocks: List[int] = dataclasses.field(default_factory=list)  # page ids
     base_len: int = 0                 # context length at last admission
+    # prefill progress: context tokens whose KV is present in the pages
+    # (adopted shared pages count; committed < base_len => still
+    # prefilling in chunks)
+    committed: int = 0
+    keys: List[Any] = dataclasses.field(default_factory=list)  # chain keys
+    cow: Optional[Tuple[int, int]] = None  # (src page, dst block) pending
+    _streamed: int = 0                # take_new() cursor
 
     @property
     def done(self) -> bool:
         return self.status == FINISHED
+
+    @property
+    def pending_prefill(self) -> bool:
+        """True while admitted context KV is still being (chunk-)built."""
+        return self.committed < self.base_len
 
     def context(self) -> List[int]:
         """Prompt + everything generated so far — what a (re-)admission
@@ -63,6 +89,12 @@ class RequestHandle:
         """The next decode input: the most recent context token."""
         return self.tokens[-1] if self.tokens else self.prompt[-1]
 
+    def take_new(self) -> List[int]:
+        """Tokens generated since the last ``take_new`` (streaming)."""
+        out = self.tokens[self._streamed:]
+        self._streamed = len(self.tokens)
+        return out
+
     @property
     def latency(self) -> Optional[float]:
         if self.t_finish is None:
@@ -75,6 +107,14 @@ class RequestHandle:
             return None
         return self.t_first_token - self.t_submit
 
+    @property
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency over the generated run."""
+        if self.t_finish is None or self.t_first_token is None \
+                or len(self.tokens) < 2:
+            return None
+        return (self.t_finish - self.t_first_token) / (len(self.tokens) - 1)
+
 
 def _percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
@@ -86,6 +126,8 @@ def _serve_record_line(record: Dict[str, Any]) -> str:
              f"run={record.get('running', 0)}",
              f"wait={record.get('waiting', 0)}",
              f"tok/s={record.get('tokens_per_s', 0.0):.1f}"]
+    if record.get("cached"):
+        parts.append(f"cached={record['cached']}")
     if record.get("preempted"):
         parts.append(f"preempted={record['preempted']}")
     return "  ".join(parts)
@@ -106,24 +148,29 @@ class ServeMetrics:
         self.prefill_steps = 0
         self.decode_steps = 0
         self.tokens_prefilled = 0
+        self.tokens_cached = 0        # prefill tokens skipped via sharing
         self.tokens_generated = 0
         self.preemptions = 0
         self.latencies: List[float] = []
         self.ttfts: List[float] = []
+        self.itls: List[float] = []
 
     def record_step(self, kind: str, *, generated: int, prefilled: int,
                     running: int, waiting: int, free_pages: int,
-                    preempted: int, dt: float) -> Dict[str, Any]:
+                    preempted: int, dt: float,
+                    cached: int = 0) -> Dict[str, Any]:
         self.steps += 1
         self.prefill_steps += kind == "prefill"
         self.decode_steps += kind == "decode"
         self.tokens_generated += generated
         self.tokens_prefilled += prefilled
+        self.tokens_cached += cached
         self.preemptions += preempted
         record = {
             "step": self.steps, "kind": kind, "generated": generated,
-            "prefilled": prefilled, "running": running, "waiting": waiting,
-            "free_pages": free_pages, "preempted": preempted,
+            "prefilled": prefilled, "cached": cached, "running": running,
+            "waiting": waiting, "free_pages": free_pages,
+            "preempted": preempted,
             "step_s": round(dt, 6),
             "tokens_per_s": round(generated / dt, 3) if dt > 0 else 0.0,
             "tokens_generated_cumulative": self.tokens_generated,
@@ -136,22 +183,30 @@ class ServeMetrics:
             self.latencies.append(handle.latency)
         if handle.ttft is not None:
             self.ttfts.append(handle.ttft)
+        if handle.itl is not None:
+            self.itls.append(handle.itl)
 
     def summary(self) -> Dict[str, Any]:
         wall = max(self._clock() - self._t0, 1e-9)
+        done = max(len(self.latencies), 1)
         return {
             "steps": self.steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
             "tokens_prefilled": self.tokens_prefilled,
+            "tokens_cached": self.tokens_cached,
             "tokens_generated": self.tokens_generated,
             "preemptions": self.preemptions,
+            "preemption_rate": round(self.preemptions / done, 4),
             "completed": len(self.latencies),
             "wall_s": round(wall, 3),
             "tokens_per_s": round(self.tokens_generated / wall, 3),
             "latency_p50_s": round(_percentile(self.latencies, 50), 6),
             "latency_p99_s": round(_percentile(self.latencies, 99), 6),
             "ttft_p50_s": round(_percentile(self.ttfts, 50), 6),
+            "ttft_p99_s": round(_percentile(self.ttfts, 99), 6),
+            "itl_p50_s": round(_percentile(self.itls, 50), 6),
+            "itl_p99_s": round(_percentile(self.itls, 99), 6),
         }
 
     def close(self) -> None:

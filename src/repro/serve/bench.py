@@ -14,9 +14,18 @@ backends over the SAME reduced model:
 
 Reports tokens/s (useful generated tokens / wall time) and per-request
 p50/p99 latency from arrival, plus the continuous/fixed speedup — the
-acceptance gate is >= 2x on the staggered trace. ``run_bench`` is the
-facade entry (``repro.run.bench`` / ``python -m repro bench``);
-``benchmarks/serve_bench.py`` is the legacy script shim.
+acceptance gate is >= 2x on the staggered trace.
+
+A second leg (``make_shared_trace`` / ``run_shared``) measures the
+redundancy stack (DESIGN.md §11): every request opens with the same
+"system prompt", requests carry mixed priorities / deadlines / tenants,
+and the engine runs with chunked prefill — once with the prefix cache
+on and once off. Reported: p50/p99 TTFT and ITL, prefix-page hit rate,
+preemption rate, the fraction of prefill compute the cache saved, and a
+bitwise greedy-output equality flag between the two runs.
+
+``run_bench`` is the facade entry (``repro.run.bench`` / ``python -m
+repro bench``); ``benchmarks/serve_bench.py`` is the legacy script shim.
 """
 from __future__ import annotations
 
@@ -146,6 +155,90 @@ def run_continuous(cfg, params, trace, batch: int, page_size: int,
             "preemptions": preempts}
 
 
+def make_shared_trace(n: int, shared_len: int, tail_len: int,
+                      gen_short: int, gen_long: int, rate: float,
+                      seed: int):
+    """Poisson arrivals where every prompt = one common ``shared_len``
+    system prefix + a unique ``tail_len`` tail, with mixed SLO classes:
+    1-in-4 requests is interactive (priority 0, a soft deadline), the
+    rest are batch (priority 1); tenants alternate. 1-in-4 carries the
+    long generation, as in ``make_trace``."""
+    rng = np.random.default_rng(seed)
+    # tokens stay below 256 so the warmup in run_shared can use the
+    # disjoint 256..511 range and still be in-vocab for reduced configs
+    shared = rng.integers(0, 256, size=shared_len).tolist()
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    reqs = []
+    for i in range(n):
+        gen = gen_long if i % 4 == 3 else gen_short
+        prompt = shared + rng.integers(0, 256, size=tail_len).tolist()
+        priority, deadline = (0, 0.5) if i % 4 == 1 else (1, None)
+        reqs.append((float(arrivals[i]), prompt, gen, priority, deadline,
+                     f"t{i % 2}"))
+    return reqs
+
+
+def run_shared(cfg, params, trace, batch: int, page_size: int,
+               num_pages: int, chunk: int, prefix_cache: bool):
+    """Drive the mixed-priority shared-prefix trace through the engine
+    with the prefix cache on or off (same arrival gating as
+    ``run_continuous``); returns latency/SLO/sharing metrics plus the
+    per-request greedy outputs (submission order) for the bitwise
+    on-vs-off comparison."""
+    max_tokens = max(len(p) + g for _, p, g, *_ in trace)
+    engine = ServeEngine(cfg, params, ServeConfig(
+        max_batch=batch, page_size=page_size, num_pages=num_pages,
+        max_blocks_per_seq=-(-max_tokens // page_size),
+        token_budget=4 * max(len(p) for _, p, _, *_ in trace),
+        prefill_chunk=chunk, prefix_cache=prefix_cache,
+        log_every=10 ** 9))
+    # warm the executables on disjoint token ids (256..511: no false
+    # prefix hits, still in-vocab — out-of-vocab ids would write NaN KV
+    # that poisons later reuses of the pages), then zero the sharing
+    # counters the warmup touched
+    for _, prompt, _, *_ in trace[:batch]:
+        warm = [256 + t % 256 for t in prompt]
+        engine.submit(warm, max_new=min(2 * engine.serve.decode_quantum,
+                                        engine.kv.max_seq_tokens()
+                                        - len(warm)))
+    engine.drain()
+    pool = engine.kv.allocator
+    pool.admit_tokens = pool.hit_tokens = pool.cow_copies = 0
+
+    t0 = time.perf_counter()
+    pending = list(trace)
+    handles = []
+    while pending or engine.sched.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            _, prompt, gen, prio, deadline, tenant = pending.pop(0)
+            handles.append(engine.submit(prompt, max_new=gen,
+                                         priority=prio,
+                                         deadline_s=deadline,
+                                         tenant=tenant))
+        if engine.sched.has_work:
+            engine.step()
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.01))
+    wall = time.perf_counter() - t0
+    engine.sched.check_invariants()
+    summary = engine.summary()
+    engine.close()
+    tokens = sum(len(h.tokens) for h in handles)
+    ttfts = [h.ttft for h in handles if h.ttft is not None]
+    itls = [h.itl for h in handles if h.itl is not None]
+    return {"tokens": tokens, "wall_s": wall,
+            "tokens_per_s": tokens / wall,
+            "ttft_p50_s": _pct(ttfts, 50), "ttft_p99_s": _pct(ttfts, 99),
+            "itl_p50_s": _pct(itls, 50), "itl_p99_s": _pct(itls, 99),
+            "prefilled": summary["tokens_prefilled"],
+            "prefix_hit_rate": summary["prefix_hit_rate"],
+            "cow_copies": summary["cow_copies"],
+            "preemptions": summary["preemptions"],
+            "preemption_rate": summary["preemption_rate"],
+            "outputs": [list(h.tokens) for h in handles]}
+
+
 def run_bench(arch: str, spec: BenchSpec,
               verbose: bool = True) -> Dict[str, Any]:
     """Both backends over one trace -> {"fixed", "continuous", "speedup"}."""
@@ -160,6 +253,20 @@ def run_bench(arch: str, spec: BenchSpec,
                           spec.num_pages)
     speedup = cont["tokens_per_s"] / fixed["tokens_per_s"]
 
+    # the redundancy leg: same engine, shared-prefix mixed-priority trace,
+    # prefix cache off vs on (shorter long-gen tail to bound runtime)
+    strace = make_shared_trace(
+        spec.requests, spec.shared_prefix_len, spec.prompt_len,
+        spec.gen_short, max(spec.gen_short, spec.gen_long // 2),
+        spec.rate, spec.seed)
+    off = run_shared(cfg, params, strace, spec.batch, spec.page_size,
+                     spec.num_pages, spec.prefill_chunk, prefix_cache=False)
+    on = run_shared(cfg, params, strace, spec.batch, spec.page_size,
+                    spec.num_pages, spec.prefill_chunk, prefix_cache=True)
+    outputs_equal = float(on.pop("outputs") == off.pop("outputs"))
+    prefill_saved = 1.0 - on["prefilled"] / max(off["prefilled"], 1)
+    shared_speedup = on["tokens_per_s"] / max(off["tokens_per_s"], 1e-9)
+
     if verbose:
         print(f"arch={cfg.name} requests={spec.requests} "
               f"batch={spec.batch} gen={spec.gen_short}/{spec.gen_long} "
@@ -170,4 +277,22 @@ def run_bench(arch: str, spec: BenchSpec,
                   f"p50={r['latency_p50_s']:.2f}s "
                   f"p99={r['latency_p99_s']:.2f}s")
         print(f"  continuous/fixed tokens/s: {speedup:.2f}x")
-    return {"fixed": fixed, "continuous": cont, "speedup": speedup}
+        print(f"  shared-prefix trace (prefix={spec.shared_prefix_len} "
+              f"chunk={spec.prefill_chunk}):")
+        for name, r in (("cache off", off), ("cache on", on)):
+            print(f"  {name:10s} {r['tokens']:5d} tok  "
+                  f"{r['tokens_per_s']:8.1f} tok/s  "
+                  f"prefilled={r['prefilled']:5d}  "
+                  f"ttft p50={r['ttft_p50_s']:.3f}s "
+                  f"p99={r['ttft_p99_s']:.3f}s  "
+                  f"preempt={r['preemptions']}")
+        print(f"  hit_rate={on['prefix_hit_rate']:.3f} "
+              f"prefill_saved={100.0 * prefill_saved:.1f}% "
+              f"cow={on['cow_copies']} "
+              f"outputs_equal={bool(outputs_equal)}")
+    return {"fixed": fixed, "continuous": cont, "speedup": speedup,
+            "shared_off": off, "shared_on": on,
+            "prefix_hit_rate": on["prefix_hit_rate"],
+            "prefill_saved": prefill_saved,
+            "shared_speedup": shared_speedup,
+            "prefix_outputs_equal": outputs_equal}

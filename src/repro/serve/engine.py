@@ -1,24 +1,27 @@
-"""ServeEngine: the continuous-batching serving driver (DESIGN.md §7).
+"""ServeEngine: the continuous-batching serving driver (DESIGN.md §7, §11).
 
-Owns the jitted paged ``prefill`` / ``decode_step`` executables (built on
-``repro.dist.ShardCtx`` — TP via the existing sharding rules when a mesh
-is given), the :class:`PagedKVCache` pools, and the
-:class:`Scheduler`; ``submit``/``step``/``drain`` is the whole surface.
+Owns the jitted paged ``prefill`` / ``decode_step`` / page-copy
+executables (built on ``repro.dist.ShardCtx`` — TP via the existing
+sharding rules when a mesh is given), the :class:`PagedKVCache` pools,
+and the :class:`Scheduler`; ``submit``/``step``/``stream``/``drain`` is
+the whole surface.
 
 Fixed shapes keep recompiles bounded: decode always runs the full
 ``max_batch`` lane set (idle lanes carry pos = -1 and write the scratch
-page); prefill pads the admitted pack to ``max_batch`` lanes and a
+page); prefill pads the active pack to ``max_batch`` lanes and a
 power-of-two token length, so at most O(log max_prompt) prefill
-executables exist. Prefill itself is a ``lax.scan`` of the paged decode
-step over the prompt — the same code path the decode hot loop runs, with
-per-lane lengths masking ragged prompts.
+executables exist; the CoW page copy pads to ``max_batch``
+scratch-identity pairs. Prefill itself is a ``lax.scan`` of the paged
+decode step over the prompt *suffix* — chunked prefill and prefix
+adoption both just move the scan's start offset, so the same code path
+serves full prompts, chunk continuations, and post-adoption tails.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +34,7 @@ from repro.models.nn import Param, merge_params, split_params
 from repro.run.config import SamplingSpec
 
 from .api import RequestHandle, ServeMetrics
-from .kv_cache import PagedKVCache
+from .kv_cache import PagedKVCache, copy_pages
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -54,6 +57,9 @@ class ServeConfig:
     max_blocks_per_seq: int = 16   # block-table width
     token_budget: int = 512        # prefill tokens admitted per step
     decode_quantum: int = 8        # decode steps fused per dispatch
+    prefill_chunk: int = 0         # prefill tokens per lane per step
+    #                                (0 = whole prompt in one step)
+    prefix_cache: bool = True      # cross-request CoW prefix sharing
     metrics_path: Optional[str] = None
     log_every: int = 10
     # token sampling policy: temperature 0 = exact greedy argmax (the
@@ -91,9 +97,11 @@ class ServeEngine:
         self.ctx = make_shard_ctx(mesh, serve.max_batch, moe_impl)
         self.mesh = mesh
         self.kv = PagedKVCache(cfg, serve.num_pages, serve.page_size,
-                               serve.max_blocks_per_seq)
+                               serve.max_blocks_per_seq,
+                               prefix_cache=serve.prefix_cache)
         self.sched = Scheduler(self.kv, SchedulerConfig(
-            max_batch=serve.max_batch, token_budget=serve.token_budget))
+            max_batch=serve.max_batch, token_budget=serve.token_budget,
+            prefill_chunk=serve.prefill_chunk))
         self.metrics = ServeMetrics(serve.metrics_path, serve.log_every,
                                     printer)
         self.values, _ = split_params(params)
@@ -107,6 +115,7 @@ class ServeEngine:
                 _plain_shardings(merge_params(self.kv.pages, self.kv.axes),
                                  mesh))
         self._rid = itertools.count()
+        self._last_kind = "idle"
         # sampling keys: one per dispatch, folded from the spec's seed —
         # the same submissions replay to the same tokens.
         self._sample_base = jax.random.PRNGKey(serve.sampling.seed)
@@ -117,6 +126,7 @@ class ServeEngine:
         self._decode_jit = jax.jit(self._decode_fn, static_argnums=(6,),
                                    donate_argnums=(1,))
         self._prefill_jit = jax.jit(self._prefill_fn, donate_argnums=(1,))
+        self._copy_jit = jax.jit(copy_pages, donate_argnums=(0,))
 
     # --- jitted bodies ----------------------------------------------
 
@@ -185,23 +195,28 @@ class ServeEngine:
                                            jnp.arange(k))
         return jnp.moveaxis(toks, 0, 1), pages           # (B, k)
 
-    def _prefill_fn(self, values, pages, tokens, lengths, tables, key):
-        """Scan the paged decode step over a ragged prompt pack.
+    def _prefill_fn(self, values, pages, tokens, starts, counts, tables,
+                    key):
+        """Scan the paged decode step over a ragged prompt-chunk pack.
 
-        tokens (B, S) scratch-padded, lengths (B,) (0 = idle lane).
-        Returns (next token sampled at each lane's last prompt
-        position (B,), pages)."""
+        tokens (B, S) scratch-padded chunk tokens, starts (B,) the
+        logical position of each lane's first chunk token, counts (B,)
+        chunk lengths (0 = idle lane). Positions before ``starts`` are
+        already in the pages — adopted shared prefix pages or earlier
+        chunks — and are attended through the block table. Returns
+        (token sampled at each lane's last chunk position (B,), pages).
+        """
         B, S = tokens.shape
         V = self.cfg.padded_vocab
 
         def body(carry, t):
             pages, last = carry
-            pos = jnp.where(t < lengths, t, -1)
+            pos = jnp.where(t < counts, starts + t, -1)
             logits, pages = M.decode_step(
                 values, self.cfg, pages, jax.lax.dynamic_slice_in_dim(
                     tokens, t, 1, axis=1), pos,
                 shard_ctx=self._model_ctx(), block_tables=tables)
-            last = jnp.where((t == lengths - 1)[:, None], logits, last)
+            last = jnp.where((t == counts - 1)[:, None], logits, last)
             return (pages, last), None
 
         last0 = jnp.zeros((B, V), jnp.float32)
@@ -212,12 +227,22 @@ class ServeEngine:
     # --- public surface ----------------------------------------------
 
     def submit(self, prompt_tokens, max_new: int,
-               eos: Optional[int] = None) -> RequestHandle:
+               eos: Optional[int] = None, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               tenant: str = "default") -> RequestHandle:
         prompt = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
         if not prompt or max_new < 1:
             raise ValueError("need a non-empty prompt and max_new >= 1")
+        if any(t < 0 or t >= self.cfg.vocab_size for t in prompt):
+            # out-of-vocab ids would gather garbage embeddings and write
+            # NaN KV that outlives this request in recycled pages
+            raise ValueError(f"prompt token ids must be in [0, "
+                             f"{self.cfg.vocab_size}), got "
+                             f"{[t for t in prompt if not 0 <= t < self.cfg.vocab_size][:4]}")
         req = RequestHandle(rid=next(self._rid), prompt=prompt,
-                            max_new=max_new, eos=eos, t_submit=time.time())
+                            max_new=max_new, eos=eos, priority=priority,
+                            deadline_s=deadline_s, tenant=tenant,
+                            t_submit=time.time())
         self.sched.submit(req)
         return req
 
@@ -241,16 +266,25 @@ class ServeEngine:
             self.metrics.record_finish(req)
 
     def step(self) -> Dict[str, Any]:
-        """One scheduler iteration: a prefill step if anything was
-        admitted, else a decode step over the running lanes. Returns the
-        step's metrics record."""
+        """One scheduler iteration: admit, then run one prefill or decode
+        step. Lanes mid-prompt (chunked prefill) alternate with decode
+        so neither phase starves the other; with ``prefill_chunk=0``
+        this reduces to the baseline prefill-whole-prompt-on-admission
+        policy. Returns the step's metrics record."""
         t0 = time.time()
         admitted = self.sched.admit()
-        if admitted:
-            record = self._prefill_step(admitted, t0)
-        elif self.sched.running:
+        cached = sum(r.committed for r in admitted)   # adopted, not computed
+        prefillable = any(r.pending_prefill
+                          for r in self.sched.running.values())
+        decodable = any(not r.pending_prefill
+                        for r in self.sched.running.values())
+        if prefillable and (admitted or not decodable
+                            or self._last_kind != "prefill"):
+            record = self._prefill_step(t0, cached)
+        elif decodable:
             record = self._decode_step(t0)
         else:
+            self._last_kind = "idle"
             record = self.metrics.record_step(
                 "idle", generated=0, prefilled=0, running=0,
                 waiting=len(self.sched.waiting),
@@ -258,28 +292,74 @@ class ServeEngine:
                 dt=time.time() - t0)
         return record
 
-    def _prefill_step(self, admitted: List[RequestHandle],
-                      t0: float) -> Dict[str, Any]:
+    def _run_cow_copies(self, lanes: List[RequestHandle]) -> None:
+        """Execute pending copy-on-write page copies (one padded
+        dispatch), then drop the source references."""
+        cow = [r for r in lanes if r.cow is not None]
+        if not cow:
+            return
         B = self.serve.max_batch
-        S = _bucket(max(req.base_len for req in admitted))
+        src = np.zeros((B,), np.int32)     # padding: scratch -> scratch
+        dst = np.zeros((B,), np.int32)
+        for i, req in enumerate(cow):
+            s, blk = req.cow
+            src[i], dst[i] = s, req.blocks[blk]
+        self.kv.pages = self._copy_jit(self.kv.pages, jnp.asarray(src),
+                                       jnp.asarray(dst))
+        for req in cow:
+            self.kv.allocator.release([req.cow[0]])
+            req.cow = None
+
+    def _prefill_step(self, t0: float, cached: int = 0) -> Dict[str, Any]:
+        """Prefill one chunk for every mid-prompt lane (class order; the
+        first lane's chunk always fits the budget so progress is
+        guaranteed)."""
+        self._last_kind = "prefill"
+        lanes = sorted((r for r in self.sched.running.values()
+                        if r.pending_prefill), key=self.sched._sort_key)
+        # divergent-tail page copies must land before this step's writes
+        self._run_cow_copies(lanes)
+        budget = self.sched.cfg.token_budget
+        quota: Dict[int, int] = {}
+        for i, req in enumerate(lanes):
+            n = self.sched.prefill_quota(
+                req, budget if i else self.kv.max_seq_tokens())
+            quota[req.rid] = n
+            budget -= n
+        active = [r for r in lanes if quota[r.rid] > 0]
+        B = self.serve.max_batch
+        S = _bucket(max(quota[r.rid] for r in active)) if active else 8
         tokens = np.zeros((B, S), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        for req in admitted:
+        starts = np.zeros((B,), np.int32)
+        counts = np.zeros((B,), np.int32)
+        for req in active:
+            n = quota[req.rid]
             ctx = req.context()
-            tokens[req.slot, :len(ctx)] = ctx
-            lengths[req.slot] = len(ctx)
+            tokens[req.slot, :n] = ctx[req.committed:req.committed + n]
+            starts[req.slot] = req.committed
+            counts[req.slot] = n
         next_tok, self.kv.pages = self._prefill_jit(
             self.values, self.kv.pages, jnp.asarray(tokens),
-            jnp.asarray(lengths), self._table_batch(), self._next_key())
+            jnp.asarray(starts), jnp.asarray(counts), self._table_batch(),
+            self._next_key())
         next_tok = np.asarray(next_tok)
         now = time.time()
-        for req in admitted:
-            # re-admitted requests prefilled prompt + prior generation as
-            # context; the sample continues the sequence either way.
-            self._commit_token(req, int(next_tok[req.slot]), now)
+        n_new = 0
+        for req in active:
+            req.committed += quota[req.rid]
+            self.sched.charge(req, quota[req.rid])
+            self.kv.allocator.register_progress(
+                req.blocks, req.keys, req.context(), req.committed)
+            if not req.pending_prefill:
+                # last chunk: the sample at position base_len-1 seeds
+                # generation (mid-chunk samples are discarded) — for a
+                # re-admission this continues prompt + prior tokens.
+                self._commit_token(req, int(next_tok[req.slot]), now)
+                n_new += 1
         return self.metrics.record_step(
-            "prefill", generated=len(admitted),
-            prefilled=int(lengths.sum()), running=len(self.sched.running),
+            "prefill", generated=n_new,
+            prefilled=int(counts.sum()), cached=cached,
+            running=len(self.sched.running),
             waiting=len(self.sched.waiting),
             free_pages=self.kv.allocator.num_free, preempted=0,
             dt=now - t0)
@@ -287,12 +367,16 @@ class ServeEngine:
     def _decode_step(self, t0: float) -> Dict[str, Any]:
         # the quantum is FIXED so exactly one decode executable exists; a
         # lane finishing mid-quantum (EOS / budget) has its overshoot
-        # discarded — the stray writes stay inside its own pages (the
-        # block-table gather clamps to its last block) and the pages are
-        # freed right after the dispatch.
+        # discarded — the stray writes stay inside its own *private*
+        # pages (blocks past the last registered one are never shared,
+        # and the block-table gather clamps to its last block) and the
+        # pages are released right after the dispatch.
+        self._last_kind = "decode"
         k = self.serve.decode_quantum
         preempted = self.sched.ensure_decode_capacity(k)
-        if not self.sched.running:
+        lanes = [r for r in self.sched.running.values()
+                 if not r.pending_prefill]
+        if not lanes:
             return self.metrics.record_step(
                 "decode", generated=0, prefilled=0, running=0,
                 waiting=len(self.sched.waiting),
@@ -301,27 +385,53 @@ class ServeEngine:
         B = self.serve.max_batch
         tokens = np.zeros((B, 1), np.int32)
         pos = np.full((B,), -1, np.int32)
-        for slot, req in self.sched.running.items():
-            tokens[slot, 0] = req.last_token()
-            pos[slot] = req.ctx_len() - 1
+        for req in lanes:
+            tokens[req.slot, 0] = req.last_token()
+            pos[req.slot] = req.ctx_len() - 1
         toks, self.kv.pages = self._decode_jit(
             self.values, self.kv.pages, jnp.asarray(tokens),
             jnp.asarray(pos), self._table_batch(), self._next_key(), k)
         toks = np.asarray(toks)
         now = time.time()
         n_new = 0
-        for slot, req in list(self.sched.running.items()):
+        for req in lanes:
+            got = 0
             for j in range(k):
-                self._commit_token(req, int(toks[slot, j]), now)
-                n_new += 1
+                self._commit_token(req, int(toks[req.slot, j]), now)
+                got += 1
                 if req.done:
                     break                 # overshoot past EOS is discarded
+            n_new += got
+            self.sched.charge(req, got)
+            if not req.done:
+                self.kv.allocator.register_progress(
+                    req.blocks, req.keys, req.context(),
+                    req.ctx_len() - 1)
         return self.metrics.record_step(
             "decode", generated=n_new, prefilled=0,
             running=len(self.sched.running),
             waiting=len(self.sched.waiting),
             free_pages=self.kv.allocator.num_free,
             preempted=len(preempted), dt=now - t0)
+
+    def stream(self, handle: RequestHandle,
+               max_steps: Optional[int] = None) -> Iterator[int]:
+        """Drive the engine until ``handle`` finishes, yielding its
+        tokens as decode steps commit them (other in-flight requests
+        progress too). TTFT is observable at the first yield."""
+        steps = 0
+        while True:
+            for tok in handle.take_new():
+                yield tok
+            if handle.done:
+                return
+            if not self.sched.has_work:
+                raise RuntimeError(f"request {handle.rid} cannot finish: "
+                                   f"scheduler has no work")
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(f"stream exceeded {max_steps} steps")
 
     def drain(self, max_steps: Optional[int] = None
               ) -> List[RequestHandle]:
@@ -339,9 +449,14 @@ class ServeEngine:
 
     def summary(self) -> Dict[str, Any]:
         s = self.metrics.summary()
-        s.update(free_pages=self.kv.allocator.num_free,
+        pool = self.kv.allocator
+        s.update(free_pages=pool.num_free,
+                 cached_pages=pool.num_cached,
                  waiting=len(self.sched.waiting),
-                 running=len(self.sched.running))
+                 running=len(self.sched.running),
+                 prefix_hit_rate=round(self.kv.prefix_hit_rate, 4),
+                 prefix_hit_tokens=pool.hit_tokens,
+                 cow_copies=pool.cow_copies)
         return s
 
     def close(self) -> None:

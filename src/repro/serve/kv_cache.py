@@ -1,4 +1,4 @@
-"""Paged KV cache: fixed-size pages, per-sequence block tables, free list.
+"""Paged KV cache: ref-counted pages, prefix sharing, copy-on-write.
 
 Device side, every attention layer owns a pool of ``num_pages`` pages of
 ``page_size`` token slots (``models.model.init_paged_cache``); logical
@@ -8,14 +8,37 @@ table and ONE allocator serve the whole model. Page 0 is reserved as the
 scratch page: padded / inactive-lane writes are directed there and its
 contents are never attended (lengths mask them out).
 
-Host side, :class:`BlockAllocator` hands out page ids from a free list —
-O(1) alloc/free, no compaction, fragmentation-free by construction
-(every block is the same size). :class:`PagedKVCache` bundles the device
-pools with the allocator and the contiguous-cache adapters.
+Host side, :class:`PrefixPagePool` owns the redundancy-aware accounting
+(DESIGN.md §11):
+
+  * **Refcounts.** Every non-scratch page is FREE, CACHED (refcount 0
+    but still holding indexed prefix content, reusable without a copy)
+    or LIVE (refcount = number of sequences mapping it). Admission
+    adopts shared pages with a refcount bump; release decrements and
+    only recycles at zero, so a preempted request can never free a page
+    another sequence still maps.
+  * **Prefix index.** Full pages are content-addressed by a token hash
+    chain: ``key_b = (key_{b-1}, tokens[b*ps:(b+1)*ps])`` (exact nested
+    tuples — no hash collisions to handle). A new request walks the
+    chain and adopts every fully-matching page; only the suffix from
+    the first divergent token gets private pages and prefill compute.
+  * **Copy-on-write.** When the divergence lands mid-page, the best
+    matching indexed page is adopted *partially*: its contents are
+    copied into the request's first private page before the first
+    divergent write (``copy_pages`` is the device op), so shared pages
+    themselves are never written. Refcounted pages with refcount > 1
+    are immutable by construction — writes only ever target the
+    sequence's private tail.
+
+:class:`BlockAllocator` (the PR 3 free-list allocator, no sharing) is
+kept for the contiguous-cache adapters' tests and as the simplest
+reference; :class:`PagedKVCache` now runs on :class:`PrefixPagePool`.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +49,10 @@ from repro.models import model as M
 from repro.models.nn import split_params
 
 SCRATCH_PAGE = 0
+
+# a prefix key is the nested tuple (parent_key, page_tokens); the root
+# parent is None — structural equality makes matching exact, not hashed
+PrefixKey = Tuple[Optional[tuple], Tuple[int, ...]]
 
 
 class BlockAllocator:
@@ -68,16 +95,289 @@ class BlockAllocator:
             self._free_set.add(p)
 
 
+@dataclasses.dataclass
+class AdmitPlan:
+    """What admission gave one sequence (``PrefixPagePool.admit``)."""
+
+    blocks: List[int]            # adopted shared pages + fresh private ones
+    keys: List[PrefixKey]        # chain keys of the adopted full blocks
+    committed: int               # context tokens already covered by pages
+    n_tokens: int                # context length admitted (counter rollback)
+    # partial-tail adoption: copy page ``cow_src`` into
+    # ``blocks[cow_block]`` BEFORE the first write (the caller runs the
+    # device copy, then releases cow_src)
+    cow_src: Optional[int] = None
+    cow_block: int = -1
+
+
+class PrefixPagePool:
+    """Ref-counted page pool with a content-addressed prefix index.
+
+    ``num_free`` counts *allocatable* pages — the truly-free list plus
+    the CACHED pages (refcount 0, content kept for future prefix hits;
+    an allocation evicts them in LRU order). Shared pages therefore
+    cost nothing until live sequences actually need the space.
+    """
+
+    def __init__(self, num_pages: int, page_size: int,
+                 prefix_cache: bool = True):
+        if num_pages < 2:
+            raise ValueError("need num_pages >= 2 (page 0 is scratch)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU order
+        self.ref: Dict[int, int] = {}            # live refcounts
+        self._index: Dict[PrefixKey, int] = {}   # chain key -> page
+        self._entry: Dict[int, PrefixKey] = {}   # page -> its chain key
+        self._children: Dict[Optional[tuple], List[int]] = {}
+        # counters (the bench's hit-rate / CoW metrics)
+        self.admit_tokens = 0                    # context tokens admitted
+        self.hit_tokens = 0                      # of which prefix-adopted
+        self.cow_copies = 0
+
+    # --- capacity ----------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def num_free(self) -> int:
+        """Allocatable pages: free list + evictable cached pages."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def num_live(self) -> int:
+        return len(self.ref)
+
+    # --- low-level page lifecycle ------------------------------------
+
+    def _evict(self, page: int) -> None:
+        """Drop a CACHED page's index entry so the page can be reused."""
+        del self._cached[page]
+        key = self._entry.pop(page)
+        if self._index.get(key) == page:
+            del self._index[key]
+        kids = self._children.get(key[0])
+        if kids is not None:
+            kids.remove(page)
+            if not kids:
+                del self._children[key[0]]
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` private pages (refcount 1), or None (and no change)
+        if not enough allocatable pages; cached pages evict LRU-first."""
+        if n > self.num_free:
+            return None
+        if n <= 0:
+            return []
+        out: List[int] = []
+        while len(out) < n and self._free:
+            out.append(self._free.pop())
+        while len(out) < n:
+            page = next(iter(self._cached))      # least recently used
+            self._evict(page)
+            out.append(page)
+        for p in out:
+            self.ref[p] = 1
+        return out
+
+    def acquire(self, page: int) -> None:
+        """Adopt a shared page: refcount++ (revives a CACHED page)."""
+        if page == SCRATCH_PAGE:
+            raise ValueError("cannot acquire the scratch page")
+        if page in self._cached:
+            del self._cached[page]
+        self.ref[page] = self.ref.get(page, 0) + 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; a page reaching refcount 0 goes
+        to the CACHED side if its content is indexed, else to the free
+        list. Never double-frees: releasing an unheld page raises."""
+        for p in pages:
+            if p == SCRATCH_PAGE:
+                raise ValueError("cannot release the scratch page")
+            n = self.ref.get(p, 0)
+            if n <= 0:
+                raise ValueError(f"release of unheld page {p}")
+            if n > 1:
+                self.ref[p] = n - 1
+                continue
+            del self.ref[p]
+            if p in self._entry:
+                self._cached[p] = None           # most-recently-used end
+            else:
+                self._free.append(p)
+
+    # --- the prefix index --------------------------------------------
+
+    def chain_key(self, parent: Optional[PrefixKey],
+                  tokens: Sequence[int]) -> PrefixKey:
+        return (parent, tuple(int(t) for t in tokens))
+
+    def register(self, page: int, key: PrefixKey) -> None:
+        """Index a FULL live page under its chain key. A duplicate key
+        keeps the existing mapping (the page stays private/unindexed)."""
+        if not self.prefix_cache or key in self._index:
+            return
+        if self.ref.get(page, 0) <= 0:
+            raise ValueError(f"cannot register non-live page {page}")
+        if page in self._entry:
+            raise ValueError(f"page {page} already registered")
+        self._index[key] = page
+        self._entry[page] = key
+        self._children.setdefault(key[0], []).append(page)
+
+    def indexed_blocks(self, keys: Sequence[PrefixKey]) -> int:
+        """How many of a sequence's chain keys still resolve — the
+        blocks a re-admission would adopt (recompute-cost credit)."""
+        return sum(1 for k in keys if k in self._index)
+
+    def _match(self, tokens: Sequence[int]
+               ) -> Tuple[List[int], List[PrefixKey],
+                          Optional[Tuple[int, int]]]:
+        """Walk the chain over full blocks; returns (pages, keys, tail)
+        where tail = (page, overlap) is the best partially-matching
+        child at the divergence point (overlap >= 1 tokens). Does NOT
+        take references."""
+        if not self.prefix_cache:
+            return [], [], None
+        ps = self.page_size
+        pages: List[int] = []
+        keys: List[PrefixKey] = []
+        key: Optional[PrefixKey] = None
+        b = 0
+        while (b + 1) * ps <= len(tokens):
+            k = self.chain_key(key, tokens[b * ps:(b + 1) * ps])
+            page = self._index.get(k)
+            if page is None:
+                break
+            pages.append(page)
+            keys.append(k)
+            key, b = k, b + 1
+        tail: Optional[Tuple[int, int]] = None
+        rem = tokens[b * ps:]
+        if rem:
+            parent = key
+            best = 0
+            for page in self._children.get(parent, ()):
+                blk = self._entry[page][1]
+                s = 0
+                while s < len(rem) and s < len(blk) \
+                        and blk[s] == int(rem[s]):
+                    s += 1
+                if s > best:
+                    best, tail = s, (page, s)
+        return pages, keys, tail
+
+    # --- sequence-level API ------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.page_size)
+
+    def admit(self, tokens: Sequence[int]) -> Optional[AdmitPlan]:
+        """Pages for a new sequence of ``tokens`` context: adopt every
+        fully-matching shared page (refcount++), plan a CoW copy for a
+        partially-matching tail, and allocate private pages for the
+        rest. Returns None (state unchanged) when the pool can't hold
+        the private remainder.
+
+        At least the LAST context token is always left to compute —
+        its logits seed generation — so ``committed < len(tokens)``.
+        """
+        L = len(tokens)
+        need = self.blocks_for(L)
+        # cap adoption at L-1 tokens: match on the prefix that excludes
+        # the final token (a full match would leave nothing to prefill)
+        pages, keys, tail = self._match(tokens[:L - 1])
+        for p in pages:
+            self.acquire(p)
+        committed = len(pages) * self.page_size
+        cow_src, cow_block, overlap = None, -1, 0
+        if tail is not None:
+            cow_src, overlap = tail
+            cow_block = len(pages)
+            self.acquire(cow_src)
+        priv = self.alloc(need - len(pages))
+        if priv is None:
+            if cow_src is not None:
+                self.release([cow_src])
+            self.release(pages)
+            return None
+        committed += overlap
+        self.admit_tokens += L
+        self.hit_tokens += committed
+        if cow_src is not None:
+            self.cow_copies += 1
+        return AdmitPlan(blocks=pages + priv, keys=keys,
+                         committed=committed, n_tokens=L,
+                         cow_src=cow_src, cow_block=cow_block)
+
+    def cancel_admit(self, plan: AdmitPlan) -> None:
+        """Roll an unadmitted plan back (budget refusal)."""
+        if plan.cow_src is not None:
+            self.release([plan.cow_src])
+            self.cow_copies -= 1
+        self.release(plan.blocks)
+        self.admit_tokens -= plan.n_tokens
+        self.hit_tokens -= plan.committed
+
+    def extend(self, blocks: List[int], n_tokens: int) -> bool:
+        """Grow ``blocks`` in place to cover ``n_tokens``; False on OOM."""
+        need = self.blocks_for(n_tokens)
+        if need <= len(blocks):
+            return True
+        got = self.alloc(need - len(blocks))
+        if got is None:
+            return False
+        blocks.extend(got)
+        return True
+
+    def register_progress(self, blocks: List[int], keys: List[PrefixKey],
+                          tokens: Sequence[int], kv_written: int) -> None:
+        """Index every block that ``kv_written`` token positions have
+        filled, extending the sequence's chain ``keys`` in place."""
+        ps = self.page_size
+        while (len(keys) + 1) * ps <= kv_written:
+            b = len(keys)
+            key = self.chain_key(keys[-1] if keys else None,
+                                 tokens[b * ps:(b + 1) * ps])
+            self.register(blocks[b], key)
+            keys.append(key)
+
+    # --- invariants ---------------------------------------------------
+
+    def check(self) -> None:
+        free, cached, live = set(self._free), set(self._cached), \
+            set(self.ref)
+        assert not (free & cached) and not (free & live) \
+            and not (cached & live), "page in two states"
+        assert len(free) + len(cached) + len(live) == self.capacity, \
+            "page leak"
+        assert all(n > 0 for n in self.ref.values()), "dead refcount kept"
+        assert set(self._entry) <= (cached | live), \
+            "indexed page neither cached nor live"
+        for key, page in self._index.items():
+            assert self._entry.get(page) == key, "index/entry mismatch"
+
+
 class PagedKVCache:
-    """Device page pools (a plain value tree) + the host allocator."""
+    """Device page pools (a plain value tree) + the host pool."""
 
     def __init__(self, cfg: ModelConfig, num_pages: int, page_size: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, prefix_cache: bool = True):
         self.cfg = cfg
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_blocks_per_seq = max_blocks_per_seq
-        self.allocator = BlockAllocator(num_pages)
+        self.allocator = PrefixPagePool(num_pages, page_size,
+                                        prefix_cache=prefix_cache)
         self.pages, self.axes = split_params(
             M.init_paged_cache(cfg, num_pages, page_size))
 
@@ -88,31 +388,31 @@ class PagedKVCache:
     def max_seq_tokens(self) -> int:
         return self.max_blocks_per_seq * self.page_size
 
-    def alloc_seq(self, n_tokens: int) -> Optional[List[int]]:
+    def _check_len(self, n_tokens: int) -> int:
         n = self.blocks_for(n_tokens)
         if n > self.max_blocks_per_seq:
             raise ValueError(
                 f"sequence of {n_tokens} tokens needs {n} pages > "
                 f"max_blocks_per_seq={self.max_blocks_per_seq}")
-        return self.allocator.alloc(n)
+        return n
+
+    def admit_seq(self, tokens: Sequence[int]) -> Optional[AdmitPlan]:
+        """Prefix-aware admission (see :meth:`PrefixPagePool.admit`)."""
+        self._check_len(len(tokens))
+        return self.allocator.admit(tokens)
+
+    def alloc_seq(self, n_tokens: int) -> Optional[List[int]]:
+        """Private pages for ``n_tokens`` (no prefix adoption)."""
+        return self.allocator.alloc(self._check_len(n_tokens))
 
     def extend_seq(self, blocks: List[int], n_tokens: int) -> bool:
         """Grow ``blocks`` in place to cover ``n_tokens``; False on OOM."""
-        need = self.blocks_for(n_tokens)
-        if need > self.max_blocks_per_seq:
-            raise ValueError(
-                f"sequence of {n_tokens} tokens exceeds max_blocks_per_seq="
-                f"{self.max_blocks_per_seq}")
-        if need <= len(blocks):
-            return True
-        got = self.allocator.alloc(need - len(blocks))
-        if got is None:
-            return False
-        blocks.extend(got)
-        return True
+        self._check_len(n_tokens)
+        return self.allocator.extend(blocks, n_tokens)
 
     def free_seq(self, blocks: List[int]) -> None:
-        self.allocator.free(blocks)
+        """Release one reference per block (frees only at refcount 0)."""
+        self.allocator.release(blocks)
         blocks.clear()
 
     def table_row(self, blocks: List[int]) -> np.ndarray:
@@ -120,6 +420,33 @@ class PagedKVCache:
         row = np.full((self.max_blocks_per_seq,), SCRATCH_PAGE, np.int32)
         row[:len(blocks)] = blocks
         return row
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        a = self.allocator
+        return a.hit_tokens / a.admit_tokens if a.admit_tokens else 0.0
+
+
+def copy_pages(pages: Dict[str, Any], src: jax.Array,
+               dst: jax.Array) -> Dict[str, Any]:
+    """Copy whole KV pages ``src[i] -> dst[i]`` in every layer — the
+    CoW device op. Padding entries point both indices at the scratch
+    page (an identity write), so one executable serves any copy count
+    up to the padded width."""
+    out: Dict[str, Any] = {}
+    if "layers" in pages:
+        stack = dict(pages["layers"])
+        stack["kp"] = stack["kp"].at[:, dst].set(stack["kp"][:, src])
+        stack["vp"] = stack["vp"].at[:, dst].set(stack["vp"][:, src])
+        out["layers"] = stack
+    out["head_layers"] = [
+        dict(hc, kp=hc["kp"].at[dst].set(hc["kp"][src]),
+             vp=hc["vp"].at[dst].set(hc["vp"][src]))
+        for hc in pages.get("head_layers", [])]
+    for k, v in pages.items():
+        if k not in out:
+            out[k] = v
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,30 +1,44 @@
-"""Continuous-batching scheduler (DESIGN.md §7).
+"""SLO-aware continuous-batching scheduler (DESIGN.md §11).
 
 Policy:
-  * **FCFS admission with token-budget packing** — waiting requests are
-    admitted in arrival order while a decode lane is free, the step's
-    prefill-token budget is not exceeded (the head request always fits,
-    so a long prompt can't deadlock), and the block pool can hold the
-    prompt.
-  * **Prefill/decode interleaving** — the engine runs one prefill step
-    whenever something was admitted, otherwise one decode step over every
-    running lane; waiting work therefore never starves behind a long
-    generation, and decode lanes refill as soon as a sequence finishes.
-  * **Preempt-longest on OOM** — when a decode step cannot allocate the
-    next page, the longest running sequence is evicted (its pages freed,
-    its progress kept) and re-queued at the head of the waiting line for
-    recompute-style re-admission; eviction repeats until the allocation
-    succeeds or the requester itself was evicted.
+  * **Class-ordered admission with token-budget packing.** The waiting
+    line is ordered by ``(priority, earliest deadline, tenant tokens
+    served, arrival)`` — lower priority number first, then EDF within a
+    class, then the tenant that has consumed the fewest tokens, then
+    arrival order. With the defaults (one class, no deadlines, one
+    tenant) every component is constant and the order IS arrival order:
+    the scheduler degenerates to the PR 3 FCFS baseline bit-for-bit
+    (pinned by ``tests/test_sched_slo.py``). Admission charges only the
+    prefill work actually left after prefix adoption (``ctx -
+    committed``) against the step budget; the head request always fits,
+    so a long prompt can't deadlock.
+  * **Prefix-aware admission.** Pages come from
+    ``PagedKVCache.admit_seq`` — fully-matching shared pages are
+    adopted by refcount, a partially-matching page becomes a pending
+    copy-on-write (``req.cow``), and only the divergent suffix costs
+    fresh pages + prefill compute.
+  * **Chunked prefill.** ``prefill_chunk > 0`` caps the tokens one lane
+    prefills per step; the engine interleaves prefill and decode steps
+    while any lane is mid-prompt, so a long prompt can no longer stall
+    every in-flight decode for its whole length. ``0`` = unchunked
+    (the baseline: whole prompt in one step).
+  * **Preemption by class, then recompute cost.** When a decode step
+    cannot allocate its next page, the victim is the worst class first
+    (highest priority number), then the cheapest to recompute —
+    context length minus the tokens its still-indexed prefix pages
+    would let a re-admission adopt for free — then the newest request.
+    Releasing decrements refcounts; a preempted request can never free
+    a page another sequence still maps.
 
 The scheduler owns no device state: it mutates :class:`RequestHandle`s
-and the :class:`PagedKVCache` allocator, and tells the engine what kind
-of step to run.
+and the :class:`PagedKVCache` pool, and tells the engine what kind of
+step to run.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+from collections import Counter
+from typing import Dict, List, Optional
 
 from .api import FINISHED, RUNNING, WAITING, RequestHandle
 from .kv_cache import PagedKVCache
@@ -34,17 +48,28 @@ from .kv_cache import PagedKVCache
 class SchedulerConfig:
     max_batch: int                 # decode lanes
     token_budget: int = 512        # prompt tokens admitted per prefill step
+    prefill_chunk: int = 0         # max prefill tokens per lane per step
+    #                                (0 = whole prompt in one step)
 
 
 class Scheduler:
     def __init__(self, kv: PagedKVCache, cfg: SchedulerConfig):
         self.kv = kv
         self.cfg = cfg
-        self.waiting: Deque[RequestHandle] = deque()
+        self.waiting: List[RequestHandle] = []
         self.running: Dict[int, RequestHandle] = {}   # slot -> request
         self._free_slots: List[int] = list(range(cfg.max_batch - 1, -1, -1))
+        self._arrivals = 0
+        self.tenant_served: Dict[str, int] = {}       # tokens per tenant
+        self.admit_order: List[int] = []              # rids, admission order
 
     # --- queue management -------------------------------------------
+
+    def _sort_key(self, r: RequestHandle):
+        deadline = r.t_submit + r.deadline_s \
+            if r.deadline_s is not None else float("inf")
+        return (r.priority, deadline,
+                self.tenant_served.get(r.tenant, 0), r.arrival)
 
     def submit(self, req: RequestHandle) -> None:
         need = self.kv.blocks_for(len(req.prompt) + req.max_new)
@@ -58,58 +83,89 @@ class Scheduler:
                 f"request {req.rid} can never fit: needs {need} pages, "
                 f"pool holds {self.kv.allocator.capacity}")
         req.status = WAITING
+        req.arrival = self._arrivals
+        self._arrivals += 1
         self.waiting.append(req)
 
     def admit(self) -> List[RequestHandle]:
-        """FCFS admission: pop waiting requests into free lanes while the
+        """Pop waiting requests (class order) into free lanes while the
         token budget and the block pool allow. Returns the newly admitted
         requests (their pages + lanes assigned, ready to prefill)."""
         admitted: List[RequestHandle] = []
         budget = self.cfg.token_budget
+        self.waiting.sort(key=self._sort_key)
         while self.waiting and self._free_slots:
             req = self.waiting[0]
-            n_tokens = req.ctx_len()
-            if admitted and n_tokens > budget:
-                break                         # packed enough for this step
-            blocks = self.kv.alloc_seq(n_tokens)
-            if blocks is None:
+            plan = self.kv.admit_seq(req.context())
+            if plan is None:
                 break                         # pool full — decode/finish first
-            self.waiting.popleft()
-            req.blocks = blocks
+            cost = req.ctx_len() - plan.committed   # prefill work left
+            if admitted and cost > budget:
+                self.kv.allocator.cancel_admit(plan)
+                break                         # packed enough for this step
+            self.waiting.pop(0)
+            req.blocks = plan.blocks
+            req.keys = list(plan.keys)
+            req.committed = plan.committed
+            req.cow = (plan.cow_src, plan.cow_block) \
+                if plan.cow_src is not None else None
             req.slot = self._free_slots.pop()
-            req.base_len = n_tokens
+            req.base_len = req.ctx_len()
             req.status = RUNNING
             self.running[req.slot] = req
-            budget -= n_tokens
+            self.admit_order.append(req.rid)
+            budget -= cost
             admitted.append(req)
         return admitted
 
+    def prefill_quota(self, req: RequestHandle, budget: int) -> int:
+        """Tokens this lane prefills in the coming step: the remaining
+        prompt, capped by the chunk size and the step budget."""
+        n = req.base_len - req.committed
+        if self.cfg.prefill_chunk > 0:
+            n = min(n, self.cfg.prefill_chunk)
+        return min(n, budget)
+
+    def charge(self, req: RequestHandle, n_tokens: int) -> None:
+        """Account ``n_tokens`` of service to the request's tenant (the
+        fairness component of the admission order)."""
+        if n_tokens > 0:
+            self.tenant_served[req.tenant] = \
+                self.tenant_served.get(req.tenant, 0) + n_tokens
+
     # --- decode capacity / preemption -------------------------------
 
-    def _evict_longest(self, exclude: Optional[RequestHandle] = None
-                       ) -> Optional[RequestHandle]:
-        cands = [r for r in self.running.values() if r is not exclude]
+    def _recompute_cost(self, r: RequestHandle) -> int:
+        """Prefill tokens a re-admission would pay: context minus what
+        the request's still-indexed prefix pages cover for free."""
+        hit = self.kv.allocator.indexed_blocks(r.keys) * self.kv.page_size
+        return r.ctx_len() - min(hit, r.ctx_len())
+
+    def _evict_victim(self) -> Optional[RequestHandle]:
+        cands = list(self.running.values())
         if not cands:
             return None
-        victim = max(cands, key=lambda r: (r.ctx_len(), r.rid))
+        victim = min(cands, key=lambda r: (-r.priority,
+                                           self._recompute_cost(r),
+                                           -r.arrival))
         self._release(victim)
         victim.status = WAITING
         victim.n_preempt += 1
-        self.waiting.appendleft(victim)       # keeps its FCFS priority
+        self.waiting.append(victim)    # arrival key restores its position
         return victim
 
     def ensure_decode_capacity(self, k: int = 1) -> List[RequestHandle]:
-        """Grow every running sequence's block run to cover its next ``k``
-        tokens, preempting the longest sequence on pool OOM. Returns the
-        preempted requests."""
+        """Grow every decode-phase sequence's block run to cover its next
+        ``k`` tokens, preempting by class / recompute cost on pool OOM.
+        Returns the preempted requests."""
         preempted: List[RequestHandle] = []
         for req in sorted(self.running.values(), key=lambda r: r.rid):
-            if req.slot not in self.running:   # evicted by an earlier loop
-                continue
+            if req.slot not in self.running or req.pending_prefill:
+                continue                       # evicted / still prefilling
             # writes land at positions ctx_len-1 .. ctx_len+k-2
             need = min(req.ctx_len() + k - 1, self.kv.max_seq_tokens())
             while not self.kv.extend_seq(req.blocks, need):
-                victim = self._evict_longest(exclude=None)
+                victim = self._evict_victim()
                 assert victim is not None, "no victim but allocation failed"
                 preempted.append(victim)
                 if victim is req:
@@ -119,7 +175,12 @@ class Scheduler:
     # --- completion --------------------------------------------------
 
     def _release(self, req: RequestHandle) -> None:
+        if req.cow is not None:                # un-executed CoW source
+            self.kv.allocator.release([req.cow[0]])
+            req.cow = None
         self.kv.free_seq(req.blocks)
+        req.keys = []
+        req.committed = 0
         self._free_slots.append(req.slot)
         del self.running[req.slot]
         req.slot = None
@@ -135,10 +196,16 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     def check_invariants(self) -> None:
-        """Block-accounting invariants (exercised by the tests)."""
-        held = [p for r in self.running.values() for p in r.blocks]
-        assert len(held) == len(set(held)), "page handed out twice"
-        assert self.kv.allocator.num_free + len(held) \
-            == self.kv.allocator.capacity, "block leak"
+        """Page-accounting invariants (exercised by the tests): every
+        live refcount equals the number of running sequences mapping the
+        page (pending CoW sources count), and free + cached + live pages
+        tile the pool exactly."""
+        pool = self.kv.allocator
+        held = Counter(p for r in self.running.values() for p in r.blocks)
+        held.update(r.cow[0] for r in self.running.values()
+                    if r.cow is not None)
+        assert dict(held) == dict(pool.ref), \
+            f"refcount mismatch: held={dict(held)} pool={dict(pool.ref)}"
+        pool.check()
         lanes = set(self.running) | set(self._free_slots)
         assert lanes == set(range(self.cfg.max_batch)), "lane leak"

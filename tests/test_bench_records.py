@@ -19,7 +19,8 @@ def test_append_and_load_records(tmp_path):
     assert bench_io.load_records(path) == []
     rec = bench_io.append_record(path, {"fused_speedup": 1.5}, sha="abc123")
     assert rec["git_sha"] == "abc123"
-    assert set(rec) == {"git_sha", "timestamp", "metrics"}
+    assert set(rec) == {"git_sha", "dirty", "timestamp", "metrics"}
+    assert rec["dirty"] is False            # explicit sha -> clean stamp
     bench_io.append_record(path, {"fused_speedup": 1.6}, sha="def456")
     records = bench_io.load_records(path)
     assert [r["git_sha"] for r in records] == ["abc123", "def456"]
@@ -34,6 +35,12 @@ def test_append_defaults_to_repo_sha(tmp_path):
                                  {"echo_rate": 0.8})
     assert isinstance(rec["git_sha"], str) and rec["git_sha"]
     assert "T" in rec["timestamp"]          # isoformat
+    # no sha override: dirty reflects the actual working tree
+    assert rec["dirty"] == bench_io.git_dirty()
+    # an explicit dirty flag wins over both defaults
+    rec = bench_io.append_record(str(tmp_path / "BENCH_train.json"),
+                                 {"echo_rate": 0.8}, sha="abc", dirty=True)
+    assert rec["dirty"] is True
 
 
 def test_bench_path_naming(tmp_path):

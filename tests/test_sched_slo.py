@@ -1,0 +1,201 @@
+"""SLO scheduling + prefix sharing, end to end (DESIGN.md §11).
+
+The anchor is the equivalence test: with the default knobs (one tenant,
+priority 0, no deadline, chunking off) the SLO scheduler admits in
+arrival order and the engine's greedy outputs are bitwise the per-request
+contiguous-cache oracle — the new policy machinery is provably inert
+until a knob moves. The policy tests then move one knob at a time
+(priority, deadline, tenant, pool pressure, chunk, sharing) and check
+the ordering or savings it buys, always re-asserting bitwise-equal
+outputs: scheduling and sharing decide WHEN tokens compute, never WHAT
+they compute.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+from repro.models.nn import split_params
+from repro.serve import ServeConfig, ServeEngine
+
+CFG = reduced(get_config("qwen3-0.6b"))
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, KEY)
+
+
+def _ref_greedy(params, prompt, gen):
+    """Per-request contiguous-cache greedy decode (the serving oracle)."""
+    values = split_params(params)[0]
+    cache, _ = split_params(M.init_cache(CFG, 1, len(prompt) + gen))
+    step = jax.jit(lambda v, c, t, p: M.decode_step(v, CFG, c, t, p))
+    for t, tok in enumerate(prompt):
+        logits, cache = step(values, cache,
+                             jnp.asarray([[tok]], jnp.int32),
+                             jnp.asarray([t], jnp.int32))
+    out = [int(jnp.argmax(logits[0]))]
+    for i in range(gen - 1):
+        logits, cache = step(values, cache,
+                             jnp.asarray([[out[-1]]], jnp.int32),
+                             jnp.asarray([len(prompt) + i], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _engine(params, **over):
+    kw = dict(max_batch=2, page_size=4, num_pages=64,
+              max_blocks_per_seq=8, decode_quantum=2, log_every=10 ** 9)
+    kw.update(over)
+    return ServeEngine(CFG, params, ServeConfig(**kw))
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, size=n).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: default knobs == FCFS, outputs == oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [0, 64])
+def test_default_knobs_are_fcfs_and_match_oracle(params, chunk):
+    """One tenant / one class / chunk off-or-huge: admission IS arrival
+    order and outputs ARE the per-request oracle, bitwise."""
+    prompts = [_prompt(s, n) for s, n in
+               zip(range(5), (9, 3, 14, 6, 11))]
+    eng = _engine(params, prefill_chunk=chunk)
+    reqs = [eng.submit(p, max_new=5) for p in prompts]
+    eng.drain(max_steps=300)
+    assert eng.sched.admit_order == [r.rid for r in reqs]
+    for r, p in zip(reqs, prompts):
+        assert r.tokens == _ref_greedy(params, p, 5)
+    eng.sched.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# SLO policy: priority classes, deadlines, tenant fairness
+# ---------------------------------------------------------------------------
+
+
+def test_priority_class_admits_before_arrival_order(params):
+    eng = _engine(params, max_batch=1)
+    lo = eng.submit(_prompt(0, 6), max_new=3, priority=5)
+    hi = eng.submit(_prompt(1, 6), max_new=3, priority=0)
+    eng.drain(max_steps=200)
+    assert eng.sched.admit_order == [hi.rid, lo.rid]
+    assert lo.tokens == _ref_greedy(params, _prompt(0, 6), 3)
+
+
+def test_earliest_deadline_first_within_class(params):
+    eng = _engine(params, max_batch=1)
+    lax = eng.submit(_prompt(2, 6), max_new=3, deadline_s=30.0)
+    tight = eng.submit(_prompt(3, 6), max_new=3, deadline_s=1e-3)
+    none = eng.submit(_prompt(4, 6), max_new=3)   # no deadline: last
+    eng.drain(max_steps=200)
+    assert eng.sched.admit_order == [tight.rid, lax.rid, none.rid]
+
+
+def test_tenant_fairness_interleaves_served_tokens(params):
+    eng = _engine(params, max_batch=1)
+    a0 = eng.submit(_prompt(5, 6), max_new=3, tenant="a")
+    a1 = eng.submit(_prompt(6, 6), max_new=3, tenant="a")
+    b0 = eng.submit(_prompt(7, 6), max_new=3, tenant="b")
+    eng.drain(max_steps=300)
+    # once a0's tokens are charged to tenant a, the unserved tenant b
+    # jumps the same-class queue ahead of a1
+    assert eng.sched.admit_order == [a0.rid, b0.rid, a1.rid]
+    assert eng.sched.tenant_served["a"] > 0
+    assert b0.tokens == _ref_greedy(params, _prompt(7, 6), 3)
+
+
+def test_preemption_evicts_lower_class_and_recovers(params):
+    """Under pool pressure the priority-5 lane is evicted, the
+    priority-0 lane never is, and both still finish with oracle-exact
+    outputs (recompute on re-admission)."""
+    eng = _engine(params, max_batch=2, page_size=4, num_pages=6,
+                  max_blocks_per_seq=4, decode_quantum=1,
+                  prefix_cache=False)
+    hi = eng.submit(_prompt(8, 8), max_new=8, priority=0)
+    lo = eng.submit(_prompt(9, 8), max_new=8, priority=5)
+    eng.drain(max_steps=400)
+    assert lo.n_preempt >= 1 and hi.n_preempt == 0
+    assert hi.tokens == _ref_greedy(params, _prompt(8, 8), 8)
+    assert lo.tokens == _ref_greedy(params, _prompt(9, 8), 8)
+    pool = eng.kv.allocator
+    assert pool.num_free == pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill + CoW prefix sharing, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_spreads_steps_and_matches_oracle(params):
+    long, short = _prompt(10, 26), _prompt(11, 5)
+    eng = _engine(params, prefill_chunk=5, token_budget=10)
+    r_long = eng.submit(long, max_new=4)
+    r_short = eng.submit(short, max_new=4)
+    eng.drain(max_steps=300)
+    assert eng.metrics.prefill_steps > 1        # the chunk actually split
+    assert r_long.tokens == _ref_greedy(params, long, 4)
+    assert r_short.tokens == _ref_greedy(params, short, 4)
+
+
+def test_shared_prefix_sharing_is_bitwise_and_saves_prefill(params):
+    """Six requests over a common 12-token system prompt, two lanes (so
+    later waves admit after earlier prefills registered pages): the
+    cache-on engine adopts pages (hit rate > 0), prefills strictly fewer
+    tokens, and every output equals the cache-off run AND the oracle."""
+    shared = _prompt(12, 12)
+    prompts = [shared + _prompt(20 + i, 3 + i) for i in range(6)]
+
+    def run(on):
+        eng = _engine(params, max_batch=2, prefix_cache=on)
+        reqs = [eng.submit(p, max_new=4) for p in prompts]
+        eng.drain(max_steps=500)
+        eng.sched.check_invariants()
+        return reqs, eng.summary()
+
+    on_reqs, on_sum = run(True)
+    off_reqs, off_sum = run(False)
+    assert on_sum["prefix_hit_rate"] > 0
+    assert on_sum["tokens_prefilled"] < off_sum["tokens_prefilled"]
+    assert on_sum["tokens_cached"] == on_sum["prefix_hit_tokens"] > 0
+    for on_r, off_r, p in zip(on_reqs, off_reqs, prompts):
+        assert on_r.tokens == off_r.tokens == _ref_greedy(params, p, 4)
+
+
+def test_cow_divergent_tail_copies_then_diverges(params):
+    """Prompts sharing a non-block-aligned prefix force the CoW path:
+    the divergent tail block is copied, not aliased, so both outputs
+    stay oracle-exact."""
+    base = _prompt(13, 11)                       # 2 full pages + tail
+    a, b = base + _prompt(14, 6), base[:10] + _prompt(15, 7)
+    eng = _engine(params, max_batch=1, page_size=4)
+    ra = eng.submit(a, max_new=4)
+    eng.drain(max_steps=200)                     # a registers its pages
+    rb = eng.submit(b, max_new=4)
+    eng.drain(max_steps=200)
+    assert eng.kv.allocator.cow_copies >= 1
+    assert ra.tokens == _ref_greedy(params, a, 4)
+    assert rb.tokens == _ref_greedy(params, b, 4)
+    eng.sched.check_invariants()
+
+
+def test_streaming_yields_tokens_incrementally(params):
+    prompt = _prompt(16, 7)
+    eng = _engine(params)
+    other = eng.submit(_prompt(17, 5), max_new=3)
+    h = eng.submit(prompt, max_new=5)
+    got = list(eng.stream(h, max_steps=200))
+    assert got == h.tokens == _ref_greedy(params, prompt, 5)
+    assert h.t_first_token is not None and h.ttft >= 0
+    eng.drain(max_steps=200)
+    assert other.done
