@@ -9,13 +9,19 @@ functions of the seeded run (decisions have wide margins), so they gate
 cleanly across machines; wall-clock per round rides along as
 information only.
 
-The remat sweep (DESIGN.md §12 HC2) runs the reduced LM through the
+The remat sweep (DESIGN.md §13 HC2) runs the reduced LM through the
 replicated strategy under both ``TrainSettings.remat`` policies —
 ``full`` (recompute everything in backward) and ``save_psum`` (keep
 cross-worker psum results) — in one process, and reports the loss-match
 flag (gated: the policy must stay numerically inert) and the speed
 ratio (informational: remat trades compute for memory, so the ratio is
 hardware-shaped).
+
+The obs leg (DESIGN.md §12) drives the same seeded echo-DP schedule
+twice in one subprocess — tracker disabled vs a jsonl tracker with the
+full ``TrackerHook`` — and reports ``obs_bitwise`` (gated: observing a
+run must never steer its trajectory) and ``obs_overhead``
+(informational: tracker wall-clock cost is machine-shaped).
 
 The drivers need multiple workers, so each run happens in a subprocess
 with 8 fake CPU devices (the calling process has already initialised
@@ -81,6 +87,67 @@ print(json.dumps({
 }))
 """
 
+_OBS_BODY = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, tempfile, time
+import jax, jax.numpy as jnp
+from repro import obs
+from repro.core import costfns
+from repro.launch.engine import (EchoDpStrategy, Trainer, TrainerConfig,
+                                 TrainSettings)
+from repro.optim import sgd
+
+n, d, K, rounds = 8, 256, 4, 12
+shocks = (4, 8)
+cost = costfns.quadratic(jax.random.PRNGKey(0), d=d, mu=0.5, L=1.0,
+                         sigma=0.0)
+
+def loss_fn(values, batch):
+    w = values["w"]
+    return cost.value(w) + w @ jnp.mean(batch["eps"], 0), {}
+
+def batch_for(step):
+    scale = 10.0 if step in shocks else 1e-4
+    key = jax.random.fold_in(jax.random.PRNGKey(7), step)
+    return {"eps": scale * jax.random.normal(key, (n, d))}
+
+mesh = jax.make_mesh((8,), ("data",))
+settings = TrainSettings(aggregator="cgc", f=1, echo_k=K, echo_r=0.9)
+
+def drive(hooks=None):
+    # fresh Trainer, same seeded schedule: the trajectory must not
+    # depend on whether anyone is watching
+    tr = Trainer(EchoDpStrategy(loss_fn=loss_fn), None, sgd(0.02),
+                 settings, mesh, n, TrainerConfig(log_every=10**9),
+                 printer=lambda s: None, hooks=hooks)
+    state = tr.init_state({"w": jnp.ones((d,)) * 2.0})
+    losses = []
+    with jax.set_mesh(mesh):
+        for s in range(rounds):              # warm the executables
+            state, rec = tr.run_round(state, batch_for(s))
+            losses.append(rec["loss"])
+        t0 = time.perf_counter()
+        for s in range(rounds, 2 * rounds):  # timed steady-state rounds
+            state, rec = tr.run_round(state, batch_for(s))
+            losses.append(rec["loss"])
+    return losses, time.perf_counter() - t0
+
+drive()                                     # compile warm-up run
+base_losses, base_wall = drive()            # tracker disabled (noop)
+path = os.path.join(tempfile.mkdtemp(), "events.jsonl")
+with obs.use_tracker(obs.JsonlTracker(path)):
+    obs_losses, obs_wall = drive(hooks=obs.TrackerHook())
+
+print(json.dumps({
+    # disabled-tracker runs must be bitwise identical to instrumented
+    # ones: the obs layer may observe the trajectory, never steer it
+    "obs_bitwise": float(base_losses == obs_losses),
+    "obs_overhead": obs_wall / base_wall - 1.0,
+}))
+"""
+
 _REMAT_BODY = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -132,13 +199,14 @@ print(json.dumps({
 """
 
 # gated keys: deterministic trajectory ratios/flags, machine-portable
-# (the remat speed ratio is informational — remat trades compute for
-# memory, so its sign is hardware-shaped)
+# (the remat speed ratio and obs_overhead are informational — remat
+# trades compute for memory, and tracker overhead is machine-shaped)
 GATE = {
     "echo_rate": "higher",
     "bits_saving": "higher",
     "loss_decreased": "higher",
     "remat_loss_match": "higher",
+    "obs_bitwise": "higher",
 }
 
 
@@ -158,6 +226,7 @@ def bench():
     """BENCH_train.json metrics for one run: the echo-DP driver plus the
     LM remat-policy sweep (subprocess drivers)."""
     metrics = _run_body(_BODY)
+    metrics.update(_run_body(_OBS_BODY))
     metrics.update(_run_body(_REMAT_BODY))
     return metrics
 

@@ -5,6 +5,7 @@
     python -m repro serve  --config experiments/jobs/serve_smoke.json
     python -m repro dryrun --config job.json --set dryrun.shape=train_4k
     python -m repro bench  --config job.json
+    python -m repro report experiments/runs/<run_dir>   # render a run
     python -m repro list                     # registered plugins
     python -m repro show   --config job.json [--set ...]   # resolved JSON
 
@@ -50,12 +51,26 @@ def main(argv=None) -> int:
                       ("show", "print the resolved job config JSON")):
         _add_job_args(sub.add_parser(name, help=doc))
     sub.add_parser("list", help="print every registered plugin per kind")
+    rep = sub.add_parser("report",
+                         help="render a finished run dir's summary "
+                              "(throughput, echo rate, bits, spans)")
+    rep.add_argument("run_dir", help="a run directory containing "
+                                     "summary.json")
     args = ap.parse_args(argv)
 
     if args.command == "list":
         from repro.run import available
         for kind, names in available().items():
             print(f"{kind}: {', '.join(names)}")
+        return 0
+
+    if args.command == "report":
+        # stdlib-only path: reporting never initialises jax
+        from repro.obs import report as render_report
+        try:
+            render_report(args.run_dir)
+        except (OSError, ValueError, KeyError) as e:
+            raise SystemExit(f"error: {e}") from None
         return 0
 
     if args.command == "dryrun":

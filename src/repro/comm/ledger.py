@@ -13,10 +13,17 @@ summary (``bits_sent`` / ``bits_baseline`` / ``bits_saving``).
 
 The baseline is the all-raw round *under the same codec* — apples to
 apples, and identical to the paper's ``n * 32 * d`` for fp32.
+
+The ledger is also an observability source: when a tracker is active
+(``repro.obs``), every ``record_round`` emits a ``comm.round`` event
+and bumps the ``comm.*`` counters, so the bit trajectory is visible in
+``events.jsonl`` without a second accounting path.
 """
 from __future__ import annotations
 
 from typing import Any, Dict
+
+from repro import obs
 
 from .wire import Codec
 
@@ -44,12 +51,31 @@ class CommLedger:
     def record_round(self, bits, baseline, echoed: bool = False
                      ) -> Dict[str, Any]:
         """Report one communication round; returns the metrics-record
-        fields for it (the names the Trainer sink always emitted)."""
+        fields for it (the names the Trainer sink always emitted).
+
+        Invariant: a round can never transmit (or be priced against) a
+        negative number of bits — a negative report means an accounting
+        bug upstream, so it raises instead of corrupting the ledger.
+        """
         bits = int(bits)
+        baseline = int(baseline)
+        if bits < 0 or baseline < 0:
+            raise ValueError(
+                f"negative round bits (bits={bits}, baseline={baseline})"
+                f" — communication accounting must be non-negative")
         self.rounds += 1
         self.echo_rounds += int(bool(echoed))
         self.bits_sent += bits
-        self.bits_baseline += int(baseline)
+        self.bits_baseline += baseline
+        if obs.tracing():
+            obs.counter("comm.rounds")
+            if echoed:
+                obs.counter("comm.echo_rounds")
+            obs.counter("comm.bits_sent", bits)
+            obs.counter("comm.bits_baseline", baseline)
+            obs.event("comm.round", round=self.rounds - 1, bits=bits,
+                      baseline=baseline, echoed=bool(echoed),
+                      bits_cumulative=self.bits_sent)
         return {"bits": bits,
                 "bits_cumulative": self.bits_sent,
                 "bits_baseline_cumulative": self.bits_baseline}

@@ -35,6 +35,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.comm import ChannelState, CommConfig, CommLedger, DEFAULT_COMM
 
 from . import aggregators as agg_lib
@@ -304,9 +305,16 @@ def run_training(
         return w_next, out
 
     keys = jax.random.split(key, rounds)
-    w_final, trace = jax.lax.scan(one_round, w0, keys)
+    # host-side spans only: the per-slot loop is jitted/scanned, so the
+    # observable unit is the whole simulated trajectory (trace + block)
+    # plus the ledger fold-in; per-round bit events come from the ledger.
+    with obs.span("protocol.rounds"):
+        w_final, trace = jax.lax.scan(one_round, w0, keys)
+        jax.block_until_ready(w_final)
+    obs.counter("protocol.rounds_simulated", rounds)
     trace["w_final"] = w_final
     if ledger is not None:
         d = w0.shape[-1]
-        ledger.record_protocol_trace(trace, n, d, comm.codec)
+        with obs.span("protocol.ledger"):
+            ledger.record_protocol_trace(trace, n, d, comm.codec)
     return trace

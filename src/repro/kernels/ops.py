@@ -16,6 +16,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import cgc_clip as _cgc
 from repro.kernels import codec_pack as _pack
 from repro.kernels import decode_attention as _dec
@@ -53,9 +54,16 @@ class _BackendSwitch:
     The choice is read at TRACE time: set it before the first jit compile
     of the consuming step — already-compiled executables keep the backend
     they were traced with until ``jax.clear_caches()``.
+
+    Each resolution bumps a ``kernels.<name>.<backend>`` counter on the
+    active tracker. Because dispatch happens at trace time, the counters
+    measure how often each backend is *traced into* a compilation, not
+    per-device-call frequency — exactly the question "which backend did
+    my run actually compile?" that the obs layer answers.
     """
 
-    def __init__(self, env: str, registry: Registry):
+    def __init__(self, name: str, env: str, registry: Registry):
+        self.name = name
         self.env = env
         self.registry = registry
         self.value = os.environ.get(env, "auto")
@@ -73,15 +81,20 @@ class _BackendSwitch:
         return self.value
 
     def impl(self):
-        return self.registry[self.resolve()]
+        resolved = self.resolve()
+        obs.counter(f"kernels.{self.name}.{resolved}")
+        return self.registry[resolved]
 
 
-_norm_switch = _BackendSwitch("REPRO_NORM_BACKEND", NORM_BACKENDS)
-_scale_switch = _BackendSwitch("REPRO_SCALE_BACKEND", SCALE_BACKENDS)
-_paged_attn_switch = _BackendSwitch("REPRO_PAGED_ATTN_BACKEND",
+_norm_switch = _BackendSwitch("norm", "REPRO_NORM_BACKEND", NORM_BACKENDS)
+_scale_switch = _BackendSwitch("scale", "REPRO_SCALE_BACKEND",
+                               SCALE_BACKENDS)
+_paged_attn_switch = _BackendSwitch("paged_attn",
+                                    "REPRO_PAGED_ATTN_BACKEND",
                                     PAGED_ATTN_BACKENDS)
-_cgc_switch = _BackendSwitch("REPRO_CGC_BACKEND", CGC_BACKENDS)
-_codec_switch = _BackendSwitch("REPRO_CODEC_BACKEND", CODEC_PACK_BACKENDS)
+_cgc_switch = _BackendSwitch("cgc", "REPRO_CGC_BACKEND", CGC_BACKENDS)
+_codec_switch = _BackendSwitch("codec_pack", "REPRO_CODEC_BACKEND",
+                               CODEC_PACK_BACKENDS)
 
 
 def set_norm_backend(name: str) -> None:

@@ -33,9 +33,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
-import queue
-import threading
 import time
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Protocol,
                     Sequence, Tuple)
@@ -46,7 +43,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_lib
+from repro import obs
 from repro.comm import CommConfig, CommLedger, DEFAULT_COMM, raw_round_bits
+from repro.obs.writer import AsyncLineWriter
 from repro.run.registry import TRAIN_STRATEGIES
 from repro.dist import (AGG_FNS, ShardCtx, inject_byzantine, make_shard_ctx,
                         tree_shardings)
@@ -535,46 +534,27 @@ class MetricsSink:
     step/loss/bits line — ``repro.serve`` passes its own).
 
     jsonl writes are non-blocking: ``emit`` enqueues the serialised
-    record and returns; a daemon writer thread drains the queue to the
-    file so metrics I/O stays off the driver hot loop. ``flush`` blocks
-    until everything enqueued so far is on disk; ``close`` flushes,
-    stops the thread and closes the file.
+    record and returns; the shared :class:`repro.obs.AsyncLineWriter`
+    drains the queue to the file so metrics I/O stays off the driver
+    hot loop. ``flush`` blocks until everything enqueued so far is on
+    disk; ``close`` flushes, stops the thread and closes the file. Both
+    re-raise the first background write error (the
+    ``AsyncCheckpointWriter`` contract), and the writer's atexit hook
+    lands the tail records even when a run crashes past ``close``.
     """
 
     def __init__(self, path: Optional[str] = None, log_every: int = 5,
                  printer: Optional[Callable[[str], None]] = None,
                  formatter: Optional[Callable[[Dict[str, Any]], str]] = None):
         self.log_every = max(int(log_every), 1)
-        if path and os.path.dirname(path):
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-        self._fh = open(path, "a") if path else None
+        self._writer = AsyncLineWriter(path) if path else None
         self._print = (lambda s: print(s, flush=True)) \
             if printer is None else printer
         self._format = formatter or _train_record_line
-        self._q: Optional[queue.SimpleQueue] = None
-        self._thread: Optional[threading.Thread] = None
-        if self._fh is not None:
-            self._q = queue.SimpleQueue()
-            self._thread = threading.Thread(
-                target=self._writer, name="metrics-sink", daemon=True)
-            self._thread.start()
-
-    def _writer(self) -> None:
-        while True:
-            item = self._q.get()
-            if item is None:                       # close sentinel
-                return
-            if isinstance(item, threading.Event):  # flush barrier
-                self._fh.flush()
-                item.set()
-                continue
-            self._fh.write(item)
-            if self._q.empty():
-                self._fh.flush()
 
     def emit(self, record: Dict[str, Any]) -> None:
-        if self._q is not None:
-            self._q.put(json.dumps(record) + "\n")
+        if self._writer is not None:
+            self._writer.write(json.dumps(record) + "\n")
         step = record.get("step", 0)
         if step % self.log_every == 0 or record.get("final"):
             self._print(self._format(record))
@@ -582,24 +562,16 @@ class MetricsSink:
     def flush(self, timeout: Optional[float] = None) -> bool:
         """Block until every record emitted so far is written to disk.
         Default blocks indefinitely (the durability the old synchronous
-        sink had); with a timeout, returns False if it expired."""
-        if self._q is None or self._thread is None \
-                or not self._thread.is_alive():
+        sink had); with a timeout, returns False if it expired. Raises
+        if the background writer hit an error."""
+        if self._writer is None:
             return True
-        barrier = threading.Event()
-        self._q.put(barrier)
-        return barrier.wait(timeout)
+        return self._writer.flush(timeout)
 
     def close(self) -> None:
-        if self._thread is not None:
-            self._q.put(None)
-            # the writer drains everything queued before the sentinel, so
-            # joining IS the flush; only then is the file safe to close.
-            self._thread.join()
-            self._thread = None
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        if self._writer is not None:
+            writer, self._writer = self._writer, None
+            writer.close()
 
 
 # ---------------------------------------------------------------------------
@@ -618,6 +590,11 @@ class TrainerConfig:
     # the paper's reference set R holds overheard RAW gradients; echo
     # aggregates lie in span(basis) and add no information) or "always".
     roll_policy: str = "raw"
+    # jax.profiler trace window over the first ``profile_steps`` rounds
+    # of fit() (0 = off), written to ``profile_dir``. Profiler failures
+    # become obs events, never run failures.
+    profile_steps: int = 0
+    profile_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -656,7 +633,8 @@ class Trainer:
                  settings: TrainSettings, mesh, global_batch: int,
                  config: TrainerConfig = TrainerConfig(),
                  loss_fn: Optional[Callable] = None,
-                 printer: Optional[Callable[[str], None]] = None):
+                 printer: Optional[Callable[[str], None]] = None,
+                 hooks: Optional[obs.Hooks] = None):
         if isinstance(strategy, str):
             strategy = STRATEGIES[strategy](loss_fn=loss_fn)
         self.strategy = strategy
@@ -690,6 +668,7 @@ class Trainer:
                                        donate_argnums=(0, 1))
         self.sink = MetricsSink(config.metrics_path, config.log_every,
                                 printer)
+        self.hooks = obs.as_hooks(hooks)
         self.n_workers = self.bundle.ctx.num_workers
         self._d: Optional[int] = None
         self.ledger = CommLedger()
@@ -802,7 +781,21 @@ class Trainer:
 
     def run_round(self, state: TrainState, batch
                   ) -> Tuple[TrainState, Dict[str, Any]]:
-        """One driver round; returns (new_state, metrics record)."""
+        """One driver round; returns (new_state, metrics record).
+
+        The round is a ``train.round`` span with the optimistic /
+        fallback / plain step as child spans, and fires
+        ``hooks.on_round_start/end`` around it — host-side only, so
+        the jitted computation (and the trajectory) is untouched.
+        """
+        self.hooks.on_round_start(state.step)
+        with obs.span("train.round"):
+            new_state, record = self._round_body(state, batch)
+        self.hooks.on_round_end(record["step"], record)
+        return new_state, record
+
+    def _round_body(self, state: TrainState, batch
+                    ) -> Tuple[TrainState, Dict[str, Any]]:
         step_arr = jnp.asarray(state.step)
         n = self.n_workers
         d = self._grad_dim(state.values)
@@ -829,9 +822,12 @@ class Trainer:
                 else 0
             all_echo = False
             if attempted and drops == 0:
-                v, o, m, agg = self.step_fn(state.values, state.opt_state,
-                                            batch, step_arr, state.basis)
-                all_echo = bool(m["all_echo"])
+                with obs.span("optimistic"):
+                    v, o, m, agg = self.step_fn(state.values,
+                                                state.opt_state,
+                                                batch, step_arr,
+                                                state.basis)
+                    all_echo = bool(m["all_echo"])
             echoed = attempted and all_echo and drops == 0
             if echoed:
                 rolled = self.config.roll_policy == "always"
@@ -841,9 +837,10 @@ class Trainer:
                 # optimistic round invalid (Eq. 7 failed, echo slots
                 # faded, or never attempted): fall back to the exact CGC
                 # step and roll the basis with the raw aggregate.
-                v, o, m, agg = self.fallback_fn(
-                    state.values, state.opt_state, batch, step_arr)
-                basis = roll_basis(state.basis, agg)
+                with obs.span("fallback"):
+                    v, o, m, agg = self.fallback_fn(
+                        state.values, state.opt_state, batch, step_arr)
+                    basis = roll_basis(state.basis, agg)
                 rolled = True
             bits = round_comm_bits(codec, n, d, K, all_echo and drops == 0,
                                    attempted)
@@ -854,9 +851,10 @@ class Trainer:
                 record["comm_refused"] = True
             new_state = TrainState(v, o, state.step + 1, basis)
         else:
-            out = self.step_fn(state.values, state.opt_state, batch,
-                               step_arr)
-            v, o, m = out[0], out[1], out[2]
+            with obs.span("step"):
+                out = self.step_fn(state.values, state.opt_state, batch,
+                                   step_arr)
+                v, o, m = out[0], out[1], out[2]
             bits = raw_round
             new_state = TrainState(v, o, state.step + 1, None)
 
@@ -873,23 +871,59 @@ class Trainer:
         self.sink.emit(record)
         return new_state, record
 
+    def _profiler_window(self, steps_done: int):
+        """Start/stop the jax.profiler trace around the first
+        ``profile_steps`` rounds of this fit(). Never fatal: profiler
+        problems (already tracing, missing backend support) become obs
+        events and the run continues unprofiled."""
+        cfg = self.config
+        if not cfg.profile_steps or not cfg.profile_dir:
+            return None, 0
+        try:
+            jax.profiler.start_trace(cfg.profile_dir)
+            obs.event("train.profile_start", dir=cfg.profile_dir,
+                      steps=cfg.profile_steps)
+            return True, steps_done + cfg.profile_steps
+        except Exception as e:
+            obs.event("train.profile_error", error=repr(e))
+            return None, 0
+
+    def _profiler_stop(self) -> None:
+        try:
+            jax.profiler.stop_trace()
+            obs.event("train.profile_stop", dir=self.config.profile_dir)
+        except Exception as e:
+            obs.event("train.profile_error", error=repr(e))
+
     def fit(self, state: TrainState, batches: Iterator, steps: int
             ) -> Tuple[TrainState, Dict[str, Any]]:
         """Run rounds until ``state.step`` reaches ``steps`` (absolute —
         a resumed state continues from its checkpointed step)."""
         cfg = self.config
         t0 = time.time()
-        while state.step < steps:
-            state, _ = self.run_round(state, next(batches))
-            if cfg.ckpt_dir and cfg.ckpt_every \
-                    and state.step % cfg.ckpt_every == 0 \
-                    and state.step < steps:
-                self.save(state, wait=False)   # off the driver thread
+        profiling, profile_until = self._profiler_window(state.step)
+        try:
+            while state.step < steps:
+                with obs.span("train.data"):
+                    batch = next(batches)
+                state, _ = self.run_round(state, batch)
+                if profiling and state.step >= profile_until:
+                    self._profiler_stop()
+                    profiling = None
+                if cfg.ckpt_dir and cfg.ckpt_every \
+                        and state.step % cfg.ckpt_every == 0 \
+                        and state.step < steps:
+                    with obs.span("train.checkpoint"):
+                        self.save(state, wait=False)  # off the driver
+        finally:
+            if profiling:        # steps < profile window (or a crash)
+                self._profiler_stop()
         if cfg.ckpt_dir:
             # the final snapshot is synchronous: fit() returning means it
             # is durable even if the caller never close()s (the periodic
             # saves above are the ones that must stay off the hot loop).
-            self.save(state)
+            with obs.span("train.checkpoint"):
+                self.save(state)
         summary = self.summary()
         summary["wall_s"] = round(time.time() - t0, 2)
         return state, summary

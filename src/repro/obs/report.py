@@ -1,0 +1,145 @@
+"""``python -m repro report <run_dir>`` — render a finished run.
+
+Reads the ``summary.json`` the facades drop at the end of every run
+(``{"kind", "summary", "obs": {counters, metrics, spans}}``) plus the
+run dir's ``config.json``, and prints a human-readable digest:
+throughput, echo rate, bits-vs-baseline, and the per-subsystem span
+breakdown. Stdlib-only so reporting never imports jax.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+
+def load_run(run_dir: str) -> Dict[str, Any]:
+    """Load ``summary.json`` (+ ``config.json`` if present); raises a
+    FileNotFoundError naming what a finished run should contain."""
+    path = os.path.join(run_dir, "summary.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"{path} not found — is {run_dir!r} a finished run dir? "
+            f"(runs write summary.json on completion)")
+    with open(path) as fh:
+        data = json.load(fh)
+    cfg_path = os.path.join(run_dir, "config.json")
+    if os.path.exists(cfg_path):
+        with open(cfg_path) as fh:
+            data.setdefault("config", json.load(fh))
+    return data
+
+
+def _fmt_s(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t * 1e3:.2f}ms"
+    return f"{t * 1e6:.0f}us"
+
+
+def _pct(x: float) -> str:
+    return f"{100.0 * x:.1f}%"
+
+
+def _span_lines(spans: Dict[str, Dict[str, Any]]) -> List[str]:
+    """The per-subsystem breakdown: every span path, indented by depth,
+    with share-of-root-time, total, count and mean."""
+    if not spans:
+        return ["  (no spans recorded)"]
+    root_total = sum(v["total_s"] for p, v in spans.items() if "/" not in p)
+    lines = []
+    width = max(len(p.rsplit("/", 1)[-1]) + 2 * p.count("/") for p in spans)
+    for path in sorted(spans):
+        v = spans[path]
+        depth = path.count("/")
+        name = "  " * depth + path.rsplit("/", 1)[-1]
+        share = v["total_s"] / root_total if root_total > 0 else 0.0
+        mean = v["total_s"] / v["count"] if v["count"] else 0.0
+        lines.append(f"  {name:<{width}}  {_pct(share):>6}  "
+                     f"total {_fmt_s(v['total_s']):>9}  "
+                     f"n={v['count']:<6} mean {_fmt_s(mean)}")
+    return lines
+
+
+def _train_lines(s: Dict[str, Any]) -> List[str]:
+    lines = []
+    if "rounds" in s:
+        lines.append(f"  rounds        {s['rounds']}"
+                     + (f"  (wall {s['wall_s']}s)" if "wall_s" in s else ""))
+    if s.get("rounds") and "wall_s" in s and s["wall_s"]:
+        lines.append(f"  rounds/s      "
+                     f"{s['rounds'] / s['wall_s']:.2f}")
+    if "first_loss" in s and "final_loss" in s:
+        lines.append(f"  loss          {s['first_loss']:.6g} -> "
+                     f"{s['final_loss']:.6g}")
+    if "echo_rate" in s:
+        lines.append(f"  echo rounds   {s['echo_rounds']}/{s['rounds']} "
+                     f"({_pct(s['echo_rate'])})")
+    if "bits_sent" in s:
+        lines.append(f"  bits sent     {s['bits_sent']:.4g} vs baseline "
+                     f"{s['bits_baseline']:.4g} "
+                     f"({_pct(s.get('bits_saving', 0.0))} saved)")
+    return lines
+
+
+def _serve_lines(s: Dict[str, Any]) -> List[str]:
+    lines = []
+    if "tokens_generated" in s:
+        lines.append(f"  tokens        {s['tokens_generated']} in "
+                     f"{s.get('wall_s', 0.0)}s "
+                     f"({s.get('tokens_per_s', 0.0)} tok/s)")
+    if "latency_p50_s" in s:
+        lines.append(f"  latency       p50={s['latency_p50_s']}s "
+                     f"p99={s['latency_p99_s']}s")
+    if "ttft_p50_s" in s:
+        lines.append(f"  ttft          p50={s['ttft_p50_s']}s "
+                     f"p99={s['ttft_p99_s']}s "
+                     f"itl p50={s.get('itl_p50_s', 0.0)}s")
+    if "preemptions" in s:
+        lines.append(f"  preemptions   {s['preemptions']}")
+    if s.get("prefix_hit_tokens"):
+        lines.append(f"  prefix cache  {_pct(s['prefix_hit_rate'])} hit "
+                     f"({s['prefix_hit_tokens']} tokens adopted, "
+                     f"{s.get('cow_copies', 0)} CoW copies)")
+    return lines
+
+
+def render(data: Dict[str, Any], run_dir: str = "") -> str:
+    """Render a loaded run (see :func:`load_run`) to the report text."""
+    kind = data.get("kind", "run")
+    name = (data.get("config") or {}).get("name", "")
+    obs = data.get("obs") or {}
+    summary = data.get("summary") or {}
+
+    lines = [f"== repro report: {kind}"
+             + (f" '{name}'" if name else "")
+             + (f" ({run_dir})" if run_dir else "") + " =="]
+    body = _train_lines(summary) if kind == "train" \
+        else _serve_lines(summary) if kind == "serve" else []
+    if not body:   # unknown kind, or a summary with none of the keys
+        body = [f"  {k:<13} {v}" for k, v in sorted(summary.items())]
+    lines += body
+
+    lines.append("-- span breakdown (share of root spans) --")
+    lines += _span_lines(obs.get("spans") or {})
+
+    counters = obs.get("counters") or {}
+    if counters:
+        lines.append("-- counters --")
+        cw = max(len(k) for k in counters)
+        lines += [f"  {k:<{cw}}  {counters[k]}" for k in sorted(counters)]
+    metrics = obs.get("metrics") or {}
+    if metrics:
+        lines.append("-- metrics --")
+        mw = max(len(k) for k in metrics)
+        lines += [f"  {k:<{mw}}  {metrics[k]:.6g}" for k in sorted(metrics)]
+    return "\n".join(lines)
+
+
+def report(run_dir: str,
+           printer: Optional[Callable[[str], None]] = None) -> str:
+    """Load + render + print one run dir; returns the rendered text."""
+    text = render(load_run(run_dir), run_dir=run_dir)
+    (printer or print)(text)
+    return text

@@ -1,0 +1,131 @@
+"""Background line writer shared by every jsonl-emitting sink.
+
+``MetricsSink`` (launch/engine.py) and :class:`~repro.obs.tracker.
+JsonlTracker` both stream newline-terminated records to disk off the
+driver hot loop. This module owns that machinery ONCE, with the same
+error contract as ``checkpoint.AsyncCheckpointWriter``:
+
+* ``write`` enqueues and returns immediately; one daemon thread drains
+  the queue to the file (flushing whenever it catches up).
+* writer-thread exceptions are never swallowed: the first one is stored
+  and re-raised (wrapped) by the next ``flush()`` or ``close()`` call —
+  the contract the checkpoint writer already had, now shared.
+* an atexit hook closes every live writer, so a run that crashes out of
+  its driver loop (an exception propagating past the Trainer) still
+  lands its tail records before the interpreter kills daemon threads.
+
+Import-light on purpose: stdlib only.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import queue
+import threading
+import weakref
+from typing import Optional
+
+# Every open writer, weakly held: the atexit sweep flushes what is still
+# alive at interpreter shutdown without keeping closed writers pinned.
+_LIVE: "weakref.WeakSet" = weakref.WeakSet()
+_ATEXIT_REGISTERED = False
+
+
+def _close_live_writers() -> None:
+    """atexit: drain every still-open writer, never raising (the run is
+    already going down; the tail records matter more than the error)."""
+    for w in list(_LIVE):
+        try:
+            w.close(reraise=False)
+        except Exception:
+            pass
+
+
+class AsyncLineWriter:
+    """Non-blocking append of text lines to one file.
+
+    ``write(line)`` enqueues (the line must already end in a newline);
+    ``flush()`` blocks until everything enqueued so far is on disk and
+    re-raises the first background write error; ``close()`` drains,
+    joins the thread, closes the file and re-raises likewise. ``close``
+    is idempotent.
+    """
+
+    def __init__(self, path: str, append: bool = True):
+        global _ATEXIT_REGISTERED
+        self.path = path
+        if os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._fh = open(path, "a" if append else "w")
+        self._q: queue.SimpleQueue = queue.SimpleQueue()
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = threading.Thread(
+            target=self._loop, name="line-writer", daemon=True)
+        self._thread.start()
+        if not _ATEXIT_REGISTERED:
+            atexit.register(_close_live_writers)
+            _ATEXIT_REGISTERED = True
+        _LIVE.add(self)
+
+    def _note(self, e: BaseException) -> None:
+        if self._error is None:
+            self._error = e
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:                       # close sentinel
+                return
+            if isinstance(item, threading.Event):  # flush barrier
+                try:
+                    self._fh.flush()
+                except BaseException as e:
+                    self._note(e)
+                item.set()
+                continue
+            try:
+                self._fh.write(item)
+                if self._q.empty():
+                    self._fh.flush()
+            except BaseException as e:             # surfaced on flush/close
+                self._note(e)
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"background write to {self.path} failed") from err
+
+    def write(self, line: str) -> None:
+        if self._thread is None:
+            raise RuntimeError(f"writer for {self.path} is closed")
+        self._q.put(line)
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Barrier: block until every line written so far is on disk.
+        Re-raises the first background error; with a ``timeout``,
+        returns False on expiry (without consuming a pending error)."""
+        if self._thread is not None and self._thread.is_alive():
+            barrier = threading.Event()
+            self._q.put(barrier)
+            if not barrier.wait(timeout):
+                return False
+        self._raise_pending()
+        return True
+
+    def close(self, reraise: bool = True) -> None:
+        if self._thread is not None:
+            self._q.put(None)
+            # the thread drains everything queued before the sentinel,
+            # so joining IS the flush; only then is the file closeable.
+            self._thread.join()
+            self._thread = None
+        if self._fh is not None:
+            try:
+                self._fh.close()
+            except BaseException as e:
+                self._note(e)
+            self._fh = None
+        _LIVE.discard(self)
+        if reraise:
+            self._raise_pending()

@@ -13,14 +13,14 @@ facades; the legacy per-entrypoint CLIs adapt their flags into a
 RunConfig and call the same functions.
 """
 from .config import (SCHEMA_VERSION, BenchSpec, CommSpec, DataSpec,
-                     DryrunSpec, MeshSpec, ModelSpec, RunConfig,
+                     DryrunSpec, MeshSpec, ModelSpec, ObsSpec, RunConfig,
                      SamplingSpec, ScenarioSpec, ServeSpec, TrainSpec,
                      apply_overrides, config_hash)
 from .facade import (BenchResult, DryrunResult, RunResult, ServeResult,
                      TrainResult, bench, dryrun, serve, train)
 from .registry import (AGGREGATORS, ATTACKS, CHANNELS, CODECS,
                        COLLECTIVE_AGGREGATORS, NORM_BACKENDS,
-                       PAGED_ATTN_BACKENDS, SCALE_BACKENDS,
+                       PAGED_ATTN_BACKENDS, SCALE_BACKENDS, TRACKERS,
                        TRAIN_STRATEGIES, DuplicateRegistrationError,
                        Registry, available)
 from .rundir import make_run_dir, run_dir_tag
@@ -28,13 +28,15 @@ from .sweep import sweep
 
 __all__ = [
     "SCHEMA_VERSION", "BenchSpec", "CommSpec", "DataSpec", "DryrunSpec",
-    "MeshSpec", "ModelSpec", "RunConfig", "SamplingSpec", "ScenarioSpec",
+    "MeshSpec", "ModelSpec", "ObsSpec", "RunConfig", "SamplingSpec",
+    "ScenarioSpec",
     "ServeSpec", "TrainSpec", "apply_overrides", "config_hash",
     "BenchResult", "DryrunResult", "RunResult", "ServeResult",
     "TrainResult", "bench", "dryrun", "serve", "train",
     "AGGREGATORS", "ATTACKS", "CHANNELS", "CODECS",
     "COLLECTIVE_AGGREGATORS", "NORM_BACKENDS",
-    "PAGED_ATTN_BACKENDS", "SCALE_BACKENDS", "TRAIN_STRATEGIES",
+    "PAGED_ATTN_BACKENDS", "SCALE_BACKENDS", "TRACKERS",
+    "TRAIN_STRATEGIES",
     "DuplicateRegistrationError", "Registry", "available",
     "make_run_dir", "run_dir_tag", "sweep",
 ]

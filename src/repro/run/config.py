@@ -14,6 +14,7 @@ metrics:
       serve     ServeSpec | None   serving workload (incl. sampling)
       dryrun    DryrunSpec | None  lower+compile workload
       bench     BenchSpec | None   serve benchmark workload
+      obs       ObsSpec            tracker sink + events path
 
 ``to_json``/``from_json`` carry a ``schema_version`` field; unknown keys
 are rejected with the known alternatives listed. ``apply_overrides``
@@ -141,6 +142,10 @@ class TrainSpec:
     ckpt_every: int = 0
     resume: bool = False
     metrics_path: Optional[str] = None   # None: <run_dir>/metrics.jsonl
+    # jax.profiler trace window: profile the first N fit rounds into
+    # <run_dir>/profile (0 = off). Failures to start the profiler are
+    # recorded as obs events, never fatal.
+    profile_steps: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +209,17 @@ class BenchSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Observability: which tracker sink the run installs (DESIGN.md
+    §12). ``jsonl`` (default) streams events/spans to ``events_path``
+    (None: ``<run_dir>/events.jsonl``); ``noop`` disables tracking
+    entirely; ``memory``/``stdout`` are for tests and debugging."""
+
+    tracker: str = "jsonl"           # registry: trackers
+    events_path: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class RunConfig:
     """The root of the job tree — one serializable experiment."""
 
@@ -215,6 +231,7 @@ class RunConfig:
     serve: Optional[ServeSpec] = None
     dryrun: Optional[DryrunSpec] = None
     bench: Optional[BenchSpec] = None
+    obs: ObsSpec = ObsSpec()
     runs_root: str = "experiments/runs"
 
     # --- serialization ----------------------------------------------

@@ -28,6 +28,30 @@ from .rundir import make_run_dir
 _DEPRECATION_WARNED: set = set()
 
 
+def _make_run_tracker(cfg: RunConfig, run_dir: str):
+    """The run's tracker per ``cfg.obs``: the jsonl default streams
+    events/spans to ``<run_dir>/events.jsonl``."""
+    from repro import obs as obs_lib
+
+    path = cfg.obs.events_path or os.path.join(run_dir, "events.jsonl")
+    return obs_lib.make_tracker(cfg.obs.tracker, path=path)
+
+
+def _write_summary(run_dir: str, kind: str, summary: Dict[str, Any],
+                   tracker) -> str:
+    """Drop ``summary.json`` — the run's machine-readable digest
+    (workload summary + the tracker's counter/span snapshot) that
+    ``python -m repro report`` renders."""
+    import json
+
+    path = os.path.join(run_dir, "summary.json")
+    data = {"kind": kind, "summary": summary, "obs": tracker.snapshot()}
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=2, default=str)
+        fh.write("\n")
+    return path
+
+
 def warn_legacy(entrypoint: str, replacement: str) -> None:
     """One DeprecationWarning per legacy entry point per process."""
     if entrypoint in _DEPRECATION_WARNED:
@@ -238,40 +262,52 @@ def train(cfg: RunConfig) -> TrainResult:
     run_dir = make_run_dir(cfg, "train")
     metrics_path = tspec.metrics_path or os.path.join(run_dir,
                                                       "metrics.jsonl")
-    trainer = Trainer(tspec.strategy, model_cfg, opt, settings, mesh,
-                      tspec.batch,
-                      TrainerConfig(log_every=tspec.log_every,
-                                    ckpt_dir=tspec.ckpt_dir,
-                                    ckpt_every=tspec.ckpt_every,
-                                    resume=tspec.resume,
-                                    metrics_path=metrics_path),
-                      loss_fn=loss_fn)
-    comm_tag = (f" comm={scen.comm.channel}/{scen.comm.codec}"
-                if (scen.comm.channel, scen.comm.codec) != ("ideal", "fp32")
-                else "")
-    print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
-          f"aggregator={scen.aggregator} f={scen.f}{comm_tag} "
-          f"run_dir={run_dir}")
 
-    if quadratic:
-        state = trainer.init_state(values)
-        it = quad_batches(start=state.step)
-    else:
-        params = M.init_params(model_cfg, jax.random.PRNGKey(0))
-        values, _ = split_params(params)
-        state = trainer.init_state(values)
-        # start=state.step: a resumed run continues the data stream
-        # instead of re-consuming batches the checkpointed run saw.
-        it = make_batch_iterator(model_cfg, tspec.batch, tspec.seq,
-                                 seed=scen.data.seed, start=state.step)
-    if state.step:
-        print(f"resumed from step {state.step}")
+    from repro import obs as obs_lib
 
-    mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
-        else contextlib.nullcontext()
-    with mesh_ctx:
-        state, summary = trainer.fit(state, it, tspec.steps)
-    trainer.close()
+    tracker = _make_run_tracker(cfg, run_dir)
+    with obs_lib.use_tracker(tracker):
+        trainer = Trainer(tspec.strategy, model_cfg, opt, settings, mesh,
+                          tspec.batch,
+                          TrainerConfig(log_every=tspec.log_every,
+                                        ckpt_dir=tspec.ckpt_dir,
+                                        ckpt_every=tspec.ckpt_every,
+                                        resume=tspec.resume,
+                                        metrics_path=metrics_path,
+                                        profile_steps=tspec.profile_steps,
+                                        profile_dir=os.path.join(
+                                            run_dir, "profile")),
+                          loss_fn=loss_fn,
+                          hooks=obs_lib.TrackerHook())
+        comm_tag = (f" comm={scen.comm.channel}/{scen.comm.codec}"
+                    if (scen.comm.channel,
+                        scen.comm.codec) != ("ideal", "fp32")
+                    else "")
+        print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
+              f"aggregator={scen.aggregator} f={scen.f}{comm_tag} "
+              f"run_dir={run_dir}")
+
+        if quadratic:
+            state = trainer.init_state(values)
+            it = quad_batches(start=state.step)
+        else:
+            params = M.init_params(model_cfg, jax.random.PRNGKey(0))
+            values, _ = split_params(params)
+            state = trainer.init_state(values)
+            # start=state.step: a resumed run continues the data stream
+            # instead of re-consuming batches the checkpointed run saw.
+            it = make_batch_iterator(model_cfg, tspec.batch, tspec.seq,
+                                     seed=scen.data.seed, start=state.step)
+        if state.step:
+            print(f"resumed from step {state.step}")
+
+        mesh_ctx = jax.set_mesh(mesh) if mesh is not None \
+            else contextlib.nullcontext()
+        with mesh_ctx:
+            state, summary = trainer.fit(state, it, tspec.steps)
+        trainer.close()
+        _write_summary(run_dir, "train", summary, tracker)
+    tracker.close()
     return TrainResult(config=cfg, run_dir=run_dir, summary=summary,
                        metrics_path=metrics_path, state=state)
 
@@ -335,39 +371,48 @@ def serve(cfg: RunConfig) -> ServeResult:
     run_dir = make_run_dir(cfg, "serve")
     metrics_path = spec.metrics_path or os.path.join(run_dir,
                                                      "metrics.jsonl")
-    params = M.init_params(model_cfg, jax.random.PRNGKey(spec.seed))
-    engine = ServeEngine(model_cfg, params, ServeConfig(
-        max_batch=spec.max_batch, page_size=spec.page_size,
-        num_pages=spec.num_pages,
-        max_blocks_per_seq=spec.max_blocks_per_seq,
-        token_budget=spec.token_budget,
-        decode_quantum=spec.decode_quantum,
-        prefill_chunk=spec.prefill_chunk,
-        prefix_cache=spec.prefix_cache, metrics_path=metrics_path,
-        log_every=spec.log_every, sampling=spec.sampling),
-        mesh=mesh, moe_impl=cfg.mesh.moe_impl)
 
-    rng = np.random.default_rng(spec.seed)
-    # a shared "system prompt" every request starts with — the prefix
-    # cache turns its prefill into page adoptions after the first request
-    shared = rng.integers(0, model_cfg.vocab_size,
-                          size=spec.shared_prefix_len).tolist() \
-        if spec.shared_prefix_len else []
-    handles = []
-    for i in range(spec.requests):
-        plen = int(rng.integers(2, max(spec.prompt_len, 2) + 1))
-        gen = int(rng.integers(1, max(spec.gen, 1) + 1))
-        prompt = shared + rng.integers(0, model_cfg.vocab_size,
-                                       size=plen).tolist()
-        handles.append(engine.submit(
-            prompt, max_new=gen, priority=spec.priority,
-            deadline_s=spec.deadline_s or None,
-            tenant=f"t{i % max(spec.tenants, 1)}"))
+    from repro import obs as obs_lib
 
-    engine.drain(max_steps=100 * spec.requests * (spec.gen + 2))
-    engine.sched.check_invariants()
-    summary = engine.summary()
-    engine.close()
+    tracker = _make_run_tracker(cfg, run_dir)
+    with obs_lib.use_tracker(tracker):
+        params = M.init_params(model_cfg, jax.random.PRNGKey(spec.seed))
+        engine = ServeEngine(model_cfg, params, ServeConfig(
+            max_batch=spec.max_batch, page_size=spec.page_size,
+            num_pages=spec.num_pages,
+            max_blocks_per_seq=spec.max_blocks_per_seq,
+            token_budget=spec.token_budget,
+            decode_quantum=spec.decode_quantum,
+            prefill_chunk=spec.prefill_chunk,
+            prefix_cache=spec.prefix_cache, metrics_path=metrics_path,
+            log_every=spec.log_every, sampling=spec.sampling),
+            mesh=mesh, moe_impl=cfg.mesh.moe_impl,
+            hooks=obs_lib.TrackerHook())
+
+        rng = np.random.default_rng(spec.seed)
+        # a shared "system prompt" every request starts with — the prefix
+        # cache turns its prefill into page adoptions after the first
+        # request
+        shared = rng.integers(0, model_cfg.vocab_size,
+                              size=spec.shared_prefix_len).tolist() \
+            if spec.shared_prefix_len else []
+        handles = []
+        for i in range(spec.requests):
+            plen = int(rng.integers(2, max(spec.prompt_len, 2) + 1))
+            gen = int(rng.integers(1, max(spec.gen, 1) + 1))
+            prompt = shared + rng.integers(0, model_cfg.vocab_size,
+                                           size=plen).tolist()
+            handles.append(engine.submit(
+                prompt, max_new=gen, priority=spec.priority,
+                deadline_s=spec.deadline_s or None,
+                tenant=f"t{i % max(spec.tenants, 1)}"))
+
+        engine.drain(max_steps=100 * spec.requests * (spec.gen + 2))
+        engine.sched.check_invariants()
+        summary = engine.summary()
+        engine.close()
+        _write_summary(run_dir, "serve", summary, tracker)
+    tracker.close()
     if not all(h.done for h in handles):
         raise RuntimeError("drain left unfinished requests")
     return ServeResult(config=cfg, run_dir=run_dir, summary=summary,

@@ -96,6 +96,7 @@ class Registry(Mapping):
 #   CODEC_PACK_BACKENDS    kernels/ops.py           codec pack/unpack kernels
 #   CODECS                 comm/wire.py             wire-format builders
 #   CHANNELS               comm/channel.py          broadcast channel builders
+#   TRACKERS               obs/tracker.py           observability sinks
 # ---------------------------------------------------------------------------
 
 AGGREGATORS = Registry("aggregator")
@@ -109,6 +110,7 @@ CGC_BACKENDS = Registry("fused-CGC kernel backend")
 CODEC_PACK_BACKENDS = Registry("codec pack/unpack kernel backend")
 CODECS = Registry("wire codec")
 CHANNELS = Registry("broadcast channel")
+TRACKERS = Registry("tracker")
 
 _REGISTRIES: Dict[str, Registry] = {
     "aggregators": AGGREGATORS,
@@ -122,12 +124,14 @@ _REGISTRIES: Dict[str, Registry] = {
     "codec_pack_backends": CODEC_PACK_BACKENDS,
     "codecs": CODECS,
     "channels": CHANNELS,
+    "trackers": TRACKERS,
 }
 
 # modules whose import populates the registries above
 _HOSTS = ("repro.core.aggregators", "repro.core.byzantine",
           "repro.dist.collectives", "repro.launch.engine",
-          "repro.kernels.ops", "repro.comm.wire", "repro.comm.channel")
+          "repro.kernels.ops", "repro.comm.wire", "repro.comm.channel",
+          "repro.obs.tracker")
 
 
 def load_plugins() -> None:

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.launch.engine import MetricsSink
 
 WAITING = "waiting"
@@ -166,6 +167,14 @@ class ServeMetrics:
         self.tokens_prefilled += prefilled
         self.tokens_cached += cached
         self.preemptions += preempted
+        if obs.tracing():
+            obs.counter(f"serve.steps.{kind}")
+            if generated:
+                obs.counter("serve.tokens_generated", generated)
+            if prefilled:
+                obs.counter("serve.tokens_prefilled", prefilled)
+            if cached:
+                obs.counter("serve.tokens_cached", cached)
         record = {
             "step": self.steps, "kind": kind, "generated": generated,
             "prefilled": prefilled, "cached": cached, "running": running,

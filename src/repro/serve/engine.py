@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.dist import make_shard_ctx, tree_shardings
 from repro.models import model as M
@@ -82,7 +83,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, serve: ServeConfig,
                  mesh=None, moe_impl: str = "tp",
-                 printer: Optional[Callable[[str], None]] = None):
+                 printer: Optional[Callable[[str], None]] = None,
+                 hooks: Optional[obs.Hooks] = None):
         if cfg.family not in ("dense", "vlm", "audio", "moe"):
             raise ValueError(f"paged serving supports transformer families "
                              f"only, got {cfg.family!r}")
@@ -101,7 +103,7 @@ class ServeEngine:
                                prefix_cache=serve.prefix_cache)
         self.sched = Scheduler(self.kv, SchedulerConfig(
             max_batch=serve.max_batch, token_budget=serve.token_budget,
-            prefill_chunk=serve.prefill_chunk))
+            prefill_chunk=serve.prefill_chunk), hooks=hooks)
         self.metrics = ServeMetrics(serve.metrics_path, serve.log_every,
                                     printer)
         self.values, _ = split_params(params)
@@ -272,24 +274,29 @@ class ServeEngine:
         this reduces to the baseline prefill-whole-prompt-on-admission
         policy. Returns the step's metrics record."""
         t0 = time.time()
-        admitted = self.sched.admit()
-        cached = sum(r.committed for r in admitted)   # adopted, not computed
-        prefillable = any(r.pending_prefill
-                          for r in self.sched.running.values())
-        decodable = any(not r.pending_prefill
-                        for r in self.sched.running.values())
-        if prefillable and (admitted or not decodable
-                            or self._last_kind != "prefill"):
-            record = self._prefill_step(t0, cached)
-        elif decodable:
-            record = self._decode_step(t0)
-        else:
-            self._last_kind = "idle"
-            record = self.metrics.record_step(
-                "idle", generated=0, prefilled=0, running=0,
-                waiting=len(self.sched.waiting),
-                free_pages=self.kv.allocator.num_free, preempted=0,
-                dt=time.time() - t0)
+        with obs.span("serve.step"):
+            with obs.span("scheduler"):
+                admitted = self.sched.admit()
+                cached = sum(r.committed for r in admitted)  # adopted,
+                #                                              not computed
+                prefillable = any(r.pending_prefill
+                                  for r in self.sched.running.values())
+                decodable = any(not r.pending_prefill
+                                for r in self.sched.running.values())
+            if prefillable and (admitted or not decodable
+                                or self._last_kind != "prefill"):
+                with obs.span("prefill"):
+                    record = self._prefill_step(t0, cached)
+            elif decodable:
+                with obs.span("decode"):
+                    record = self._decode_step(t0)
+            else:
+                self._last_kind = "idle"
+                record = self.metrics.record_step(
+                    "idle", generated=0, prefilled=0, running=0,
+                    waiting=len(self.sched.waiting),
+                    free_pages=self.kv.allocator.num_free, preempted=0,
+                    dt=time.time() - t0)
         return record
 
     def _run_cow_copies(self, lanes: List[RequestHandle]) -> None:
@@ -298,6 +305,10 @@ class ServeEngine:
         cow = [r for r in lanes if r.cow is not None]
         if not cow:
             return
+        with obs.span("cow"):
+            self._run_cow_copies_inner(cow)
+
+    def _run_cow_copies_inner(self, cow: List[RequestHandle]) -> None:
         B = self.serve.max_batch
         src = np.zeros((B,), np.int32)     # padding: scratch -> scratch
         dst = np.zeros((B,), np.int32)

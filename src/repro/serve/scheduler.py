@@ -40,6 +40,8 @@ import dataclasses
 from collections import Counter
 from typing import Dict, List, Optional
 
+from repro import obs
+
 from .api import FINISHED, RUNNING, WAITING, RequestHandle
 from .kv_cache import PagedKVCache
 
@@ -53,9 +55,11 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, kv: PagedKVCache, cfg: SchedulerConfig):
+    def __init__(self, kv: PagedKVCache, cfg: SchedulerConfig,
+                 hooks: Optional[obs.Hooks] = None):
         self.kv = kv
         self.cfg = cfg
+        self.hooks = obs.as_hooks(hooks)
         self.waiting: List[RequestHandle] = []
         self.running: Dict[int, RequestHandle] = {}   # slot -> request
         self._free_slots: List[int] = list(range(cfg.max_batch - 1, -1, -1))
@@ -116,6 +120,7 @@ class Scheduler:
             self.admit_order.append(req.rid)
             budget -= cost
             admitted.append(req)
+            self.hooks.on_admit(req)
         return admitted
 
     def prefill_quota(self, req: RequestHandle, budget: int) -> int:
@@ -152,6 +157,7 @@ class Scheduler:
         victim.status = WAITING
         victim.n_preempt += 1
         self.waiting.append(victim)    # arrival key restores its position
+        self.hooks.on_preempt(victim)
         return victim
 
     def ensure_decode_capacity(self, k: int = 1) -> List[RequestHandle]:
@@ -188,6 +194,7 @@ class Scheduler:
     def finish(self, req: RequestHandle) -> None:
         self._release(req)
         req.status = FINISHED
+        self.hooks.on_finish(req)
 
     # --- introspection ----------------------------------------------
 

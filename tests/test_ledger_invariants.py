@@ -1,0 +1,193 @@
+"""CommLedger accounting invariants (DESIGN.md §9).
+
+Every transmitting layer reports rounds into one :class:`CommLedger`;
+these tests pin the invariants that make that accounting trustworthy:
+
+  * a round can never report negative bits (``record_round`` raises);
+  * the per-round total the ledger books equals the sum of the
+    per-worker ``bits_sent`` the slot loop priced (raw / echo / silent
+    partition: silent pays 0, raw pays exactly the codec's raw cost,
+    an echo pays the rank-dependent echo cost, and a faded echo that
+    falls back to raw pays echo + raw — never less than raw);
+  * retransmissions on a lossy channel never decrease the ledger — the
+    cumulative bit count is monotone non-decreasing round over round.
+
+When ``hypothesis`` is installed the channel-parameter sweep runs as a
+property test; otherwise those cases fall back to a fixed grid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm
+from repro.comm import FP32, CommConfig, CommLedger, LossyBroadcast
+from repro.core import byzantine, costfns
+from repro.core.protocol import communication_phase, run_training
+from repro.core.types import ProtocolConfig, raw_bits
+from repro.run.config import CommSpec
+
+try:
+    import hypothesis
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover - optional dep
+    hypothesis = None
+
+
+def _cfg(n=12, f=1, r=0.3, eta=0.01):
+    return ProtocolConfig(n=n, f=f, r=r, eta=eta)
+
+
+def _near_identical_grads(n, d, seed=0, jitter=0.02):
+    key = jax.random.PRNGKey(seed)
+    base = jax.random.normal(key, (d,))
+    return base + jitter * jax.random.normal(jax.random.fold_in(key, 1),
+                                             (n, d))
+
+
+def _no_plan(n, d):
+    return byzantine.no_attack(jax.random.PRNGKey(1),
+                               jnp.zeros((n, d)), jnp.zeros(n, bool),
+                               None, None)
+
+
+def _check_round_partition(stats, n, d):
+    """The raw/echo/silent partition of one round's per-worker bits."""
+    bits = np.asarray(stats.bits_sent, dtype=np.float64)
+    echoed = np.asarray(stats.echo_sent)
+    assert (bits >= 0).all(), bits
+    raw_cost = float(raw_bits(d))
+    min_echo = float(FP32.echo_msg_bits(n, 0))
+    for j in range(n):
+        if bits[j] == 0:
+            assert not echoed[j]          # silent slots transmit nothing
+        elif echoed[j]:
+            # echo cost is rank-dependent but bounded below by rank 0
+            assert bits[j] >= min_echo
+            assert bits[j] <= float(FP32.echo_msg_bits(n, n))
+        else:
+            # raw, or a faded echo retransmitted raw (echo + raw): a
+            # retransmission never pays LESS than the plain raw message
+            assert bits[j] >= raw_cost
+
+
+def test_record_round_rejects_negative_bits():
+    ledger = CommLedger()
+    with pytest.raises(ValueError, match="non-negative"):
+        ledger.record_round(bits=-1, baseline=100)
+    with pytest.raises(ValueError, match="non-negative"):
+        ledger.record_round(bits=100, baseline=-1)
+    # the failed reports must not have corrupted the ledger
+    assert ledger.rounds == 0
+    assert ledger.bits_sent == 0
+
+
+def test_ideal_round_partition_and_total():
+    n, d = 12, 24
+    grads = _near_identical_grads(n, d)
+    server, stats = communication_phase(_cfg(n=n), grads,
+                                        jnp.zeros(n, bool), _no_plan(n, d))
+    _check_round_partition(stats, n, d)
+    # ideal channel: nobody fades, so every non-echo slot that
+    # transmitted pays EXACTLY the raw cost
+    bits = np.asarray(stats.bits_sent)
+    echoed = np.asarray(stats.echo_sent)
+    sent_raw = (bits > 0) & ~echoed
+    assert sent_raw.any()
+    np.testing.assert_allclose(bits[sent_raw], raw_bits(d))
+    # and the round total the ledger would book is the per-worker sum
+    ledger = CommLedger()
+    rec = ledger.record_round(bits=float(jnp.sum(stats.bits_sent)),
+                              baseline=n * raw_bits(d),
+                              echoed=int(stats.n_echo) > 0)
+    assert rec["bits"] == int(bits.sum())
+    assert ledger.bits_sent == int(bits.sum())
+
+
+def test_ledger_matches_per_round_trace_totals():
+    key = jax.random.PRNGKey(0)
+    d, n, f = 16, 12, 1
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    cfg = _cfg(n=n, f=f)
+    byz = jnp.zeros(n, bool).at[:f].set(True)
+    ledger = CommLedger()
+    trace = run_training(cfg, cost, byzantine.ATTACKS["sign_flip"], byz,
+                         key, jnp.zeros(d), rounds=8, ledger=ledger)
+    per_round = np.asarray(trace["bits"], dtype=np.float64)
+    assert (per_round >= 0).all()
+    assert ledger.rounds == 8
+    assert ledger.bits_sent == int(per_round.sum())
+    assert ledger.bits_baseline == 8 * n * raw_bits(d)
+    assert ledger.echo_rounds == int((np.asarray(trace["n_echo"]) > 0).sum())
+
+
+def _lossy_comm(drop_prob, seed=0):
+    return comm.resolve(CommSpec(channel="lossy", drop_prob=drop_prob,
+                                 seed=seed))
+
+
+def _assert_lossy_invariants(drop_prob, seed):
+    """One lossy run: partition holds per round, ledger is monotone."""
+    key = jax.random.PRNGKey(seed)
+    d, n = 16, 12
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    cfg = _cfg(n=n, f=0)
+    lossy = _lossy_comm(drop_prob, seed=seed)
+    ledger = CommLedger()
+    trace = run_training(cfg, cost, byzantine.no_attack,
+                         jnp.zeros(n, bool), key, jnp.zeros(d),
+                         rounds=6, comm=lossy, ledger=ledger)
+    per_round = np.asarray(trace["bits"], dtype=np.float64)
+    assert (per_round >= 0).all()
+    # retransmissions never decrease the ledger: cumulative bits are
+    # monotone non-decreasing however many echoes faded and fell back
+    cumulative = np.cumsum(per_round)
+    assert (np.diff(cumulative) >= 0).all()
+    assert ledger.bits_sent == int(per_round.sum())
+    assert ledger.rounds == 6
+    # and each individual round's slot pricing respects the partition
+    grads = _near_identical_grads(n, d, seed=seed)
+    _, stats = communication_phase(cfg, grads, jnp.zeros(n, bool),
+                                   _no_plan(n, d), comm=lossy,
+                                   chan_key=jax.random.PRNGKey(seed + 1))
+    _check_round_partition(stats, n, d)
+
+
+def test_lossy_channel_never_decreases_ledger():
+    _assert_lossy_invariants(drop_prob=0.3, seed=0)
+
+
+def test_lossy_fallback_pays_at_least_raw():
+    """With heavy fading, some echo attempts fade mid-slot and the
+    worker retransmits raw — paying echo + raw, never less than raw."""
+    n, d = 12, 24
+    grads = _near_identical_grads(n, d, seed=2)
+    lossy = CommConfig(channel=LossyBroadcast(seed=0, drop_prob=0.6),
+                       codec=FP32)
+    fellback_seen = False
+    for s in range(8):
+        _, stats = communication_phase(_cfg(n=n), grads,
+                                       jnp.zeros(n, bool), _no_plan(n, d),
+                                       comm=lossy,
+                                       chan_key=jax.random.PRNGKey(s))
+        _check_round_partition(stats, n, d)
+        bits = np.asarray(stats.bits_sent)
+        echoed = np.asarray(stats.echo_sent)
+        # fellback slots are priced echo + raw: strictly above raw
+        fellback_seen |= bool(((bits > raw_bits(d)) & ~echoed).any())
+    assert fellback_seen, "0.6 fade over 8 rounds produced no fallback"
+
+
+if hypothesis is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(drop_prob=st.floats(min_value=0.0, max_value=0.8),
+           seed=st.integers(min_value=0, max_value=2**16))
+    def test_lossy_invariants_property(drop_prob, seed):
+        _assert_lossy_invariants(drop_prob=drop_prob, seed=seed)
+else:
+    @pytest.mark.parametrize("drop_prob,seed",
+                             [(0.0, 1), (0.15, 2), (0.5, 3)])
+    def test_lossy_invariants_grid(drop_prob, seed):
+        # fixed-grid fallback for containers without hypothesis
+        _assert_lossy_invariants(drop_prob=drop_prob, seed=seed)
