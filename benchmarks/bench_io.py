@@ -34,6 +34,7 @@ BENCH_FILES = {
     "train": "BENCH_train.json",
     "kernels": "BENCH_kernels.json",
     "serve": "BENCH_serve.json",
+    "comm": "BENCH_comm.json",
 }
 
 

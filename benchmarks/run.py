@@ -61,9 +61,11 @@ def _suite(name):
         from benchmarks import kernels_bench as mod
     elif name == "serve":
         from benchmarks import serve_bench as mod
+    elif name == "comm":
+        from benchmarks import comm_bench as mod
     else:
         raise SystemExit(f"unknown suite {name!r} "
-                         f"(known: train kernels serve)")
+                         f"(known: train kernels serve comm)")
     return mod
 
 
@@ -110,8 +112,8 @@ def main() -> None:
                     help="fail on >threshold regression vs the last "
                          "BENCH_*.json record")
     ap.add_argument("--suites", nargs="+",
-                    default=["train", "kernels", "serve"],
-                    choices=["train", "kernels", "serve"],
+                    default=["train", "kernels", "serve", "comm"],
+                    choices=["train", "kernels", "serve", "comm"],
                     help="trajectory suites to run")
     ap.add_argument("--threshold", type=float, default=0.2,
                     help="relative regression tolerance (default 0.2)")

@@ -12,6 +12,10 @@
     ledger.py   CommLedger: every transmitting layer (Trainer, echo-DP
                 rounds, protocol simulation) reports rounds into one
                 accounting object
+    policy/     the closed-loop control plane: CommPolicy controllers
+                (static / adaptive_echo / channel_aware / bandit) that
+                turn ledger measurements into per-round (codec, echo_r,
+                budget) decisions, plus error-feedback accumulators
 
 ``CommConfig`` bundles one channel + one codec as a frozen (hashable,
 jit-static) pair; ``resolve`` builds it from a job's
@@ -26,6 +30,9 @@ import dataclasses
 from .channel import (IDEAL, Channel, ChannelState, IdealBroadcast,
                       LossyBroadcast, MeteredBroadcast)
 from .ledger import CommLedger, echo_round_bits, raw_round_bits
+from .policy import (CommDecision, CommPolicy, PolicyContext,
+                     RoundObservation, StaticPolicy, ef_compensate, ef_init,
+                     resolve_policy)
 from .wire import (BITS_PER_FLOAT, FP32, MSG_ECHO, MSG_RAW, MSG_SILENT,
                    Bf16Codec, Codec, EchoMsg, Fp32Codec, Int8Codec, Message,
                    RawGradientMsg, SilentMsg, TopKCodec, messages_from_round,
@@ -78,8 +85,10 @@ def resolve(spec=None) -> CommConfig:
 __all__ = [
     "BITS_PER_FLOAT", "FP32", "IDEAL", "MSG_ECHO", "MSG_RAW", "MSG_SILENT",
     "Bf16Codec", "Channel", "ChannelState", "Codec", "CommConfig",
-    "CommLedger", "DEFAULT_COMM", "EchoMsg", "Fp32Codec", "IdealBroadcast",
-    "Int8Codec", "LossyBroadcast", "Message", "MeteredBroadcast",
-    "RawGradientMsg", "SilentMsg", "TopKCodec", "echo_round_bits",
-    "messages_from_round", "payload_bits", "raw_round_bits", "resolve",
+    "CommDecision", "CommLedger", "CommPolicy", "DEFAULT_COMM", "EchoMsg",
+    "Fp32Codec", "IdealBroadcast", "Int8Codec", "LossyBroadcast", "Message",
+    "MeteredBroadcast", "PolicyContext", "RawGradientMsg", "RoundObservation",
+    "SilentMsg", "StaticPolicy", "TopKCodec", "echo_round_bits",
+    "ef_compensate", "ef_init", "messages_from_round", "payload_bits",
+    "raw_round_bits", "resolve", "resolve_policy",
 ]

@@ -1,0 +1,18 @@
+"""repro.comm.policy — the closed-loop communication control plane.
+
+See ``base.py`` for the contract, ``adaptive.py`` for the controllers,
+``feedback.py`` for the error-feedback accumulators that keep lossy
+codec switching convergent. Importing this package populates the
+POLICIES registry (it is one of ``run.registry._HOSTS``).
+"""
+from .adaptive import AdaptiveEchoPolicy, BanditPolicy, ChannelAwarePolicy
+from .base import (CODEC_LADDER, CommDecision, CommPolicy, PolicyContext,
+                   RoundObservation, StaticPolicy, resolve_policy)
+from .feedback import ef_compensate, ef_init, ef_norms
+
+__all__ = [
+    "AdaptiveEchoPolicy", "BanditPolicy", "ChannelAwarePolicy",
+    "CODEC_LADDER", "CommDecision", "CommPolicy", "PolicyContext",
+    "RoundObservation", "StaticPolicy", "resolve_policy",
+    "ef_compensate", "ef_init", "ef_norms",
+]

@@ -1,0 +1,221 @@
+"""The adaptive policy zoo (DESIGN.md §13).
+
+Three controllers over the :class:`~repro.comm.policy.base.CommPolicy`
+contract, each closing the loop on a different ledger signal:
+
+- ``adaptive_echo``  — Eq. 7 pass rate -> echo deviation-ratio ``r``
+- ``channel_aware``  — measured fade rate -> codec ladder position,
+                       with a metered budget as a hard constraint
+- ``bandit``         — UCB over codec arms, reward = loss decrease
+                       per bit spent
+
+All three are deterministic functions of their observation history (no
+RNG), so seeded runs replay decision-for-decision.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Optional
+
+from repro.run.registry import POLICIES
+
+from .base import (CODEC_LADDER, CommDecision, CommPolicy, PolicyContext,
+                   RoundObservation)
+
+
+class AdaptiveEchoPolicy(CommPolicy):
+    """Tightens/loosens Eq. 7's deviation ratio from the echo-rate curve.
+
+    The one failure mode a looser ``r`` can fix is a *clean* echo round
+    that Eq. 7 rejected (``obs.eq7_failed``) — each one costs a full raw
+    fallback, O(d) per worker instead of O(n). The controller watches
+    the pass rate over a short window of clean attempts and steps ``r``
+    on a hysteresis band:
+
+    - pass rate < ``lo``  -> loosen (``r += step``), buying echo rounds
+      with reconstruction slack, up to ``r_max``;
+    - pass rate ≥ ``hi`` (everything passing) *and* no Eq. 7 failure for
+      ``calm`` rounds -> tighten back toward the configured ``r``, never
+      below it.
+
+    The asymmetric ``calm`` guard is the anti-oscillation half of the
+    hysteresis: a workload with periodic hard rounds (noise shocks)
+    keeps resetting the calm clock, so the controller settles at the
+    loosest level those rounds need instead of ping-ponging around it.
+    The window is cleared after every change so stale observations made
+    under the old threshold cannot trigger a double step.
+    """
+
+    name = "adaptive_echo"
+
+    def __init__(self, window: int = 6, min_obs: int = 4, lo: float = 0.75,
+                 hi: float = 0.999, step: float = 0.02, r_max: float = 0.98,
+                 cooldown: int = 2, calm: int = 18):
+        super().__init__()
+        self.window, self.min_obs = window, min_obs
+        self.lo, self.hi, self.step = lo, hi, step
+        self.r_max, self.cooldown, self.calm = r_max, cooldown, calm
+        self._passes: deque = deque(maxlen=window)
+        self._cool = 0
+        self._since_fail = 10 ** 9
+        self.echo_r = 0.9
+
+    def setup(self, ctx: PolicyContext) -> None:
+        super().setup(ctx)
+        self.echo_r = ctx.echo_r
+
+    def observe(self, obs: Optional[RoundObservation]) -> CommDecision:
+        if obs is None:
+            return CommDecision(echo_r=self.echo_r)
+        if obs.attempted and obs.echo_drops == 0 and not obs.refused:
+            self._passes.append(obs.echoed)
+            self._since_fail = 0 if obs.eq7_failed else self._since_fail + 1
+        else:
+            # faded / refused rounds say nothing about Eq. 7
+            self._since_fail += 1
+        self._cool = max(self._cool - 1, 0)
+        r = self.echo_r
+        if len(self._passes) >= self.min_obs and self._cool == 0:
+            rate = sum(self._passes) / len(self._passes)
+            floor = self.ctx.echo_r if self.ctx is not None else r
+            if rate < self.lo and r < self.r_max:
+                r = min(round(r + self.step, 6), self.r_max)
+            elif (rate >= self.hi and r > floor
+                  and self._since_fail >= self.calm):
+                r = max(round(r - self.step, 6), floor)
+            if r != self.echo_r:
+                self._cool = self.cooldown
+                self._passes.clear()
+        self.echo_r = r
+        return CommDecision(echo_r=r)
+
+
+class ChannelAwarePolicy(CommPolicy):
+    """Steps the codec along fp32↔bf16↔int8↔topk from the measured
+    fade rate, with the metered budget as a hard constraint.
+
+    An EWMA of the observed per-round drop fraction estimates the
+    channel: above ``hi`` the channel is eating retransmissions, so step
+    to a cheaper codec (each lost echo slot forces an O(d) raw round —
+    shrink d's coefficient); below ``lo`` for long enough, step back up
+    for fidelity. ``cooldown`` rounds must pass between steps so one
+    estimate never drives two moves.
+
+    Budget (hard constraint, applied after the ladder move): if the
+    channel meters bits, the decided codec's worst-case round — echo
+    attempt plus full raw fallback — must fit, else keep stepping
+    cheaper until one fits (or the cheapest is reached). A metered
+    *refusal* observed on the wire forces the same walk immediately.
+    """
+
+    name = "channel_aware"
+
+    def __init__(self, alpha: float = 0.5, hi: float = 0.04,
+                 lo: float = 0.005, cooldown: int = 2):
+        super().__init__()
+        self.alpha, self.hi, self.lo, self.cooldown = alpha, hi, lo, cooldown
+        self.drop_est = 0.0
+        self._cool = 0
+        self._idx = 0
+
+    def setup(self, ctx: PolicyContext) -> None:
+        super().setup(ctx)
+        self._idx = (CODEC_LADDER.index(ctx.codec)
+                     if ctx.codec in CODEC_LADDER else len(CODEC_LADDER) - 1)
+
+    def _fit_budget(self, idx: int) -> int:
+        ctx = self.ctx
+        if ctx is None or not ctx.budget_bits:
+            return idx
+        while (idx < len(CODEC_LADDER) - 1
+               and ctx.round_cost(CODEC_LADDER[idx]) > ctx.budget_bits):
+            idx += 1
+        return idx
+
+    def observe(self, obs: Optional[RoundObservation]) -> CommDecision:
+        idx = self._fit_budget(self._idx)
+        if obs is not None:
+            self._cool = max(self._cool - 1, 0)
+            if obs.attempted and self.ctx is not None:
+                rate = obs.echo_drops / max(self.ctx.n, 1)
+                self.drop_est = ((1 - self.alpha) * self.drop_est
+                                 + self.alpha * rate)
+                if self._cool == 0:
+                    if self.drop_est > self.hi and idx < len(CODEC_LADDER) - 1:
+                        idx += 1
+                        self._cool = self.cooldown
+                    elif self.drop_est < self.lo and idx > 0:
+                        idx -= 1
+                        self._cool = self.cooldown
+            elif obs.refused:
+                # the meter would not even admit the echo attempt
+                idx = min(idx + 1, len(CODEC_LADDER) - 1)
+                self._cool = self.cooldown
+            idx = self._fit_budget(idx)
+        self._idx = idx
+        return CommDecision(codec=CODEC_LADDER[idx])
+
+
+class BanditPolicy(CommPolicy):
+    """UCB1 over the codec arms, scored by loss decrease per bit.
+
+    Reward for the round that just finished accrues to the arm it ran
+    under: ``max(prev_loss - loss, 0) / bits``, normalized by the
+    running maximum so rewards live in [0, 1] as UCB1 assumes. Arms are
+    first played once each in ladder order (deterministic), then by
+    ``mean + c·sqrt(ln t / pulls)`` with the ladder as tie-break —
+    no RNG anywhere, so the pull sequence replays under a fixed seed.
+    """
+
+    name = "bandit"
+
+    def __init__(self, c: float = math.sqrt(2.0)):
+        super().__init__()
+        self.c = c
+        self.pulls = {a: 0 for a in CODEC_LADDER}
+        self.mean = {a: 0.0 for a in CODEC_LADDER}
+        self._scale = 0.0              # running max raw reward
+        self._prev_loss: Optional[float] = None
+
+    def _credit(self, obs: RoundObservation) -> None:
+        if obs.codec not in self.pulls:
+            return
+        raw = 0.0
+        if self._prev_loss is not None and obs.bits > 0:
+            raw = max(self._prev_loss - obs.loss, 0.0) / obs.bits
+        self._scale = max(self._scale, raw)
+        reward = raw / self._scale if self._scale > 0 else 0.0
+        n = self.pulls[obs.codec] = self.pulls[obs.codec] + 1
+        self.mean[obs.codec] += (reward - self.mean[obs.codec]) / n
+        self._prev_loss = obs.loss
+
+    def observe(self, obs: Optional[RoundObservation]) -> CommDecision:
+        if obs is not None:
+            self._credit(obs)
+        for arm in CODEC_LADDER:       # play every arm once, in order
+            if self.pulls[arm] == 0:
+                return CommDecision(codec=arm)
+        t = sum(self.pulls.values())
+        best, best_score = CODEC_LADDER[0], -1.0
+        for arm in CODEC_LADDER:
+            score = (self.mean[arm]
+                     + self.c * math.sqrt(math.log(t) / self.pulls[arm]))
+            if score > best_score:
+                best, best_score = arm, score
+        return CommDecision(codec=best)
+
+
+@POLICIES.register("adaptive_echo")
+def _build_adaptive_echo(spec=None) -> CommPolicy:
+    return AdaptiveEchoPolicy()
+
+
+@POLICIES.register("channel_aware")
+def _build_channel_aware(spec=None) -> CommPolicy:
+    return ChannelAwarePolicy()
+
+
+@POLICIES.register("bandit")
+def _build_bandit(spec=None) -> CommPolicy:
+    return BanditPolicy()

@@ -1,0 +1,149 @@
+"""The comm control-plane contract (DESIGN.md §13).
+
+PR 5 built the *measurement* plane — codecs price every message,
+channels fade/ration them, the :class:`~repro.comm.CommLedger` records
+what each round cost — and PR 8 made it observable. This module is the
+*control* plane: a :class:`CommPolicy` closes the loop, turning the
+measured per-round statistics into the next round's communication
+decision.
+
+The contract is deliberately host-side and tiny:
+
+    policy.setup(PolicyContext)          once, before round 0
+    policy.observe(obs) -> CommDecision  once per round; ``obs`` is the
+                                         previous round's observation
+                                         (None before the first round)
+
+A :class:`CommDecision` names the codec, the echo deviation-ratio
+threshold (Eq. 7's ``r``) and the per-round bit budget for the coming
+round; ``None`` fields mean "keep the current value". Every policy is a
+*deterministic* function of its observation history, so a seeded run's
+decision trajectory replays exactly — the same property the channels
+already guarantee for fading.
+
+Policies register in ``run.registry.POLICIES`` as builders
+``(CommSpec) -> CommPolicy`` and are selected by the
+``scenario.comm.policy`` config axis (``resolve_policy``). ``static``
+is today's behavior: it re-asserts the configured (codec, echo_r) every
+round — drivers treat it as a zero-overhead fast path, so a
+``static``+fp32 run stays bitwise identical to a run with no policy at
+all, while still emitting its (constant) ``comm.policy.*`` decisions.
+
+This module imports neither jax nor any repro sibling beyond the
+registry, so policy resolution stays instant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.run.registry import POLICIES
+
+# The codec ladder the adaptive policies step along, richest first.
+# Order is the control knob: stepping "down" (right) trades gradient
+# fidelity for fewer bits on the wire.
+CODEC_LADDER = ("fp32", "bf16", "int8", "topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyContext:
+    """What a policy knows before the first round: the topology, the
+    configured starting point, the channel's standing parameters, and
+    the price list (bits for one all-raw / all-echo round per codec on
+    the ladder) it trades against."""
+
+    n: int                            # workers
+    d: int                            # gradient dimension
+    echo_k: int                       # echo-DP reference basis size
+    codec: str = "fp32"               # configured starting codec
+    echo_r: float = 0.9               # configured Eq. 7 threshold
+    channel: str = "ideal"
+    drop_prob: float = 0.0            # lossy channel's configured rate
+    budget_bits: int = 0              # metered channel's per-round cap
+    raw_round_bits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    echo_round_bits: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def round_cost(self, codec: str) -> int:
+        """Worst-case bits of one round under ``codec``: an echo attempt
+        plus the full raw fallback (what a metered budget must fit)."""
+        return (self.raw_round_bits.get(codec, 0)
+                + self.echo_round_bits.get(codec, 0))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundObservation:
+    """One finished round, as the driver saw it (host-side floats)."""
+
+    round: int                        # driver step index
+    bits: int                         # bits this round actually cost
+    baseline_bits: int                # all-raw round, same codec
+    fp32_baseline_bits: int           # all-raw round, fp32 (paper units)
+    loss: float
+    codec: str                        # codec the round ran under
+    echo_r: float                     # Eq. 7 threshold the round used
+    attempted: bool = False           # optimistic echo round attempted
+    echoed: bool = False              # ... and valid (aggregate used)
+    echo_drops: int = 0               # faded echo slots (channel)
+    refused: bool = False             # metered channel refused the attempt
+
+    @property
+    def eq7_failed(self) -> bool:
+        """The echo attempt was clean (no fades) but Eq. 7 rejected it —
+        the only failure mode a looser threshold can convert."""
+        return self.attempted and self.echo_drops == 0 and not self.echoed
+
+
+@dataclasses.dataclass(frozen=True)
+class CommDecision:
+    """The next round's communication setup; None = keep current."""
+
+    codec: Optional[str] = None
+    echo_r: Optional[float] = None
+    budget_bits: Optional[int] = None
+
+
+class CommPolicy:
+    """Base policy: see the module docstring for the contract."""
+
+    name = "policy"
+    # Static policies never change anything: drivers keep the exact
+    # pre-policy code path (bitwise trajectories) and only emit events.
+    static = False
+
+    def __init__(self) -> None:
+        self.ctx: Optional[PolicyContext] = None
+
+    def setup(self, ctx: PolicyContext) -> None:
+        self.ctx = ctx
+
+    def observe(self, obs: Optional[RoundObservation]) -> CommDecision:
+        raise NotImplementedError
+
+
+class StaticPolicy(CommPolicy):
+    """Today's behavior: the configured (codec, echo_r) every round."""
+
+    name = "static"
+    static = True
+
+    def observe(self, obs: Optional[RoundObservation]) -> CommDecision:
+        ctx = self.ctx
+        if ctx is None:
+            return CommDecision()
+        return CommDecision(codec=ctx.codec, echo_r=ctx.echo_r)
+
+
+@POLICIES.register("static")
+def _build_static(spec=None) -> CommPolicy:
+    return StaticPolicy()
+
+
+def resolve_policy(spec=None) -> CommPolicy:
+    """Build the policy a ``run.config.CommSpec`` names (None / absent
+    field -> ``static``) through the POLICIES registry."""
+    name = getattr(spec, "policy", "static") if spec is not None \
+        else "static"
+    try:
+        return POLICIES[name](spec)
+    except KeyError as e:              # did-you-mean text, CLI-friendly
+        raise ValueError(e.args[0]) from None

@@ -1,0 +1,63 @@
+"""Error-feedback accumulators (DESIGN.md §13).
+
+Lossy codecs (int8, topk) bias every round by whatever the quantizer
+threw away; a policy that switches codecs mid-run compounds the bias
+unpredictably. The classic fix (error feedback; Jin et al.,
+arXiv 1902.10336 use it to make 1-bit stochastic signs convergent) is a
+per-worker residual carried across rounds: add it to the vector before
+encoding, keep what the wire lost for next time:
+
+    wire   = Q(x + e)
+    e_next = (x + e) - wire
+
+The residual is bounded whenever the quantizer is a contraction
+(``‖v - Q(v)‖ ≤ (1-δ)·‖v‖`` for some δ > 0): ``‖e_next‖ ≤
+(1-δ)·‖x + e‖ ≤ (1-δ)(‖x‖ + ‖e‖)``, a geometric recursion with fixed
+point ``‖e‖ ≤ (1-δ)/δ · sup‖x‖``. So the per-round bias stays O(1)
+instead of accumulating, and every discarded bit is eventually
+transmitted — which is what keeps aggressive quantization convergent.
+
+``ef_compensate`` is the whole mechanism and is jittable; callers
+(the echo-DP all-gather in ``dist/echo_dp.py``, the protocol slot loop
+in ``core/protocol.py``) own *when* to commit the new residual — only
+on rounds whose transmission was actually used, so a discarded
+optimistic attempt or a faded slot does not destroy state it never
+sent.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def ef_init(n: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Fresh residual state: one zero row per worker, gathered layout
+    ``(n, dim)`` — the replicated shape the drivers carry round-over-round."""
+    return jnp.zeros((n, dim), dtype=dtype)
+
+
+def ef_compensate(codec, vec: jnp.ndarray,
+                  residual: Optional[jnp.ndarray] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """One worker's encode step with error feedback.
+
+    Returns ``(wire, new_residual)``: what goes on the air and the
+    residual to carry *if* this transmission ends up used. ``codec=None``
+    means the value rides uncoded — the wire is exact, the residual
+    passes through untouched (no compensation, nothing new lost).
+    ``residual=None`` runs plain coding with no feedback.
+    """
+    if codec is None:
+        return vec, residual
+    if residual is None:
+        return codec.roundtrip(vec), None
+    compensated = vec + residual
+    wire = codec.roundtrip(compensated)
+    return wire, compensated - wire
+
+
+def ef_norms(residual: jnp.ndarray) -> jnp.ndarray:
+    """Per-worker residual norms of a gathered ``(n, dim)`` state —
+    the boundedness diagnostic the obs layer records."""
+    return jnp.linalg.norm(residual, axis=-1)

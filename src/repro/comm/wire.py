@@ -171,6 +171,17 @@ class TopKCodec(Codec):
     name: ClassVar[str] = "topk"
     k: int = 32
 
+    def __post_init__(self):
+        # k > d clamps to dense-at-fp32-cost downstream (encode and
+        # vector_bits both min() against the vector length), but a
+        # non-positive k would only surface as an opaque empty-shape
+        # failure deep in the pack kernel — reject it here.
+        if not isinstance(self.k, int) or isinstance(self.k, bool) \
+                or self.k < 1:
+            raise ValueError(
+                f"TopKCodec needs a positive integer k (entries kept per "
+                f"vector), got {self.k!r} — set scenario.comm.topk >= 1")
+
     def encode(self, vec):
         from repro.kernels import ops
         return ops.topk_pack(vec, self.k)

@@ -57,12 +57,14 @@ class CommState(NamedTuple):
     rmask: jax.Array      # (n,) bool — rows of R that are in the reference set
     bits: jax.Array       # (n,) float bits transmitted per worker
     echoed: jax.Array     # (n,) bool — worker sent an echo message
+    faded: jax.Array      # (n,) bool — the channel faded this worker's slot
     chan: ChannelState    # broadcast-channel carry (fading PRNG + budget)
+    ef: jax.Array         # (n, d) error-feedback residuals (zeros when off)
 
 
 def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
           grads: jax.Array, byz_mask: jax.Array, plan: AttackPlan,
-          comm: CommConfig) -> CommState:
+          comm: CommConfig, use_ef: bool = False) -> CommState:
     """One TDMA slot: worker i broadcasts; server + all workers process."""
     n, d = grads.shape
     g_i = grads[i]
@@ -96,11 +98,20 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     # value in it) is exactly the pre-comm slot loop.
     echo_ref = jnp.where(is_byz, plan.echo_ref[i], st.rmask)
     echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
+    ef_row = st.ef[i]
     if codec.lossless:
         raw_wire = raw_msg
         echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
     else:
-        raw_wire = codec.roundtrip(raw_msg)
+        if use_ef:
+            # error feedback (comm.policy.feedback): compensate the raw
+            # payload with this worker's carried residual; what the codec
+            # loses this slot is carried to the next raw transmission.
+            compensated = raw_msg + ef_row
+            raw_wire = codec.roundtrip(compensated)
+            ef_row = compensated - raw_wire
+        else:
+            raw_wire = codec.roundtrip(raw_msg)
         echo_x = codec.roundtrip(echo_x)
         # Honest senders compute the norm ratio against the coefficients
         # AS TRANSMITTED so ||g~|| == ||g|| survives quantization;
@@ -149,8 +160,14 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
 
     bits = st.bits.at[i].set(bits_i)
     echoed = st.echoed.at[i].set(is_echo)
+    faded_acc = st.faded.at[i].set(faded)
+    # the residual commits only when the raw payload actually went on the
+    # air and was admitted — a slot that echoed (or was silenced by the
+    # meter) never transmitted it, so the carried state must not change
+    ef = jnp.where(use_ef & is_raw, st.ef.at[i].set(ef_row), st.ef)
 
-    return CommState(G, received, detected, R, rmask, bits, echoed, chan)
+    return CommState(G, received, detected, R, rmask, bits, echoed,
+                     faded_acc, chan, ef)
 
 
 def communication_phase(
@@ -160,12 +177,20 @@ def communication_phase(
     plan: AttackPlan,
     comm: Optional[CommConfig] = None,
     chan_key: Optional[jax.Array] = None,
-) -> Tuple[ServerState, RoundStats]:
+    ef: Optional[jax.Array] = None,
+):
     """Run the n TDMA slots; return the server view and round statistics.
 
     ``comm`` selects the wire codec + broadcast channel (default: the
     paper's ideal fp32 setup); ``chan_key`` seeds this round's fading
-    draws (defaults to the channel's configured seed)."""
+    draws (defaults to the channel's configured seed).
+
+    ``ef`` (an (n, d) residual array) threads error-feedback
+    accumulators through the slot loop: each worker's raw payload is
+    compensated pre-encode and the codec's loss carried to its next raw
+    slot. When given, the return value grows to
+    ``(server, stats, ef_next)`` — callers that never pass it keep the
+    two-tuple contract (and the exact pre-policy jaxpr)."""
     comm = comm if comm is not None else DEFAULT_COMM
     n, d = grads.shape
     st = CommState(
@@ -176,10 +201,12 @@ def communication_phase(
         rmask=jnp.zeros((n,), bool),
         bits=jnp.zeros((n,), jnp.float32),
         echoed=jnp.zeros((n,), bool),
+        faded=jnp.zeros((n,), bool),
         chan=comm.channel.init(chan_key),
+        ef=ef if ef is not None else jnp.zeros((n, d), grads.dtype),
     )
     body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask, plan=plan,
-                   comm=comm)
+                   comm=comm, use_ef=ef is not None)
     st = jax.lax.fori_loop(0, n, body, st)
 
     server = ServerState(G=st.G, received=st.received, detected=st.detected)
@@ -189,7 +216,10 @@ def communication_phase(
         n_echo=jnp.sum(st.echoed.astype(jnp.int32)),
         n_detected=jnp.sum(st.detected.astype(jnp.int32)),
         rank_R=jnp.sum(st.rmask.astype(jnp.int32)),
+        n_faded=jnp.sum(st.faded.astype(jnp.int32)),
     )
+    if ef is not None:
+        return server, stats, st.ef
     return server, stats
 
 
@@ -213,12 +243,22 @@ def echo_cgc_round(
     aggregator: str = "cgc",
     comm: Optional[CommConfig] = None,
     chan_key: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, ServerState, RoundStats]:
+    ef: Optional[jax.Array] = None,
+):
     """One full Echo-CGC round given precomputed worker gradients.
 
     Returns (w_next, server_state, stats). ``grads[j]`` is what an *honest*
     worker j would send; Byzantine rows are overridden by ``plan``.
+
+    With an ``ef`` residual array the slot loop runs error-feedback
+    compensation and the return grows to
+    ``(w_next, server, stats, ef_next)``.
     """
+    if ef is not None:
+        server, stats, ef_next = communication_phase(
+            cfg, grads, byz_mask, plan, comm=comm, chan_key=chan_key, ef=ef)
+        g_agg = aggregate(server, cfg.f, aggregator)
+        return w - cfg.eta * g_agg, server, stats, ef_next
     server, stats = communication_phase(cfg, grads, byz_mask, plan,
                                         comm=comm, chan_key=chan_key)
     g_agg = aggregate(server, cfg.f, aggregator)
@@ -264,6 +304,8 @@ def run_training(
     use_radio: bool = True,
     comm: Optional[CommConfig] = None,
     ledger: Optional[CommLedger] = None,
+    policy=None,
+    error_feedback: bool = False,
 ):
     """Multi-round driver: Echo-CGC (use_radio) or point-to-point baseline.
 
@@ -271,12 +313,36 @@ def run_training(
     n_echo, n_detected. A :class:`~repro.comm.CommLedger` passed as
     ``ledger`` gets one record per simulated round (the simulation's
     reporting hook into the shared accounting surface).
+
+    ``policy`` (a :class:`~repro.comm.policy.CommPolicy`) closes the
+    control loop: a *dynamic* policy moves the driver to a per-round
+    host loop where the previous round's statistics pick the next
+    round's (codec, r, budget); None and static policies keep the exact
+    scanned trajectory. ``error_feedback`` threads per-worker residual
+    accumulators through the slot loop (lossy codecs only; a no-op —
+    zero residuals — under fp32).
     """
     n = cfg.n
     comm = comm if comm is not None else DEFAULT_COMM
+    dynamic = policy is not None and not getattr(policy, "static", False)
+    if policy is not None:
+        _policy_setup(policy, cfg, comm, n, w0.shape[-1])
+    if dynamic and use_radio:
+        return _run_training_policy(cfg, cost, attack_fn, byz_mask, key,
+                                    w0, rounds, aggregator, comm, ledger,
+                                    policy, error_feedback)
+    if policy is not None:
+        # static policy on the scanned path: the decision is constant,
+        # so it is emitted once up front and the trajectory is bitwise
+        # the no-policy run (the BENCH_comm static_bitwise gate).
+        dec = policy.observe(None)
+        obs.event("comm.policy.decision", step=0, policy=policy.name,
+                  codec=dec.codec or comm.codec.name,
+                  echo_r=dec.echo_r if dec.echo_r is not None else cfg.r)
+    use_ef = bool(error_feedback) and use_radio
 
     def one_round(carry, key_t):
-        w = carry
+        w, ef = carry
         keys = jax.random.split(key_t, n + 1)
         grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys[:n])
         true_grad = cost.grad(w)
@@ -285,8 +351,14 @@ def run_training(
             # fold_in (not a wider split) keeps grads/attack draws
             # bitwise-identical to the pre-channel code path.
             chan_key = jax.random.fold_in(key_t, n + 1)
-            w_next, server, stats = echo_cgc_round(
-                cfg, w, grads, byz_mask, plan, aggregator, comm, chan_key)
+            if use_ef:
+                w_next, server, stats, ef = echo_cgc_round(
+                    cfg, w, grads, byz_mask, plan, aggregator, comm,
+                    chan_key, ef)
+            else:
+                w_next, server, stats = echo_cgc_round(
+                    cfg, w, grads, byz_mask, plan, aggregator, comm,
+                    chan_key)
             bits = jnp.sum(stats.bits_sent)
             n_echo = stats.n_echo
             n_det = stats.n_detected
@@ -302,14 +374,15 @@ def run_training(
             n_echo=n_echo,
             n_detected=n_det,
         )
-        return w_next, out
+        return (w_next, ef), out
 
+    ef0 = (jnp.zeros((n, w0.shape[-1]), w0.dtype) if use_ef else None)
     keys = jax.random.split(key, rounds)
     # host-side spans only: the per-slot loop is jitted/scanned, so the
     # observable unit is the whole simulated trajectory (trace + block)
     # plus the ledger fold-in; per-round bit events come from the ledger.
     with obs.span("protocol.rounds"):
-        w_final, trace = jax.lax.scan(one_round, w0, keys)
+        (w_final, _), trace = jax.lax.scan(one_round, (w0, ef0), keys)
         jax.block_until_ready(w_final)
     obs.counter("protocol.rounds_simulated", rounds)
     trace["w_final"] = w_final
@@ -318,3 +391,152 @@ def run_training(
         with obs.span("protocol.ledger"):
             ledger.record_protocol_trace(trace, n, d, comm.codec)
     return trace
+
+
+def _ladder_codecs(comm: CommConfig):
+    """Codec objects for the policy ladder, reusing the configured
+    instance for its own rung (it may carry tuned knobs, e.g. top-k)."""
+    from repro.comm.policy import CODEC_LADDER
+    from repro.run.registry import CODECS
+    out = {}
+    for name in CODEC_LADDER:
+        out[name] = comm.codec if name == comm.codec.name \
+            else CODECS[name](None)
+    return out
+
+
+def _policy_setup(policy, cfg: ProtocolConfig, comm: CommConfig,
+                  n: int, d: int) -> None:
+    """Hand the policy the topology + the ladder's price list."""
+    from repro.comm.ledger import echo_round_bits, raw_round_bits
+    from repro.comm.policy import PolicyContext
+    codecs = _ladder_codecs(comm)
+    channel = comm.channel
+    policy.setup(PolicyContext(
+        n=n, d=d,
+        echo_k=n,   # protocol echoes span the (<= n)-vector reference set
+        codec=comm.codec.name,
+        echo_r=float(cfg.r),
+        channel=channel.name,
+        drop_prob=float(getattr(channel, "drop_prob", 0.0)),
+        budget_bits=int(getattr(channel, "budget_bits", 0)),
+        raw_round_bits={c: raw_round_bits(k, n, d)
+                        for c, k in codecs.items()},
+        echo_round_bits={c: echo_round_bits(k, n, n)
+                         for c, k in codecs.items()},
+    ))
+
+
+def _run_training_policy(cfg, cost, attack_fn, byz_mask, key, w0, rounds,
+                         aggregator, comm, ledger, policy, error_feedback):
+    """Dynamic-policy driver: one host-side loop iteration per round.
+
+    The per-round body stays jitted (``echo_cgc_round`` caches one
+    executable per (cfg, comm) pair, bounded by the codec ladder times
+    the distinct ``r`` values the policy visits); the host loop exists
+    so the previous round's measured statistics can pick the next
+    round's communication setup. RNG (gradient / attack / fading keys)
+    is derived exactly as on the scanned path, so the trajectory of a
+    seeded run replays decision-for-decision.
+    """
+    import dataclasses as _dc
+
+    import numpy as np
+
+    from repro.comm import CommConfig as _CC
+    from repro.comm.ledger import raw_round_bits
+    from repro.comm.policy import RoundObservation
+    from repro.comm.wire import FP32
+
+    n, d = cfg.n, w0.shape[-1]
+    codecs = _ladder_codecs(comm)
+    fp32_round = raw_round_bits(FP32, n, d)
+    cur_codec = comm.codec.name
+    cur_r = float(cfg.r)
+    channel = comm.channel
+    switches = 0
+    r_changes = 0
+    bits_cum = 0
+
+    @jax.jit
+    def round_inputs(key_t, w):
+        keys = jax.random.split(key_t, n + 1)
+        grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys[:n])
+        plan = attack_fn(keys[n], grads, byz_mask, w, cost.grad(w))
+        chan_key = jax.random.fold_in(key_t, n + 1)
+        return grads, plan, chan_key
+
+    w = w0
+    ef = jnp.zeros((n, d), w0.dtype) if error_feedback else None
+    last_obs = None
+    trace = {k: [] for k in
+             ("dist2", "value", "bits", "n_echo", "n_detected")}
+    keys = jax.random.split(key, rounds)
+    with obs.span("protocol.rounds"):
+        for t in range(rounds):
+            dec = policy.observe(last_obs)
+            obs.counter("comm.policy.decisions")
+            changed = False
+            if dec.codec is not None and dec.codec != cur_codec:
+                cur_codec, changed = dec.codec, True
+                switches += 1
+                obs.counter("comm.policy.codec_switches")
+            if dec.echo_r is not None and float(dec.echo_r) != cur_r:
+                cur_r, changed = float(dec.echo_r), True
+                r_changes += 1
+                obs.counter("comm.policy.echo_r_changes")
+            if dec.budget_bits is not None and \
+                    hasattr(channel, "budget_bits") and \
+                    int(dec.budget_bits) != int(channel.budget_bits):
+                channel, changed = _dc.replace(
+                    channel, budget_bits=int(dec.budget_bits)), True
+            if changed:
+                obs.event("comm.policy.decision", step=t,
+                          policy=policy.name, codec=cur_codec,
+                          echo_r=cur_r)
+            codec = codecs[cur_codec]
+            cfg_t = cfg._replace(r=cur_r)
+            comm_t = _CC(channel=channel, codec=codec)
+
+            grads, plan, chan_key = round_inputs(keys[t], w)
+            value = cost.value(w)
+            if ef is not None:
+                w_next, _, stats, ef = echo_cgc_round(
+                    cfg_t, w, grads, byz_mask, plan, aggregator, comm_t,
+                    chan_key, ef)
+            else:
+                w_next, _, stats = echo_cgc_round(
+                    cfg_t, w, grads, byz_mask, plan, aggregator, comm_t,
+                    chan_key)
+            bits = int(np.asarray(jnp.sum(stats.bits_sent)))
+            n_echo = int(np.asarray(stats.n_echo))
+            n_faded = int(np.asarray(stats.n_faded))
+            loss = float(np.asarray(value))
+            baseline = raw_round_bits(codec, n, d)
+            bits_cum += bits
+            last_obs = RoundObservation(
+                round=t, bits=bits, baseline_bits=baseline,
+                fp32_baseline_bits=fp32_round, loss=loss,
+                codec=cur_codec, echo_r=cur_r, attempted=True,
+                echoed=n_echo > 0, echo_drops=n_faded)
+            obs.event("comm.policy.round", step=t, policy=policy.name,
+                      codec=cur_codec, echo_r=cur_r, bits=bits,
+                      echoed=n_echo > 0, attempted=True,
+                      echo_drops=n_faded, bits_cumulative=bits_cum,
+                      fp32_baseline_cumulative=fp32_round * (t + 1),
+                      loss=loss)
+            if ledger is not None:
+                ledger.record_round(bits=bits, baseline=baseline,
+                                    echoed=n_echo > 0)
+            trace["dist2"].append(jnp.sum((w - cost.w_star) ** 2))
+            trace["value"].append(value)
+            trace["bits"].append(jnp.float32(bits))
+            trace["n_echo"].append(jnp.int32(n_echo))
+            trace["n_detected"].append(stats.n_detected)
+            w = w_next
+    obs.counter("protocol.rounds_simulated", rounds)
+    out = {k: jnp.stack(v) for k, v in trace.items()}
+    out["w_final"] = w
+    out["codec_switches"] = switches
+    out["echo_r_changes"] = r_changes
+    return out

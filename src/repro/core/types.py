@@ -48,6 +48,8 @@ class RoundStats(NamedTuple):
     n_echo: jax.Array            # () int32, number of echo messages
     n_detected: jax.Array        # () int32, Byzantine workers caught by server
     rank_R: jax.Array            # () int32, final size of the reference set
+    n_faded: Any = None          # () int32, slots the channel faded this round
+                                 # (None from pre-channel call sites)
 
 
 class ProtocolConfig(NamedTuple):

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cgc import cgc_scales
-from .collectives import _gather_scalar, tree_norm
+from .collectives import _gather_scalar, tree_norm, worker_index
 
 F32 = jnp.float32
 _RIDGE = 1e-6
@@ -94,7 +94,7 @@ def _ridged(gram: jax.Array) -> jax.Array:
 
 def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
                       axes: Sequence[str], f: int, r: float,
-                      codec=None
+                      codec=None, ef=None
                       ) -> Tuple[Any, jax.Array, Dict[str, jax.Array]]:
     """Coefficient-space CGC over the worker axes.
 
@@ -106,6 +106,14 @@ def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
     the all-gather carries the codec's reconstruction, so a quantized
     wire format degrades the shared aggregate exactly as it would on the
     air. The Eq. 7 test stays sender-local on the exact projection.
+
+    ``ef`` (a replicated ``(n, K)`` array, or None) carries per-worker
+    error-feedback residuals (``comm.policy.feedback``): each worker
+    adds its row before encoding its coefficients and keeps what the
+    codec lost. The updated residuals ride back gathered under
+    ``diags["ef_state"]`` — the driver commits them only when this
+    round's transmission is actually used (echo valid, no fades), so a
+    discarded optimistic attempt never corrupts the carried state.
     """
     axes = tuple(axes)
     K = len(basis)
@@ -121,8 +129,18 @@ def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
     n = int(jax.lax.psum(1, axes))
     all_echo = n_ok == n
 
-    # O(K)-per-worker exchange: coefficients + norms only, wire-coded.
-    x_wire = x if codec is None else codec.roundtrip(x)
+    # O(K)-per-worker exchange: coefficients + norms only, wire-coded
+    # (with error-feedback compensation when the driver threads it).
+    ef_new = None
+    if ef is None:
+        x_wire = x if codec is None else codec.roundtrip(x)
+    else:
+        from repro.comm.policy.feedback import ef_compensate
+        my_ef = ef[worker_index(axes)]                     # my (K,) row
+        x_wire, my_ef_new = ef_compensate(codec, x, my_ef)
+        if my_ef_new is None:                              # codec=None
+            my_ef_new = my_ef
+        ef_new = jax.lax.all_gather(my_ef_new.astype(F32), axes)  # (n, K)
     xs = jax.lax.all_gather(x_wire, axes)                  # (n, K)
     norms = _gather_scalar(g_norm, axes)                   # (n,)
     proj_norms = jnp.sqrt(jnp.maximum(
@@ -139,4 +157,8 @@ def echo_dp_aggregate(grads: Any, basis: Sequence[Any], gram: jax.Array,
         "echo_residual_ratio": jax.lax.pmean(
             jnp.sqrt(res_sq) / jnp.maximum(g_norm, 1e-30), axes),
     }
+    if ef_new is not None:
+        diags["ef_state"] = ef_new
+        diags["ef_residual_norm"] = jnp.max(
+            jnp.linalg.norm(ef_new, axis=-1))
     return agg, all_echo, diags

@@ -75,6 +75,17 @@ class TrainSettings:
     # Communication setup (repro.comm): wire codec + broadcast channel.
     # None = the paper's ideal fp32 comm (bitwise the pre-comm engine).
     comm: Optional[CommConfig] = None
+    # Closed-loop control plane (repro.comm.policy, DESIGN.md §13):
+    # ``policy`` is a resolved CommPolicy instance (None = no controller,
+    # bitwise the pre-policy engine; a static policy only emits events).
+    # ``ef`` threads per-worker error-feedback residuals through the
+    # echo-DP coefficient all-gather. ``dynamic_r`` is engine-internal:
+    # the Trainer sets it on the per-codec step bundles it builds for a
+    # dynamic policy, so the step takes Eq. 7's r as a *traced* scalar
+    # (policy retunes it per round with zero recompiles).
+    policy: Optional[Any] = None
+    ef: bool = False
+    dynamic_r: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -437,6 +448,13 @@ class EchoDpStrategy(_StrategyBase):
     ``metrics["all_echo"]`` reports whether the fast path was valid —
     the :class:`Trainer` re-runs the round with the exact CGC step when
     it is not, and rolls ``basis`` with that raw aggregate.
+
+    The trailing ``basis`` list doubles as the control-plane data path:
+    after the echo_k reference pytrees, ``settings.dynamic_r`` appends a
+    traced Eq. 7 threshold scalar and ``settings.ef`` appends the
+    replicated (n, K) error-feedback residual state — both ride the same
+    replicated extras plumbing, so a policy retuning r (or the residual
+    carrying across rounds) never triggers a recompile.
     """
 
     name = "echo_dp"
@@ -451,7 +469,10 @@ class EchoDpStrategy(_StrategyBase):
                                                   shard_ctx=None)
 
     def aggregate(self, env, grads, settings, data_axes, extra):
-        basis = list(extra)
+        extra = list(extra)
+        basis, rest = extra[:settings.echo_k], extra[settings.echo_k:]
+        r = rest.pop(0) if settings.dynamic_r else settings.echo_r
+        ef = rest.pop(0) if settings.ef else None
         gram = basis_gram(basis)
         # lossy codecs quantize the transmitted coefficient vectors; the
         # lossless default keeps the jaxpr identical to the pre-comm step.
@@ -459,8 +480,8 @@ class EchoDpStrategy(_StrategyBase):
         if codec is not None and codec.lossless:
             codec = None
         agg, all_echo, diags = echo_dp_aggregate(
-            grads, basis, gram, data_axes, settings.f, settings.echo_r,
-            codec=codec)
+            grads, basis, gram, data_axes, settings.f, r,
+            codec=codec, ef=ef)
         return agg, dict(diags, all_echo=all_echo)
 
 
@@ -599,12 +620,14 @@ class TrainerConfig:
 
 @dataclasses.dataclass
 class TrainState:
-    """Everything a resume needs: (values, opt_state, step, basis)."""
+    """Everything a resume needs: (values, opt_state, step, basis) plus
+    the (n, K) error-feedback residuals when ``TrainSettings.ef`` is on."""
 
     values: Any
     opt_state: Any
     step: int = 0
     basis: Optional[List[Any]] = None
+    ef: Optional[jax.Array] = None
 
 
 class Trainer:
@@ -642,6 +665,8 @@ class Trainer:
         self.settings = settings
         self.config = config
         self.mesh = mesh
+        self._model_cfg = cfg
+        self._global_batch = global_batch
         self.comm = settings.comm if settings.comm is not None \
             else DEFAULT_COMM
         self.bundle = strategy.build(cfg, opt, settings, mesh, global_batch)
@@ -675,6 +700,23 @@ class Trainer:
         self._ckpt_writer: Optional[ckpt_lib.AsyncCheckpointWriter] = None
         self._first_loss: Optional[float] = None
         self._last_loss: Optional[float] = None
+        # Control plane (repro.comm.policy): a dynamic policy retunes
+        # (codec, echo_r, budget) per round from the previous round's
+        # observation; a static one only emits its constant decisions.
+        self.policy = settings.policy
+        self._policy_dynamic = (self.policy is not None
+                                and not getattr(self.policy, "static",
+                                                False))
+        self._policy_ready = False
+        self._last_obs = None
+        self._cur_codec_name = self.comm.codec.name
+        self._cur_r = float(settings.echo_r)
+        self._cur_budget: Optional[int] = None
+        self.codec_switches = 0
+        self._fp32_cum = 0
+        self._codec_cache: Dict[str, Any] = {self.comm.codec.name:
+                                             self.comm.codec}
+        self._opt_steps: Dict[str, Callable] = {}
 
     # Legacy counter surface — reads delegate to the comm ledger, which
     # is the single accounting authority now.
@@ -712,7 +754,11 @@ class Trainer:
             opt_state = jax.tree.map(jnp.copy, opt_state)
         basis = (init_basis(values, self.settings.echo_k)
                  if self.bundle.needs_basis else None)
-        state = TrainState(values, opt_state, 0, basis)
+        ef = None
+        if self.bundle.needs_basis and self.settings.ef:
+            from repro.comm.policy import ef_init
+            ef = ef_init(self.n_workers, self.settings.echo_k)
+        state = TrainState(values, opt_state, 0, basis, ef)
         cfg = self.config
         if cfg.resume and cfg.ckpt_dir \
                 and ckpt_lib.latest_step(cfg.ckpt_dir) is not None:
@@ -724,6 +770,8 @@ class Trainer:
         if self._ckpt_writer is not None:
             self._ckpt_writer.flush()     # pending async saves land first
         extra_like = {"basis": like.basis} if like.basis is not None else None
+        if extra_like is not None and like.ef is not None:
+            extra_like["ef"] = like.ef
         values, opt_state, extra, at, complete = ckpt_lib.restore_train_state(
             self.config.ckpt_dir, like.values, like.opt_state,
             extra_like=extra_like, step=step)
@@ -738,7 +786,9 @@ class Trainer:
             opt_state = self.opt.init(values)
         basis = (extra or {}).get("basis", like.basis) \
             if extra is not None else like.basis
-        return TrainState(values, opt_state, at, basis)
+        ef = (extra or {}).get("ef", like.ef) \
+            if extra is not None else like.ef
+        return TrainState(values, opt_state, at, basis, ef)
 
     def save(self, state: TrainState, wait: bool = True) -> Optional[str]:
         """Checkpoint ``state``; returns the target .npz path.
@@ -759,6 +809,8 @@ class Trainer:
         values, opt_state = state.values, state.opt_state
         extra_state = ({"basis": state.basis}
                        if state.basis is not None else None)
+        if extra_state is not None and state.ef is not None:
+            extra_state["ef"] = state.ef
         if not wait:
             snap = lambda t: jax.tree.map(      # noqa: E731
                 lambda x: np.array(x, copy=True), t)
@@ -778,6 +830,143 @@ class Trainer:
         if self._d is None:
             self._d = int(sum(v.size for v in jax.tree.leaves(values)))
         return self._d
+
+    # --- the control plane (repro.comm.policy, DESIGN.md §13) --------
+
+    def _codec_obj(self, name: str):
+        """Codec instance for a policy-decided name (the configured
+        instance when the name matches — keeping e.g. a custom topk k —
+        registry defaults otherwise)."""
+        codec = self._codec_cache.get(name)
+        if codec is None:
+            from repro.run.registry import CODECS
+            codec = self._codec_cache[name] = CODECS[name](None)
+        return codec
+
+    def _ensure_policy(self, d: int) -> None:
+        """One-time policy setup: topology, starting point, price list."""
+        if self._policy_ready:
+            return
+        from repro.comm.policy import CODEC_LADDER, PolicyContext
+        n, K = self.n_workers, self.settings.echo_k
+        raw = {c: int(raw_round_bits(self._codec_obj(c), n, d))
+               for c in CODEC_LADDER}
+        echo = {c: n * int(self._codec_obj(c).echo_msg_bits(n, K))
+                for c in CODEC_LADDER} if self.bundle.needs_basis \
+            else {c: 0 for c in CODEC_LADDER}
+        chan = self.comm.channel
+        self.policy.setup(PolicyContext(
+            n=n, d=d, echo_k=K, codec=self.comm.codec.name,
+            echo_r=float(self.settings.echo_r), channel=chan.name,
+            drop_prob=float(getattr(chan, "drop_prob", 0.0)),
+            budget_bits=int(getattr(chan, "budget_bits", 0)),
+            raw_round_bits=raw, echo_round_bits=echo))
+        self._policy_ready = True
+
+    def _opt_step_for(self, codec_name: str) -> Callable:
+        """The jitted optimistic step for one policy-decided codec.
+
+        Built lazily and cached per codec name (the ladder bounds the
+        cache at 4 entries); each bundle carries ``dynamic_r=True`` so
+        Eq. 7's r arrives as a traced scalar — the policy can retune it
+        every round without a single recompile. Optimistic steps never
+        donate (their outputs are discarded on fallback).
+        """
+        fn = self._opt_steps.get(codec_name)
+        if fn is None:
+            s = dataclasses.replace(
+                self.settings, dynamic_r=True,
+                comm=CommConfig(channel=self.comm.channel,
+                                codec=self._codec_obj(codec_name)))
+            bundle = type(self.strategy)(
+                loss_fn=getattr(self.strategy, "loss_override", None)
+            ).build(self._model_cfg, self.opt, s, self.mesh,
+                    self._global_batch)
+            fn = self._opt_steps[codec_name] = jax.jit(bundle.fn,
+                                                       donate_argnums=())
+        return fn
+
+    def _policy_decide(self, step: int, d: int):
+        """Ask the policy for this round's (codec, channel, echo_r).
+
+        Without a policy this is a passthrough of the configured comm.
+        With one, the previous round's observation feeds ``observe`` and
+        the decision is applied — but only a *dynamic* policy actually
+        changes anything; a static policy's constant decision is emitted
+        as events/counters and otherwise ignored, keeping the trajectory
+        bitwise identical to the no-policy engine.
+        """
+        codec, channel = self.comm.codec, self.comm.channel
+        echo_r = float(self.settings.echo_r)
+        if self.policy is None:
+            return codec, channel, echo_r
+        self._ensure_policy(d)
+        decision = self.policy.observe(self._last_obs)
+        obs.counter("comm.policy.decisions")
+        switched = r_changed = False
+        if self._policy_dynamic:
+            if decision.codec is not None \
+                    and decision.codec != self._cur_codec_name:
+                self._cur_codec_name = decision.codec
+                self.codec_switches += 1
+                switched = True
+                obs.counter("comm.policy.codec_switches")
+            if decision.echo_r is not None \
+                    and float(decision.echo_r) != self._cur_r:
+                self._cur_r = float(decision.echo_r)
+                r_changed = True
+                obs.counter("comm.policy.echo_r_changes")
+            if decision.budget_bits is not None:
+                self._cur_budget = int(decision.budget_bits)
+            codec = self._codec_obj(self._cur_codec_name)
+            echo_r = self._cur_r
+            if self._cur_budget is not None \
+                    and hasattr(channel, "budget_bits"):
+                channel = dataclasses.replace(channel,
+                                              budget_bits=self._cur_budget)
+        if switched or r_changed:
+            obs.event("comm.policy.decision", step=step,
+                      policy=self.policy.name, codec=codec.name,
+                      echo_r=echo_r, codec_switched=switched,
+                      echo_r_changed=r_changed)
+        return codec, channel, echo_r
+
+    def _step_and_extras(self, state: TrainState, codec, echo_r: float):
+        """The optimistic step fn + its trailing extras list: the basis,
+        then (dynamic policies) the traced Eq. 7 threshold, then (ef)
+        the residual state — matching ``EchoDpStrategy.aggregate``."""
+        extras = list(state.basis)
+        if self._policy_dynamic:
+            fn = self._opt_step_for(codec.name)
+            extras.append(jnp.asarray(echo_r, F32))
+        else:
+            fn = self.step_fn
+        if self.settings.ef and state.ef is not None:
+            extras.append(state.ef)
+        return fn, extras
+
+    def _observe_round(self, state: TrainState, codec, echo_r: float,
+                       bits: int, raw_round: int, loss: float,
+                       echoed: bool, attempted: bool, drops: int,
+                       led: Dict[str, Any]) -> None:
+        """Record the finished round for the policy + the obs stream."""
+        from repro.comm import FP32
+        from repro.comm.policy import RoundObservation
+        n, d = self.n_workers, self._d
+        fp32_round = raw_round_bits(FP32, n, d)
+        self._fp32_cum += fp32_round
+        self._last_obs = RoundObservation(
+            round=state.step, bits=bits, baseline_bits=raw_round,
+            fp32_baseline_bits=fp32_round, loss=loss, codec=codec.name,
+            echo_r=echo_r, attempted=attempted, echoed=echoed,
+            echo_drops=drops, refused=self.bundle.needs_basis
+            and not attempted)
+        obs.event("comm.policy.round", step=state.step,
+                  policy=self.policy.name, codec=codec.name,
+                  echo_r=echo_r, bits=bits, echoed=echoed,
+                  attempted=attempted, echo_drops=drops,
+                  bits_cumulative=led["bits_cumulative"],
+                  fp32_baseline_cumulative=self._fp32_cum, loss=loss)
 
     def run_round(self, state: TrainState, batch
                   ) -> Tuple[TrainState, Dict[str, Any]]:
@@ -799,11 +988,13 @@ class Trainer:
         step_arr = jnp.asarray(state.step)
         n = self.n_workers
         d = self._grad_dim(state.values)
-        codec, channel = self.comm.codec, self.comm.channel
+        codec, channel, echo_r = self._policy_decide(state.step, d)
         raw_round = raw_round_bits(codec, n, d)
         record: Dict[str, Any] = {"step": state.step,
                                   "strategy": self.bundle.name}
         echoed = False
+        attempted, drops = False, 0
+        new_ef = state.ef
 
         if self.bundle.needs_basis:
             K = self.settings.echo_k
@@ -822,17 +1013,22 @@ class Trainer:
                 else 0
             all_echo = False
             if attempted and drops == 0:
+                opt_fn, extras = self._step_and_extras(state, codec, echo_r)
                 with obs.span("optimistic"):
-                    v, o, m, agg = self.step_fn(state.values,
-                                                state.opt_state,
-                                                batch, step_arr,
-                                                state.basis)
+                    v, o, m, agg = opt_fn(state.values,
+                                          state.opt_state,
+                                          batch, step_arr,
+                                          extras)
                     all_echo = bool(m["all_echo"])
             echoed = attempted and all_echo and drops == 0
             if echoed:
                 rolled = self.config.roll_policy == "always"
                 basis = roll_basis(state.basis, agg) if rolled \
                     else state.basis
+                # error-feedback residuals commit only on rounds whose
+                # transmission was used; a discarded attempt keeps state
+                if self.settings.ef and "ef_state" in m:
+                    new_ef = m["ef_state"]
             else:
                 # optimistic round invalid (Eq. 7 failed, echo slots
                 # faded, or never attempted): fall back to the exact CGC
@@ -849,7 +1045,7 @@ class Trainer:
                 record["echo_drops"] = drops
             if not attempted:
                 record["comm_refused"] = True
-            new_state = TrainState(v, o, state.step + 1, basis)
+            new_state = TrainState(v, o, state.step + 1, basis, new_ef)
         else:
             with obs.span("step"):
                 out = self.step_fn(state.values, state.opt_state, batch,
@@ -862,12 +1058,19 @@ class Trainer:
         if self._first_loss is None:
             self._first_loss = loss
         self._last_loss = loss
-        record.update(loss=loss, **self.ledger.record_round(
-            bits=bits, baseline=raw_round, echoed=echoed))
+        led = self.ledger.record_round(bits=bits, baseline=raw_round,
+                                       echoed=echoed)
+        record.update(loss=loss, **led)
         for k in ("echo_frac", "grad_global_norm", "cgc_threshold",
-                  "cgc_clipped_frac"):
+                  "cgc_clipped_frac", "ef_residual_norm"):
             if k in m:
                 record[k] = float(m[k])
+        if self._policy_dynamic:
+            record["codec"] = codec.name
+            record["echo_r"] = echo_r
+        if self.policy is not None:
+            self._observe_round(state, codec, echo_r, bits, raw_round,
+                                loss, echoed, attempted, drops, led)
         self.sink.emit(record)
         return new_state, record
 
@@ -952,4 +1155,10 @@ class Trainer:
             s["echo_rounds"] = led["echo_rounds"]
             s["echo_rate"] = led["echo_rate"]
             s["bits_saving"] = led["bits_saving"]
+        if self.policy is not None:
+            s["policy"] = self.policy.name
+            s["codec_switches"] = self.codec_switches
+            if self._policy_dynamic:
+                s["codec_final"] = self._cur_codec_name
+                s["echo_r_final"] = self._cur_r
         return s

@@ -27,7 +27,30 @@ def load_run(run_dir: str) -> Dict[str, Any]:
     if os.path.exists(cfg_path):
         with open(cfg_path) as fh:
             data.setdefault("config", json.load(fh))
+    data.setdefault("policy_events", load_policy_events(run_dir))
     return data
+
+
+def load_policy_events(run_dir: str) -> List[Dict[str, Any]]:
+    """The run's ``comm.policy.*`` events from ``events.jsonl`` (empty
+    when the run had no jsonl tracker or no policy). Malformed lines —
+    e.g. a run killed mid-write — are skipped, not fatal."""
+    path = os.path.join(run_dir, "events.jsonl")
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue
+            if str(rec.get("kind", "")).startswith("comm.policy."):
+                out.append(rec)
+    return out
 
 
 def _fmt_s(t: float) -> str:
@@ -105,6 +128,49 @@ def _serve_lines(s: Dict[str, Any]) -> List[str]:
     return lines
 
 
+def _comm_lines(s: Dict[str, Any],
+                events: List[Dict[str, Any]]) -> List[str]:
+    """The adaptive-communication digest: which policy ran, every
+    decision it took, the codec mix, and cumulative bits against the
+    fp32 all-raw baseline (the paper's cost unit)."""
+    rounds = [e for e in events if e.get("kind") == "comm.policy.round"]
+    decisions = [e for e in events
+                 if e.get("kind") == "comm.policy.decision"]
+    if not rounds and not decisions and "policy" not in s:
+        return []
+    lines = []
+    policy = s.get("policy") or next(
+        (e["policy"] for e in decisions + rounds if e.get("policy")), "?")
+    lines.append(f"  policy        {policy}")
+    if "codec_final" in s:
+        lines.append(f"  final         codec={s['codec_final']} "
+                     f"echo_r={s.get('echo_r_final')}")
+    switches = s.get("codec_switches")
+    if switches is None and rounds:
+        switches = sum(1 for a, b in zip(rounds, rounds[1:])
+                       if a.get("codec") != b.get("codec"))
+    if switches is not None:
+        lines.append(f"  codec switches {switches}")
+    for e in decisions:
+        lines.append(f"  decision @{e.get('step', '?'):<4} "
+                     f"codec={e.get('codec')} r={e.get('echo_r')}")
+    if rounds:
+        tally: Dict[str, int] = {}
+        for e in rounds:
+            c = str(e.get("codec"))
+            tally[c] = tally.get(c, 0) + 1
+        lines.append("  codec rounds  "
+                     + ", ".join(f"{c} x{tally[c]}" for c in sorted(tally)))
+        last = rounds[-1]
+        cum = last.get("bits_cumulative")
+        base = last.get("fp32_baseline_cumulative")
+        if cum is not None and base:
+            lines.append(f"  bits          {float(cum):.4g} vs "
+                         f"{float(base):.4g} fp32 all-raw "
+                         f"({_pct(1.0 - float(cum) / float(base))} saved)")
+    return lines
+
+
 def render(data: Dict[str, Any], run_dir: str = "") -> str:
     """Render a loaded run (see :func:`load_run`) to the report text."""
     kind = data.get("kind", "run")
@@ -120,6 +186,11 @@ def render(data: Dict[str, Any], run_dir: str = "") -> str:
     if not body:   # unknown kind, or a summary with none of the keys
         body = [f"  {k:<13} {v}" for k, v in sorted(summary.items())]
     lines += body
+
+    comm = _comm_lines(summary, data.get("policy_events") or [])
+    if comm:
+        lines.append("-- comm policy --")
+        lines += comm
 
     lines.append("-- span breakdown (share of root spans) --")
     lines += _span_lines(obs.get("spans") or {})

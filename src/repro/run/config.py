@@ -64,8 +64,13 @@ class CommSpec:
     broadcast medium carries them (``repro.comm``, DESIGN.md §9).
 
     ``codec`` prices (and for lossy codecs, quantizes) every message;
-    ``channel`` is the single-hop radio model. The defaults are the
-    paper's ideal reliable fp32 broadcast — bitwise the pre-comm stack.
+    ``channel`` is the single-hop radio model. ``policy`` selects the
+    closed-loop controller that may retune codec / echo_r / budget per
+    round from ledger measurements (``repro.comm.policy``, DESIGN.md
+    §13); ``ef`` turns on per-worker error-feedback accumulators so
+    lossy codecs stay convergent. The defaults are the paper's ideal
+    reliable fp32 broadcast with the static policy — bitwise the
+    pre-comm stack.
     """
 
     channel: str = "ideal"           # registry: channels (ideal|lossy|metered)
@@ -74,6 +79,8 @@ class CommSpec:
     seed: int = 0                    # channel PRNG seed
     budget_bits: int = 0             # metered: per-round bit budget (0 = off)
     topk: int = 32                   # topk codec: entries kept per vector
+    policy: str = "static"           # registry: comm_policies
+    ef: bool = False                 # error-feedback residual accumulators
 
 
 @dataclasses.dataclass(frozen=True)

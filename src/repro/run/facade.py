@@ -221,6 +221,7 @@ def train(cfg: RunConfig) -> TrainResult:
     import jax
 
     from repro.comm import resolve as resolve_comm
+    from repro.comm.policy import resolve_policy
     from repro.data import make_batch_iterator
     from repro.launch.engine import (Trainer, TrainerConfig, TrainSettings,
                                      TRAIN_STRATEGIES)
@@ -237,7 +238,8 @@ def train(cfg: RunConfig) -> TrainResult:
         byz_mode=scen.attack, microbatches=tspec.microbatches,
         clip_norm=tspec.clip_norm, echo_k=scen.echo_k, echo_r=scen.echo_r,
         moe_impl=cfg.mesh.moe_impl, fsdp=tspec.strategy == "fsdp",
-        comm=resolve_comm(scen.comm))
+        comm=resolve_comm(scen.comm),
+        policy=resolve_policy(scen.comm), ef=scen.comm.ef)
     optimizers = {"adamw": adamw, "sgd": sgd}
     if tspec.optimizer not in optimizers:
         raise ValueError(f"unknown train.optimizer {tspec.optimizer!r}; "
@@ -283,6 +285,10 @@ def train(cfg: RunConfig) -> TrainResult:
                     if (scen.comm.channel,
                         scen.comm.codec) != ("ideal", "fp32")
                     else "")
+        if scen.comm.policy != "static":
+            comm_tag += f" policy={scen.comm.policy}"
+        if scen.comm.ef:
+            comm_tag += " ef=on"
         print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
               f"aggregator={scen.aggregator} f={scen.f}{comm_tag} "
               f"run_dir={run_dir}")
@@ -327,6 +333,11 @@ def print_train_summary(result: TrainResult) -> None:
               f"{summary['bits_sent']:.3e} vs all-raw baseline "
               f"{summary['bits_baseline']:.3e} "
               f"({100.0 * summary['bits_saving']:.1f}% saved)")
+    if summary.get("codec_final") is not None:
+        print(f"policy {summary['policy']}: "
+              f"{summary['codec_switches']} codec switches, settled on "
+              f"codec={summary['codec_final']} "
+              f"echo_r={summary['echo_r_final']:.3f}")
     if tspec.ckpt_dir:
         print("checkpoint saved to", tspec.ckpt_dir)
 

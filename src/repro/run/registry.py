@@ -96,6 +96,7 @@ class Registry(Mapping):
 #   CODEC_PACK_BACKENDS    kernels/ops.py           codec pack/unpack kernels
 #   CODECS                 comm/wire.py             wire-format builders
 #   CHANNELS               comm/channel.py          broadcast channel builders
+#   POLICIES               comm/policy/base.py      comm control-plane policies
 #   TRACKERS               obs/tracker.py           observability sinks
 # ---------------------------------------------------------------------------
 
@@ -110,6 +111,7 @@ CGC_BACKENDS = Registry("fused-CGC kernel backend")
 CODEC_PACK_BACKENDS = Registry("codec pack/unpack kernel backend")
 CODECS = Registry("wire codec")
 CHANNELS = Registry("broadcast channel")
+POLICIES = Registry("comm policy")
 TRACKERS = Registry("tracker")
 
 _REGISTRIES: Dict[str, Registry] = {
@@ -124,6 +126,7 @@ _REGISTRIES: Dict[str, Registry] = {
     "codec_pack_backends": CODEC_PACK_BACKENDS,
     "codecs": CODECS,
     "channels": CHANNELS,
+    "comm_policies": POLICIES,
     "trackers": TRACKERS,
 }
 
@@ -131,7 +134,7 @@ _REGISTRIES: Dict[str, Registry] = {
 _HOSTS = ("repro.core.aggregators", "repro.core.byzantine",
           "repro.dist.collectives", "repro.launch.engine",
           "repro.kernels.ops", "repro.comm.wire", "repro.comm.channel",
-          "repro.obs.tracker")
+          "repro.comm.policy", "repro.obs.tracker")
 
 
 def load_plugins() -> None:

@@ -1,0 +1,494 @@
+"""repro.comm.policy — the adaptive communication control plane.
+
+Host-side policy units (deterministic decision trajectories), the
+error-feedback accumulator invariants, the TopKCodec validation
+regression, the static-policy bitwise guarantee on the real Trainer,
+the seeded adaptive job's replayability, and the report CLI's comm
+section. Multi-worker legs run in subprocesses with 8 fake CPU devices
+(this process has already initialised jax single-device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.policy import (CODEC_LADDER, AdaptiveEchoPolicy,
+                               BanditPolicy, ChannelAwarePolicy,
+                               CommDecision, PolicyContext,
+                               RoundObservation, StaticPolicy,
+                               ef_compensate, ef_init, ef_norms,
+                               resolve_policy)
+from repro.comm.wire import Bf16Codec, Fp32Codec, Int8Codec, TopKCodec
+from repro.run.config import CommSpec
+
+
+def _ctx(**kw):
+    base = dict(n=8, d=256, echo_k=4, codec="int8", echo_r=0.9,
+                channel="lossy", drop_prob=0.1,
+                raw_round_bits={c: b for c, b in
+                                zip(CODEC_LADDER, (8192, 4096, 2048, 1024))},
+                echo_round_bits={c: 64 for c in CODEC_LADDER})
+    base.update(kw)
+    return PolicyContext(**base)
+
+
+def _obs(**kw):
+    base = dict(round=0, bits=1000, baseline_bits=2048,
+                fp32_baseline_bits=8192, loss=1.0, codec="int8",
+                echo_r=0.9, attempted=True)
+    base.update(kw)
+    return RoundObservation(**base)
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution + the static contract
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_policy_registry():
+    assert isinstance(resolve_policy(None), StaticPolicy)
+    spec = CommSpec(policy="adaptive_echo")
+    assert isinstance(resolve_policy(spec), AdaptiveEchoPolicy)
+    with pytest.raises(ValueError, match="bandit"):  # did-you-mean text
+        resolve_policy(CommSpec(policy="bandid"))
+
+
+def test_static_policy_reasserts_configured_point():
+    pol = StaticPolicy()
+    pol.setup(_ctx(codec="bf16", echo_r=0.8))
+    assert pol.static
+    for obs in (None, _obs(echoed=False), _obs(echoed=True)):
+        dec = pol.observe(obs)
+        assert dec == CommDecision(codec="bf16", echo_r=0.8)
+
+
+# ---------------------------------------------------------------------------
+# adaptive_echo: hysteresis-banded r tuning
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_echo_loosens_on_eq7_failures_then_holds():
+    pol = AdaptiveEchoPolicy()
+    pol.setup(_ctx(echo_r=0.9))
+    r_seen = []
+    for t in range(12):       # every clean attempt fails Eq. 7
+        dec = pol.observe(_obs(round=t, echoed=False, echo_r=pol.echo_r))
+        r_seen.append(dec.echo_r)
+    assert r_seen[0] == 0.9
+    assert max(r_seen) > 0.9           # loosened
+    assert max(r_seen) <= pol.r_max
+    # monotone while failing: never tightens into a failing workload
+    assert r_seen == sorted(r_seen)
+
+
+def test_adaptive_echo_tightens_only_after_calm():
+    pol = AdaptiveEchoPolicy(calm=6)
+    pol.setup(_ctx(echo_r=0.9))
+    for t in range(8):                 # drive r up
+        pol.observe(_obs(round=t, echoed=False))
+    loose = pol.echo_r
+    assert loose > 0.9
+    for t in range(40):                # long all-pass calm stretch
+        pol.observe(_obs(round=8 + t, echoed=True))
+    assert pol.echo_r == 0.9           # tightened back, never below floor
+
+
+def test_adaptive_echo_ignores_faded_and_refused_rounds():
+    pol = AdaptiveEchoPolicy()
+    pol.setup(_ctx(echo_r=0.9))
+    for t in range(20):                # failures, but the channel's fault
+        pol.observe(_obs(round=t, echoed=False, echo_drops=2))
+    for t in range(20):
+        pol.observe(_obs(round=20 + t, echoed=False, refused=True))
+    assert pol.echo_r == 0.9           # no Eq. 7 signal -> no movement
+
+
+# ---------------------------------------------------------------------------
+# channel_aware: drop-rate ladder stepping + budget as hard constraint
+# ---------------------------------------------------------------------------
+
+
+def test_channel_aware_steps_down_ladder_on_drops():
+    pol = ChannelAwarePolicy()
+    pol.setup(_ctx(codec="fp32"))
+    seen = ["fp32"]
+    for t in range(12):                # persistent 25% fade rate
+        dec = pol.observe(_obs(round=t, codec=seen[-1], echoed=False,
+                               echo_drops=2))
+        seen.append(dec.codec)
+    # walked the ladder monotonically toward the cheap end
+    idxs = [CODEC_LADDER.index(c) for c in seen]
+    assert idxs == sorted(idxs)
+    assert seen[-1] == "topk"
+
+
+def test_channel_aware_recovers_on_clean_channel():
+    pol = ChannelAwarePolicy()
+    pol.setup(_ctx(codec="fp32"))
+    for t in range(12):
+        pol.observe(_obs(round=t, echoed=False, echo_drops=2))
+    assert CODEC_LADDER[pol._idx] == "topk"
+    for t in range(60):                # clean channel: EWMA decays
+        dec = pol.observe(_obs(round=12 + t, echoed=True, echo_drops=0))
+    assert dec.codec == "fp32"         # stepped all the way back up
+
+
+def test_channel_aware_budget_is_hard_constraint():
+    # budget fits only the two cheapest rungs: the policy must never
+    # decide a codec whose worst-case round blows the cap
+    pol = ChannelAwarePolicy()
+    pol.setup(_ctx(codec="fp32", channel="metered", budget_bits=2200))
+    dec = pol.observe(None)
+    assert CODEC_LADDER.index(dec.codec) >= CODEC_LADDER.index("int8")
+    for t in range(40):                # even on a perfectly clean channel
+        dec = pol.observe(_obs(round=t, codec=dec.codec, echoed=True))
+        assert _ctx().round_cost(dec.codec) <= 2200
+
+
+def test_channel_aware_refusal_steps_down_immediately():
+    pol = ChannelAwarePolicy()
+    pol.setup(_ctx(codec="bf16"))
+    dec = pol.observe(_obs(round=0, attempted=False, refused=True))
+    assert CODEC_LADDER.index(dec.codec) > CODEC_LADDER.index("bf16")
+
+
+# ---------------------------------------------------------------------------
+# bandit: deterministic UCB over codec arms
+# ---------------------------------------------------------------------------
+
+
+def test_bandit_plays_all_arms_then_replays_deterministically():
+    def drive():
+        pol = BanditPolicy()
+        pol.setup(_ctx())
+        pulls, obs = [], None
+        for t in range(40):
+            dec = pol.observe(obs)
+            pulls.append(dec.codec)
+            # every arm buys the same loss decrease, so the
+            # bits-per-loss-decrease reward favors the cheap end
+            obs = _obs(round=t, codec=dec.codec, loss=64.0 - t,
+                       bits=_ctx().raw_round_bits[dec.codec])
+        return pulls
+    a, b = drive(), drive()
+    assert a == b                      # no RNG anywhere
+    assert set(a[:4]) == set(CODEC_LADDER)   # every arm probed first
+    # after probing, the best bits-per-loss arm gets the most pulls
+    assert max(set(a[4:]), key=a[4:].count) == "topk"
+
+
+# ---------------------------------------------------------------------------
+# Error feedback: the residual invariants
+# ---------------------------------------------------------------------------
+
+
+def test_ef_compensate_identity_paths():
+    vec = jnp.arange(8.0)
+    res = jnp.ones(8)
+    wire, new = ef_compensate(None, vec, res)
+    np.testing.assert_array_equal(np.asarray(wire), np.asarray(vec))
+    assert new is res                  # codec=None: passthrough untouched
+    wire, new = ef_compensate(Int8Codec(), vec, None)
+    assert new is None                 # no feedback requested
+    # fp32 is exact: the compensated wire carries the residual, and the
+    # new residual is exactly zero
+    wire, new = ef_compensate(Fp32Codec(), vec, res)
+    np.testing.assert_allclose(np.asarray(wire), np.asarray(vec + res))
+    np.testing.assert_allclose(np.asarray(new), 0.0, atol=0.0)
+
+
+def test_ef_every_discarded_bit_eventually_ships():
+    # sum(wire_t) + e_T == sum(x_t): error feedback conserves mass
+    codec = Int8Codec()
+    key = jax.random.PRNGKey(0)
+    e = jnp.zeros(64)
+    total_x = jnp.zeros(64)
+    total_wire = jnp.zeros(64)
+    for t in range(50):
+        x = jax.random.normal(jax.random.fold_in(key, t), (64,))
+        wire, e = ef_compensate(codec, x, e)
+        total_x += x
+        total_wire += wire
+    np.testing.assert_allclose(np.asarray(total_wire + e),
+                               np.asarray(total_x), rtol=1e-4, atol=1e-4)
+
+
+def test_ef_residual_norm_bounded_int8():
+    # int8 roundtrip is a contraction, so ||e_t|| stays O(sup||x||)
+    codec = Int8Codec()
+    key = jax.random.PRNGKey(1)
+    e = jnp.zeros(128)
+    norms = []
+    for t in range(200):
+        x = jax.random.normal(jax.random.fold_in(key, t), (128,))
+        _, e = ef_compensate(codec, x, e)
+        norms.append(float(jnp.linalg.norm(e)))
+    sup_x = float(jnp.sqrt(128.0)) * 5.0     # generous sup ||x||
+    assert max(norms) < sup_x
+    # and it does not trend: the last quarter is no worse than the first
+    q = len(norms) // 4
+    assert max(norms[-q:]) < 2.0 * max(norms[:q]) + 1e-6
+
+
+def test_ef_init_and_norms_shapes():
+    e = ef_init(6, 32)
+    assert e.shape == (6, 32) and float(jnp.sum(jnp.abs(e))) == 0.0
+    assert ef_norms(e).shape == (6,)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10 ** 6), dim=st.integers(2, 96),
+           scale=st.floats(0.1, 100.0), steps=st.integers(5, 40))
+    def test_ef_residual_bounded_property(seed, dim, scale, steps):
+        """||e|| never exceeds the contraction bound (1-δ)/δ · sup||x||
+        for any seeded int8 stream; δ for per-tensor int8 is ~1/127 of
+        the max entry, so a very loose multiple of sup||x|| suffices."""
+        codec = Int8Codec()
+        key = jax.random.PRNGKey(seed)
+        e = jnp.zeros(dim)
+        sup = 0.0
+        for t in range(steps):
+            x = scale * jax.random.normal(jax.random.fold_in(key, t),
+                                          (dim,))
+            sup = max(sup, float(jnp.linalg.norm(x)))
+            _, e = ef_compensate(codec, x, e)
+            assert float(jnp.linalg.norm(e)) <= 0.5 * sup + 1e-6
+except ImportError:                    # hypothesis is a test extra
+    pass
+
+
+# ---------------------------------------------------------------------------
+# TopKCodec validation (regression: bad k used to fail deep in pack)
+# ---------------------------------------------------------------------------
+
+
+def test_topk_codec_rejects_bad_k():
+    for bad in (0, -3, 1.5, "8", True):
+        with pytest.raises(ValueError, match="scenario.comm.topk"):
+            TopKCodec(k=bad)
+
+
+def test_topk_codec_k_above_dim_clamps_end_to_end():
+    vec = jnp.arange(1.0, 9.0)                 # d=8
+    codec = TopKCodec(k=64)
+    out = codec.roundtrip(vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vec))
+    assert int(codec.vector_bits(8)) == 8 * (32 + 32)   # priced at d, not k
+
+
+def test_topk_spec_validation_reaches_cli_path():
+    from repro.comm import resolve
+    with pytest.raises(ValueError, match="scenario.comm.topk"):
+        resolve(CommSpec(codec="topk", topk=0))
+
+
+# ---------------------------------------------------------------------------
+# Trainer integration: static is bitwise, adaptive job replays
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess(body: str):
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+JOB = os.path.join(os.path.dirname(__file__), "..", "experiments", "jobs",
+                   "adaptive_lossy.json")
+
+
+def test_static_policy_is_bitwise_on_trainer():
+    """policy=static emits events but must not steer: the loss/bits
+    trajectory is bit-for-bit the no-policy run's, fp32 and int8."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.comm import resolve
+        from repro.comm.policy import resolve_policy
+        from repro.core import costfns
+        from repro.launch.engine import (EchoDpStrategy, Trainer,
+                                         TrainerConfig, TrainSettings)
+        from repro.optim import sgd
+        from repro.run.config import CommSpec
+
+        n, d, K, rounds = 8, 128, 4, 8
+        cost = costfns.quadratic(jax.random.PRNGKey(0), d=d, mu=0.5,
+                                 L=1.0, sigma=0.0)
+
+        def loss_fn(values, batch):
+            w = values["w"]
+            return cost.value(w) + w @ jnp.mean(batch["eps"], 0), {}
+
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def drive(codec, use_policy):
+            spec = CommSpec(channel="lossy", codec=codec, drop_prob=0.1,
+                            seed=3, policy="static")
+            comm = resolve(spec)
+            pol = resolve_policy(spec) if use_policy else None
+            settings = TrainSettings(aggregator="cgc", f=1, echo_k=K,
+                                     echo_r=0.9, comm=comm, policy=pol)
+            tr = Trainer(EchoDpStrategy(loss_fn=loss_fn), None, sgd(0.02),
+                         settings, mesh, n, TrainerConfig(log_every=10**9),
+                         printer=lambda s: None)
+            state = tr.init_state({"w": jnp.ones((d,)) * 2.0})
+            traj = []
+            with jax.set_mesh(mesh):
+                for s in range(rounds):
+                    key = jax.random.fold_in(jax.random.PRNGKey(7), s)
+                    batch = {"eps": (10.0 if s == 4 else 1e-4)
+                             * jax.random.normal(key, (n, d))}
+                    state, rec = tr.run_round(state, batch)
+                    traj.append((rec["loss"], rec["bits"],
+                                 rec["all_echo"]))
+            return traj
+
+        for codec in ("fp32", "int8"):
+            assert drive(codec, False) == drive(codec, True), codec
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_adaptive_lossy_job_replays_decision_for_decision(tmp_path):
+    """The seeded adaptive job run twice produces identical bits,
+    codec/echo_r decision and loss trajectories."""
+    out = _run_subprocess(f"""
+        import json
+        from repro import run
+
+        base = run.RunConfig.load({str(JOB)!r})
+        base = run.apply_overrides(
+            base, ["train.steps=8", "runs_root=" + {str(tmp_path)!r}])
+
+        results = [run.train(base) for _ in range(2)]
+        trajs = []
+        for res in results:
+            recs = [json.loads(l) for l in
+                    open(res.metrics_path).read().splitlines()]
+            trajs.append([(r["bits"], r["bits_cumulative"], r["loss"],
+                           r.get("codec"), r.get("echo_r"),
+                           r["all_echo"]) for r in recs])
+        assert trajs[0] == trajs[1], trajs     # seeded: replays exactly
+        assert len(trajs[0]) == 8
+        s = results[0].summary
+        assert s["policy"] == "adaptive_echo"
+        assert "codec_final" in s and "echo_r_final" in s
+        print("OK", s["codec_switches"], s["echo_r_final"])
+    """)
+    assert "OK" in out
+
+
+def test_protocol_run_training_policy_and_ef(tmp_path):
+    """core.protocol.run_training: static stays bitwise, the dynamic
+    path reports decisions, and EF threads the slot loop."""
+    import dataclasses
+
+    from repro.comm import CommLedger, resolve
+    from repro.core import byzantine, costfns
+    from repro.core.protocol import ProtocolConfig, run_training
+
+    key = jax.random.PRNGKey(0)
+    d, n, f = 16, 8, 1
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.05)
+    cfg = ProtocolConfig(n=n, f=f, r=0.15, eta=0.02)
+    byz = jnp.zeros(n, bool).at[:f].set(True)
+    spec = CommSpec(channel="lossy", codec="int8", drop_prob=0.2, seed=3)
+    comm = resolve(spec)
+    args = (cfg, cost, byzantine.no_attack, byz, key, jnp.ones(d) * 2.0)
+
+    base = run_training(*args, rounds=6, comm=comm)
+    static = run_training(*args, rounds=6, comm=comm,
+                          policy=resolve_policy(spec))
+    np.testing.assert_array_equal(np.asarray(base["w_final"]),
+                                  np.asarray(static["w_final"]))
+
+    spec_dyn = dataclasses.replace(spec, policy="channel_aware",
+                                   drop_prob=0.4, ef=True)
+    led = CommLedger()
+    dyn = run_training(*args, rounds=10, comm=resolve(spec_dyn),
+                       ledger=led, policy=resolve_policy(spec_dyn),
+                       error_feedback=True)
+    assert led.rounds == 10
+    assert dyn["codec_switches"] >= 1          # 40% drops force a step
+    assert dyn["bits"].shape == (10,)
+
+    ef_run = run_training(*args, rounds=6, comm=comm, error_feedback=True)
+    assert float(ef_run["dist2"][-1]) < float(ef_run["dist2"][0])
+
+
+# ---------------------------------------------------------------------------
+# Report CLI: the comm section
+# ---------------------------------------------------------------------------
+
+
+def test_report_renders_comm_section(tmp_path):
+    from repro.obs.report import render
+
+    events = [
+        {"kind": "comm.policy.decision", "step": 2, "policy":
+         "channel_aware", "codec": "topk", "echo_r": 0.9},
+        {"kind": "comm.policy.round", "step": 0, "policy": "channel_aware",
+         "codec": "int8", "echo_r": 0.9, "bits": 9000, "echoed": True,
+         "attempted": True, "echo_drops": 0, "bits_cumulative": 9000,
+         "fp32_baseline_cumulative": 32000, "loss": 5.0},
+        {"kind": "comm.policy.round", "step": 1, "policy": "channel_aware",
+         "codec": "topk", "echo_r": 0.9, "bits": 4000, "echoed": False,
+         "attempted": True, "echo_drops": 2, "bits_cumulative": 13000,
+         "fp32_baseline_cumulative": 64000, "loss": 4.0},
+    ]
+    data = {"kind": "train",
+            "summary": {"policy": "channel_aware", "codec_switches": 1,
+                        "codec_final": "topk", "echo_r_final": 0.9},
+            "obs": {}, "policy_events": events}
+    text = render(data)
+    assert "-- comm policy --" in text
+    assert "channel_aware" in text
+    assert "codec switches 1" in text
+    assert "decision @2" in text
+    assert "int8 x1" in text and "topk x1" in text
+    assert "fp32 all-raw" in text and "79.7% saved" in text
+
+
+def test_report_loads_policy_events_from_run_dir(tmp_path):
+    from repro.obs.report import load_run
+
+    run_dir = tmp_path / "run"
+    run_dir.mkdir()
+    (run_dir / "summary.json").write_text(json.dumps(
+        {"kind": "train", "summary": {"policy": "static"}, "obs": {}}))
+    lines = [json.dumps({"kind": "comm.policy.decision", "step": 0,
+                         "policy": "static", "codec": "fp32",
+                         "echo_r": 0.9}),
+             json.dumps({"kind": "train.profile_start", "dir": "x"}),
+             "{not json"]
+    (run_dir / "events.jsonl").write_text("\n".join(lines) + "\n")
+    data = load_run(str(run_dir))
+    assert len(data["policy_events"]) == 1     # filtered + tolerant
+    assert data["policy_events"][0]["codec"] == "fp32"
+
+
+def test_report_no_comm_section_without_policy():
+    from repro.obs.report import render
+
+    text = render({"kind": "train", "summary": {"rounds": 3}, "obs": {}})
+    assert "-- comm policy --" not in text
