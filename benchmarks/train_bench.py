@@ -9,7 +9,7 @@ functions of the seeded run (decisions have wide margins), so they gate
 cleanly across machines; wall-clock per round rides along as
 information only.
 
-The remat sweep (DESIGN.md §14 HC2) runs the reduced LM through the
+The remat sweep (DESIGN.md §16 HC2) runs the reduced LM through the
 replicated strategy under both ``TrainSettings.remat`` policies —
 ``full`` (recompute everything in backward) and ``save_psum`` (keep
 cross-worker psum results) — in one process, and reports the loss-match

@@ -35,8 +35,8 @@ from .policy import (CommDecision, CommPolicy, PolicyContext,
                      resolve_policy)
 from .wire import (BITS_PER_FLOAT, FP32, MSG_ECHO, MSG_RAW, MSG_SILENT,
                    Bf16Codec, Codec, EchoMsg, Fp32Codec, Int8Codec, Message,
-                   RawGradientMsg, SilentMsg, TopKCodec, messages_from_round,
-                   payload_bits)
+                   RawGradientMsg, Sign1Codec, SilentMsg, TopKCodec,
+                   messages_from_round, payload_bits)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +88,8 @@ __all__ = [
     "CommDecision", "CommLedger", "CommPolicy", "DEFAULT_COMM", "EchoMsg",
     "Fp32Codec", "IdealBroadcast", "Int8Codec", "LossyBroadcast", "Message",
     "MeteredBroadcast", "PolicyContext", "RawGradientMsg", "RoundObservation",
-    "SilentMsg", "StaticPolicy", "TopKCodec", "echo_round_bits",
+    "Sign1Codec", "SilentMsg", "StaticPolicy", "TopKCodec",
+    "echo_round_bits",
     "ef_compensate", "ef_init", "messages_from_round", "payload_bits",
     "raw_round_bits", "resolve", "resolve_policy",
 ]

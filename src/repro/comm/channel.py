@@ -76,7 +76,26 @@ class Channel:
         return state._replace(bits_used=state.bits_used + bits), \
             jnp.asarray(True)
 
+    def price(self, bits):
+        """Bits a transmission of ``bits`` payload bits actually costs
+        on this medium (relay channels multiply by the copy count;
+        single-hop channels return the payload unchanged)."""
+        return bits
+
+    def deliver(self, state: ChannelState, slot, vec: jax.Array
+                ) -> jax.Array:
+        """What the *server* decodes from slot ``slot``'s reconstructed
+        vector — the hook a routed channel uses to model Byzantine-relay
+        corruption (``repro.net.relay``). Identity on single-hop
+        channels: the server is in radio range."""
+        return vec
+
     # --- host-side hooks for the coarse echo-DP driver ---------------
+
+    def price_factor(self) -> int:
+        """Per-message copy multiplier of :meth:`price` (host-side; the
+        coarse driver scales its round bits by it)."""
+        return 1
 
     def round_echo_drops(self, round_index: int, n: int) -> int:
         """How many of the round's n echo broadcasts fade (deterministic

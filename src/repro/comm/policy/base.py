@@ -42,7 +42,7 @@ from repro.run.registry import POLICIES
 # The codec ladder the adaptive policies step along, richest first.
 # Order is the control knob: stepping "down" (right) trades gradient
 # fidelity for fewer bits on the wire.
-CODEC_LADDER = ("fp32", "bf16", "int8", "topk")
+CODEC_LADDER = ("fp32", "bf16", "int8", "topk", "sign1")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -196,6 +196,40 @@ class TopKCodec(Codec):
         return kk * (BITS_PER_FLOAT + 32)      # value + int32 index
 
 
+@dataclasses.dataclass(frozen=True)
+class Sign1Codec(Codec):
+    """1-bit sign compression (Jin et al., arXiv:1902.10336): one packed
+    sign bit per element plus a single fp32 scale — the mean absolute
+    value, the L1-norm-preserving choice of scaled SIGNSGD. The deepest
+    rung of the codec ladder: 32x fewer payload bits than fp32, with all
+    magnitude information collapsed to one scalar (error feedback is the
+    intended companion, exactly as for int8/topk).
+
+    A length-1 vector roundtrips to ``sign * |v|`` — exact up to the
+    sign convention — so the protocol's echo norm-ratio scalar survives
+    this codec unharmed; the coefficient vector does not, which is the
+    point of the scenario axis.
+    """
+
+    name: ClassVar[str] = "sign1"
+
+    def encode(self, vec):
+        vec = jnp.asarray(vec, jnp.float32)
+        bits = jnp.packbits((vec >= 0).astype(jnp.uint8))
+        scale = jnp.mean(jnp.abs(vec), keepdims=True)
+        return (bits, scale.astype(jnp.float32))
+
+    def decode(self, payload, m):
+        bits, scale = payload
+        signs = jnp.unpackbits(bits, count=m).astype(jnp.float32)
+        return scale * (signs * 2.0 - 1.0)
+
+    def vector_bits(self, m):
+        # packed sign bytes + the shared fp32 scale; works on python
+        # ints and traced ranks alike (// is floor_divide in both).
+        return 8 * ((m + 7) // 8) + BITS_PER_FLOAT
+
+
 # Registry entries are builders ``(spec) -> Codec``: ``repro.comm.resolve``
 # calls CODECS[name](spec) so parametrised codecs read their knobs off the
 # job's CommSpec while the plain ones ignore it.
@@ -219,6 +253,11 @@ def _build_int8(spec=None) -> Codec:
 @CODECS.register("topk")
 def _build_topk(spec=None) -> Codec:
     return TopKCodec(k=getattr(spec, "topk", 32) if spec is not None else 32)
+
+
+@CODECS.register("sign1")
+def _build_sign1(spec=None) -> Codec:
+    return Sign1Codec()
 
 
 FP32 = Fp32Codec()

@@ -42,6 +42,10 @@ class AttackPlan:
     echo_x:     (n, n) forged coefficients.
     echo_ref:   (n, n) bool forged reference set I (may point at unheard
                 workers -> server detection).
+    jam:        (n,) bool — worker spends its radio on jamming instead of
+                (or besides) its own slot: every *honest* slot of the
+                round is unverifiable/unoverhearable, as if faded
+                (``repro.net.attacks.echo_jam``). All-False by default.
     """
 
     raw: jax.Array
@@ -49,6 +53,7 @@ class AttackPlan:
     echo_k: jax.Array
     echo_x: jax.Array
     echo_ref: jax.Array
+    jam: jax.Array
 
 
 AttackFn = Callable[..., AttackPlan]
@@ -61,6 +66,7 @@ def _default_plan(n: int, d: int, raw: jax.Array) -> AttackPlan:
         echo_k=jnp.zeros((n,)),
         echo_x=jnp.zeros((n, n)),
         echo_ref=jnp.zeros((n, n), bool),
+        jam=jnp.zeros((n,), bool),
     )
 
 

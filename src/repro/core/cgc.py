@@ -59,3 +59,46 @@ def cgc_aggregate(G: jax.Array, f: int) -> jax.Array:
     from repro.kernels import ops
     agg, _, _ = ops.cgc_fused_aggregate(G, f)
     return agg
+
+
+def cgc_aggregate_known_bad(G: jax.Array, f: int,
+                            bad: jax.Array) -> jax.Array:
+    """CGC aggregate with *known*-Byzantine rows excluded from the clip
+    order statistic.
+
+    ``bad`` marks workers the server has already ruled out — timed out
+    (never received) or provably detected. Their rows of ``G`` are zero,
+    and counting those zero norms in the (n-f)-th-smallest statistic is
+    wrong: at the n = f + 1 edge (every Byzantine worker crashed) the
+    threshold collapses to 0 and the lone honest gradient is silently
+    scaled to nothing — training stalls while every value stays finite.
+
+    The fix maps known-bad norms to +inf before the sort. With k bad
+    rows the (n-f)-th smallest of {finite norms} ∪ {inf}^k is exactly
+    the (n'-f')-th smallest of the n' = n-k live norms with
+    f' = f - k — CGC on the reduced set with the residual fault budget.
+    Once k > f the threshold is +inf: no clipping (the filter has no
+    guarantee left; degrading to the plain sum of live gradients beats
+    zeroing them). With no bad rows a ``lax.cond`` takes the untouched
+    :func:`cgc_aggregate` branch, so clean rounds keep the fused-kernel
+    path and its exact values.
+    """
+    from repro.kernels import ops
+    n = G.shape[0]
+    if not 0 <= f < n:
+        raise ValueError(f"need 0 <= f < n, got f={f}, n={n}")
+
+    def masked(G_):
+        norms = jnp.linalg.norm(G_, axis=-1)
+        thr = jnp.sort(jnp.where(bad, jnp.inf, norms))[n - f - 1]
+        # thr = +inf (more bad rows than f) makes every ratio +inf and
+        # min(1, .) keeps every scale finite at 1: plain sum, no NaNs.
+        scales = jnp.minimum(1.0, thr / jnp.maximum(norms, 1e-12))
+        out = ops.scale_rows(G_, scales)
+        return jnp.sum(
+            out.astype(jnp.result_type(G_.dtype, scales.dtype)), axis=0)
+
+    def clean(G_):
+        return cgc_aggregate(G_, f)
+
+    return jax.lax.cond(jnp.any(bad), masked, clean, G)

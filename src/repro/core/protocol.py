@@ -26,9 +26,21 @@ reference buffer keyed by broadcaster ID and snapshot its mask per slot.
 so the reference set stays shared — it just grows more slowly. The
 independence test runs on the sender-side projection; quantization noise is
 treated as preserving independence.)
+
+That shared-mask argument holds exactly when the hearing graph is complete.
+A partial topology (``repro.net``, DESIGN.md §15) breaks it: worker j only
+overhears the raws its radio reaches, so R_j really is per-worker. Passing
+``net=`` (a :class:`repro.net.HearingGraph`) switches the slot loop to an
+(n, n) per-worker mask table — each sender decides and echoes against its
+own mask, each receiver runs its own independence test, and the server
+(which hears every uplink slot regardless of worker-to-worker reach)
+additionally detects echoes referencing workers outside the sender's
+hearing set. ``net=None`` or a complete graph keeps the exact shared-mask
+code path, jaxpr and all.
 """
 from __future__ import annotations
 
+import inspect
 from functools import partial
 from typing import Callable, NamedTuple, Optional, Tuple
 
@@ -40,7 +52,7 @@ from repro.comm import ChannelState, CommConfig, CommLedger, DEFAULT_COMM
 
 from . import aggregators as agg_lib
 from .byzantine import AttackPlan
-from .cgc import cgc_aggregate
+from .cgc import cgc_aggregate, cgc_aggregate_known_bad
 from .echo import (echo_decision_from_projection, independent_from_projection,
                    project_onto_span, reconstruct_echo, wire_norm_ratio)
 from .types import (MSG_ECHO, MSG_RAW, MSG_SILENT, ProtocolConfig, RoundStats,
@@ -54,7 +66,9 @@ class CommState(NamedTuple):
     received: jax.Array   # (n,) bool
     detected: jax.Array   # (n,) bool
     R: jax.Array          # (n, d) overheard raw gradients (row = sender ID)
-    rmask: jax.Array      # (n,) bool — rows of R that are in the reference set
+    rmask: jax.Array      # (n,) bool shared reference mask — or (n, n)
+                          # per-worker masks (rmask[j] = worker j's view)
+                          # when a partial hearing graph is threaded in
     bits: jax.Array       # (n,) float bits transmitted per worker
     echoed: jax.Array     # (n,) bool — worker sent an echo message
     faded: jax.Array      # (n,) bool — the channel faded this worker's slot
@@ -88,6 +102,12 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     # (the paper's reliability assumption); a faded raw still reaches the
     # server but is NOT overheard, shrinking the shared reference set.
     chan, faded = channel.fade(st.chan, i)
+    # Jamming (net/attacks.echo_jam): a worker spending its radio on noise
+    # blankets every *other* slot — same observable semantics as a fade
+    # (echoes unverifiable, raws not overheard); the uplink itself is
+    # directional enough to survive, so the server still receives.
+    jammed = jnp.any(plan.jam & byz_mask) & ~is_byz
+    faded = faded | jammed
     fellback = (mode == MSG_ECHO) & faded
     mode = jnp.where(fellback, MSG_RAW, mode)
 
@@ -132,6 +152,7 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
         jnp.where(is_raw,
                   jnp.where(fellback, echo_cost + raw_cost, raw_cost),
                   0.0))
+    attempt = channel.price(attempt)   # relay fabrics multiply the copies
     chan, ok = channel.admit(chan, attempt)
     mode = jnp.where(ok, mode, MSG_SILENT)   # over budget: server times out
     is_raw = is_raw & ok
@@ -146,6 +167,7 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
     g_tilde = jnp.where(is_raw, raw_wire,
                         jnp.where(is_echo & ~bad_ref, g_echo,
                                   jnp.zeros((d,), grads.dtype)))
+    g_tilde = channel.deliver(st.chan, i, g_tilde)
     G = st.G.at[i].set(g_tilde)
     received = st.received.at[i].set(mode != MSG_SILENT)
     detected = st.detected.at[i].set(detected_i)
@@ -170,6 +192,119 @@ def _slot(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
                      faded_acc, chan, ef)
 
 
+def _slot_net(i: jax.Array, st: CommState, *, cfg: ProtocolConfig,
+              grads: jax.Array, byz_mask: jax.Array, plan: AttackPlan,
+              comm: CommConfig, hear: jax.Array,
+              use_ef: bool = False) -> CommState:
+    """One TDMA slot under a partial hearing graph.
+
+    Same protocol as :func:`_slot` with per-worker reference sets:
+    ``st.rmask`` is (n, n) with row j = worker j's view, ``hear[j, i]``
+    says worker j's radio reaches worker i. The sender decides and
+    echoes against its OWN mask; every receiver runs its own
+    independence test on the raws it actually overhears; and the server
+    — which knows the topology — additionally flags echoes referencing
+    workers outside the sender's hearing set (the paper's lines 36-37
+    detection generalized to the graph).
+    """
+    n, d = grads.shape
+    g_i = grads[i]
+    is_byz = byz_mask[i]
+    codec, channel = comm.codec, comm.channel
+    mask_i = st.rmask[i]                    # sender's own reference view
+
+    # --- Worker i decides what to broadcast (lines 14-24) ----------------
+    raw_msg = jnp.where(is_byz, plan.raw[i], g_i)
+    x_proj, proj = project_onto_span(st.R, mask_i, raw_msg, cfg.ridge)
+    dec = echo_decision_from_projection(x_proj, proj, mask_i, raw_msg,
+                                        cfg.r)
+    honest_mode = jnp.where(dec.send_echo, MSG_ECHO, MSG_RAW)
+    mode = jnp.where(is_byz, plan.mode[i], honest_mode).astype(jnp.int32)
+
+    # --- Channel: per-slot fading + jamming -------------------------------
+    chan, faded = channel.fade(st.chan, i)
+    jammed = jnp.any(plan.jam & byz_mask) & ~is_byz
+    faded = faded | jammed
+    fellback = (mode == MSG_ECHO) & faded
+    mode = jnp.where(fellback, MSG_RAW, mode)
+
+    # --- Wire coding ------------------------------------------------------
+    echo_ref = jnp.where(is_byz, plan.echo_ref[i], mask_i)
+    echo_x = jnp.where(is_byz, plan.echo_x[i], dec.x)
+    ef_row = st.ef[i]
+    if codec.lossless:
+        raw_wire = raw_msg
+        echo_k = jnp.where(is_byz, plan.echo_k[i], dec.k)
+    else:
+        if use_ef:
+            compensated = raw_msg + ef_row
+            raw_wire = codec.roundtrip(compensated)
+            ef_row = compensated - raw_wire
+        else:
+            raw_wire = codec.roundtrip(raw_msg)
+        echo_x = codec.roundtrip(echo_x)
+        k_honest = wire_norm_ratio(st.R, mask_i, echo_x, raw_msg)
+        echo_k = codec.roundtrip(
+            jnp.where(is_byz, plan.echo_k[i], k_honest)[None])[0]
+
+    is_raw = mode == MSG_RAW
+    is_echo = mode == MSG_ECHO
+
+    # --- Bit pricing + budget admission -----------------------------------
+    rank = jnp.sum(echo_ref & st.received)
+    raw_cost = jnp.float32(codec.raw_msg_bits(d))
+    echo_cost = jnp.asarray(codec.echo_msg_bits(n, rank)).astype(jnp.float32)
+    attempt = jnp.where(
+        is_echo, echo_cost,
+        jnp.where(is_raw,
+                  jnp.where(fellback, echo_cost + raw_cost, raw_cost),
+                  0.0))
+    attempt = channel.price(attempt)
+    chan, ok = channel.admit(chan, attempt)
+    mode = jnp.where(ok, mode, MSG_SILENT)
+    is_raw = is_raw & ok
+    is_echo = is_echo & ok
+    bits_i = jnp.where(ok, attempt, 0.0)
+
+    # --- Server processes the message -------------------------------------
+    # Topology-aware detection: an echo referencing a worker the sender
+    # could not have heard (graph edge absent OR slot not received) is
+    # provably Byzantine. Honest masks are built from overheard slots
+    # within hearing range, so they never trip this.
+    bad_ref = jnp.any(echo_ref & (~st.received | ~hear[i]))
+    detected_i = is_echo & bad_ref
+    g_echo = reconstruct_echo(st.G, echo_ref & st.received, echo_k, echo_x)
+    g_tilde = jnp.where(is_raw, raw_wire,
+                        jnp.where(is_echo & ~bad_ref, g_echo,
+                                  jnp.zeros((d,), grads.dtype)))
+    g_tilde = channel.deliver(st.chan, i, g_tilde)
+    G = st.G.at[i].set(g_tilde)
+    received = st.received.at[i].set(mode != MSG_SILENT)
+    detected = st.detected.at[i].set(detected_i)
+
+    # --- Overhearing, per receiver (lines 26-31 under the graph) ----------
+    # Each worker j that hears i runs ITS OWN independence test against
+    # its own mask. The shared R buffer stores the wire payload once
+    # (row = sender ID, identical for all receivers); membership is the
+    # per-worker business, so it lives entirely in rmask[:, i].
+    indep = jax.vmap(
+        lambda m: independent_from_projection(
+            project_onto_span(st.R, m, raw_msg, cfg.ridge)[1],
+            m, raw_msg, cfg.indep_tol))(st.rmask)          # (n,)
+    on_air = is_raw & ~faded & ok
+    add = on_air & indep & hear[:, i]       # hear[j, i]: j overhears i
+    R = jnp.where(on_air, st.R.at[i].set(raw_wire), st.R)
+    rmask = st.rmask.at[:, i].set(add | st.rmask[:, i])
+
+    bits = st.bits.at[i].set(bits_i)
+    echoed = st.echoed.at[i].set(is_echo)
+    faded_acc = st.faded.at[i].set(faded)
+    ef = jnp.where(use_ef & is_raw, st.ef.at[i].set(ef_row), st.ef)
+
+    return CommState(G, received, detected, R, rmask, bits, echoed,
+                     faded_acc, chan, ef)
+
+
 def communication_phase(
     cfg: ProtocolConfig,
     grads: jax.Array,
@@ -178,6 +313,7 @@ def communication_phase(
     comm: Optional[CommConfig] = None,
     chan_key: Optional[jax.Array] = None,
     ef: Optional[jax.Array] = None,
+    net=None,
 ):
     """Run the n TDMA slots; return the server view and round statistics.
 
@@ -190,32 +326,50 @@ def communication_phase(
     compensated pre-encode and the codec's loss carried to its next raw
     slot. When given, the return value grows to
     ``(server, stats, ef_next)`` — callers that never pass it keep the
-    two-tuple contract (and the exact pre-policy jaxpr)."""
+    two-tuple contract (and the exact pre-policy jaxpr).
+
+    ``net`` (a :class:`repro.net.HearingGraph`, trace-time static)
+    restricts worker-to-worker overhearing. ``None`` or a complete graph
+    keeps the exact shared-reference-mask slot body; anything partial
+    switches to the per-worker (n, n) mask variant (:func:`_slot_net`).
+    """
     comm = comm if comm is not None else DEFAULT_COMM
     n, d = grads.shape
+    shared = net is None or net.is_complete
+    if net is not None and net.n != n:
+        raise ValueError(f"hearing graph is for n={net.n} workers, "
+                         f"round has n={n}")
     st = CommState(
         G=jnp.zeros((n, d), grads.dtype),
         received=jnp.zeros((n,), bool),
         detected=jnp.zeros((n,), bool),
         R=jnp.zeros((n, d), grads.dtype),
-        rmask=jnp.zeros((n,), bool),
+        rmask=jnp.zeros((n,) if shared else (n, n), bool),
         bits=jnp.zeros((n,), jnp.float32),
         echoed=jnp.zeros((n,), bool),
         faded=jnp.zeros((n,), bool),
         chan=comm.channel.init(chan_key),
         ef=ef if ef is not None else jnp.zeros((n, d), grads.dtype),
     )
-    body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask, plan=plan,
-                   comm=comm, use_ef=ef is not None)
+    if shared:
+        body = partial(_slot, cfg=cfg, grads=grads, byz_mask=byz_mask,
+                       plan=plan, comm=comm, use_ef=ef is not None)
+    else:
+        body = partial(_slot_net, cfg=cfg, grads=grads, byz_mask=byz_mask,
+                       plan=plan, comm=comm, hear=net.matrix(),
+                       use_ef=ef is not None)
     st = jax.lax.fori_loop(0, n, body, st)
 
     server = ServerState(G=st.G, received=st.received, detected=st.detected)
+    # rank_R under per-worker masks: rows referenced by at least one view
+    # (the shared-path statistic is the same reduction on a 1-D mask).
+    rmask_any = st.rmask if shared else jnp.any(st.rmask, axis=0)
     stats = RoundStats(
         bits_sent=st.bits,
         echo_sent=st.echoed,
         n_echo=jnp.sum(st.echoed.astype(jnp.int32)),
         n_detected=jnp.sum(st.detected.astype(jnp.int32)),
-        rank_R=jnp.sum(st.rmask.astype(jnp.int32)),
+        rank_R=jnp.sum(rmask_any.astype(jnp.int32)),
         n_faded=jnp.sum(st.faded.astype(jnp.int32)),
     )
     if ef is not None:
@@ -226,14 +380,22 @@ def communication_phase(
 def aggregate(server: ServerState, f: int, aggregator: str = "cgc"
               ) -> jax.Array:
     """Aggregation phase. ``cgc`` is the paper's (filter + sum, line 42-44);
-    the rest are baselines operating on the same reconstructed table."""
+    the rest are baselines operating on the same reconstructed table.
+
+    Workers the server *knows* are bad — timed out or provably detected
+    — are excluded from the CGC order statistic
+    (:func:`~repro.core.cgc.cgc_aggregate_known_bad`): their zero rows
+    must not drag the clip threshold to 0 at the n = f + 1 crash edge.
+    Clean rounds take the untouched fused-kernel branch.
+    """
     G = jnp.where(server.received[:, None], server.G, 0.0)
     if aggregator == "cgc":
-        return cgc_aggregate(G, f)
+        bad = ~server.received | server.detected
+        return cgc_aggregate_known_bad(G, f, bad)
     return agg_lib.AGGREGATORS[aggregator](G, f)
 
 
-@partial(jax.jit, static_argnames=("cfg", "aggregator", "comm"))
+@partial(jax.jit, static_argnames=("cfg", "aggregator", "comm", "net"))
 def echo_cgc_round(
     cfg: ProtocolConfig,
     w: jax.Array,
@@ -244,6 +406,7 @@ def echo_cgc_round(
     comm: Optional[CommConfig] = None,
     chan_key: Optional[jax.Array] = None,
     ef: Optional[jax.Array] = None,
+    net=None,
 ):
     """One full Echo-CGC round given precomputed worker gradients.
 
@@ -253,14 +416,18 @@ def echo_cgc_round(
     With an ``ef`` residual array the slot loop runs error-feedback
     compensation and the return grows to
     ``(w_next, server, stats, ef_next)``.
+
+    ``net`` (static, hashable) is the optional partial hearing graph.
     """
     if ef is not None:
         server, stats, ef_next = communication_phase(
-            cfg, grads, byz_mask, plan, comm=comm, chan_key=chan_key, ef=ef)
+            cfg, grads, byz_mask, plan, comm=comm, chan_key=chan_key, ef=ef,
+            net=net)
         g_agg = aggregate(server, cfg.f, aggregator)
         return w - cfg.eta * g_agg, server, stats, ef_next
     server, stats = communication_phase(cfg, grads, byz_mask, plan,
-                                        comm=comm, chan_key=chan_key)
+                                        comm=comm, chan_key=chan_key,
+                                        net=net)
     g_agg = aggregate(server, cfg.f, aggregator)
     w_next = w - cfg.eta * g_agg
     return w_next, server, stats
@@ -306,6 +473,7 @@ def run_training(
     ledger: Optional[CommLedger] = None,
     policy=None,
     error_feedback: bool = False,
+    net=None,
 ):
     """Multi-round driver: Echo-CGC (use_radio) or point-to-point baseline.
 
@@ -321,6 +489,12 @@ def run_training(
     scanned trajectory. ``error_feedback`` threads per-worker residual
     accumulators through the slot loop (lossy codecs only; a no-op —
     zero residuals — under fp32).
+
+    ``net`` (a :class:`repro.net.HearingGraph`) restricts overhearing to
+    the graph; ``None`` keeps the paper's complete single-hop radio.
+    Channel-aware attacks that declare ``channel=`` / ``chan_key=``
+    keyword parameters receive the round's channel object and fading key
+    (signature inspection — attacks without them keep their exact call).
     """
     n = cfg.n
     comm = comm if comm is not None else DEFAULT_COMM
@@ -330,7 +504,7 @@ def run_training(
     if dynamic and use_radio:
         return _run_training_policy(cfg, cost, attack_fn, byz_mask, key,
                                     w0, rounds, aggregator, comm, ledger,
-                                    policy, error_feedback)
+                                    policy, error_feedback, net)
     if policy is not None:
         # static policy on the scanned path: the decision is constant,
         # so it is emitted once up front and the trajectory is bitwise
@@ -340,25 +514,31 @@ def run_training(
                   codec=dec.codec or comm.codec.name,
                   echo_r=dec.echo_r if dec.echo_r is not None else cfg.r)
     use_ef = bool(error_feedback) and use_radio
+    attack_extra = _attack_kwargs(attack_fn)
 
     def one_round(carry, key_t):
         w, ef = carry
         keys = jax.random.split(key_t, n + 1)
         grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys[:n])
         true_grad = cost.grad(w)
-        plan = attack_fn(keys[n], grads, byz_mask, w, true_grad)
+        # fold_in (not a wider split) keeps grads/attack draws
+        # bitwise-identical to the pre-channel code path.
+        chan_key = jax.random.fold_in(key_t, n + 1)
+        extra = {}
+        if "channel" in attack_extra:
+            extra["channel"] = comm.channel
+        if "chan_key" in attack_extra:
+            extra["chan_key"] = chan_key
+        plan = attack_fn(keys[n], grads, byz_mask, w, true_grad, **extra)
         if use_radio:
-            # fold_in (not a wider split) keeps grads/attack draws
-            # bitwise-identical to the pre-channel code path.
-            chan_key = jax.random.fold_in(key_t, n + 1)
             if use_ef:
                 w_next, server, stats, ef = echo_cgc_round(
                     cfg, w, grads, byz_mask, plan, aggregator, comm,
-                    chan_key, ef)
+                    chan_key, ef, net)
             else:
                 w_next, server, stats = echo_cgc_round(
                     cfg, w, grads, byz_mask, plan, aggregator, comm,
-                    chan_key)
+                    chan_key, None, net)
             bits = jnp.sum(stats.bits_sent)
             n_echo = stats.n_echo
             n_det = stats.n_detected
@@ -391,6 +571,20 @@ def run_training(
         with obs.span("protocol.ledger"):
             ledger.record_protocol_trace(trace, n, d, comm.codec)
     return trace
+
+
+def _attack_kwargs(attack_fn) -> frozenset:
+    """Which channel-aware keyword parameters an attack declares.
+
+    Host-side signature inspection (``repro.net.attacks`` docstring):
+    only attacks that ask for ``channel`` / ``chan_key`` get them, so
+    every existing attack keeps its exact call and trajectory.
+    """
+    try:
+        params = inspect.signature(attack_fn).parameters
+    except (TypeError, ValueError):
+        return frozenset()
+    return frozenset(k for k in ("channel", "chan_key") if k in params)
 
 
 def _ladder_codecs(comm: CommConfig):
@@ -428,7 +622,8 @@ def _policy_setup(policy, cfg: ProtocolConfig, comm: CommConfig,
 
 
 def _run_training_policy(cfg, cost, attack_fn, byz_mask, key, w0, rounds,
-                         aggregator, comm, ledger, policy, error_feedback):
+                         aggregator, comm, ledger, policy, error_feedback,
+                         net=None):
     """Dynamic-policy driver: one host-side loop iteration per round.
 
     The per-round body stays jitted (``echo_cgc_round`` caches one
@@ -458,12 +653,19 @@ def _run_training_policy(cfg, cost, attack_fn, byz_mask, key, w0, rounds,
     r_changes = 0
     bits_cum = 0
 
+    attack_extra = _attack_kwargs(attack_fn)
+
     @jax.jit
     def round_inputs(key_t, w):
         keys = jax.random.split(key_t, n + 1)
         grads = jax.vmap(lambda k: cost.stoch_grad(k, w))(keys[:n])
-        plan = attack_fn(keys[n], grads, byz_mask, w, cost.grad(w))
         chan_key = jax.random.fold_in(key_t, n + 1)
+        extra = {}
+        if "channel" in attack_extra:
+            extra["channel"] = comm.channel
+        if "chan_key" in attack_extra:
+            extra["chan_key"] = chan_key
+        plan = attack_fn(keys[n], grads, byz_mask, w, cost.grad(w), **extra)
         return grads, plan, chan_key
 
     w = w0
@@ -503,11 +705,11 @@ def _run_training_policy(cfg, cost, attack_fn, byz_mask, key, w0, rounds,
             if ef is not None:
                 w_next, _, stats, ef = echo_cgc_round(
                     cfg_t, w, grads, byz_mask, plan, aggregator, comm_t,
-                    chan_key, ef)
+                    chan_key, ef, net)
             else:
                 w_next, _, stats = echo_cgc_round(
                     cfg_t, w, grads, byz_mask, plan, aggregator, comm_t,
-                    chan_key)
+                    chan_key, None, net)
             bits = int(np.asarray(jnp.sum(stats.bits_sent)))
             n_echo = int(np.asarray(stats.n_echo))
             n_faded = int(np.asarray(stats.n_faded))

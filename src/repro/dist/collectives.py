@@ -77,7 +77,8 @@ def _gather_leaf(x: jax.Array, axes: Sequence[str]) -> jax.Array:
 # Byzantine injection (testing / resilience experiments)
 # ---------------------------------------------------------------------------
 
-_BYZ_SCALE = {"sign_flip": 1.0, "large_norm": 100.0, "zero": 0.0}
+_BYZ_SCALE = {"sign_flip": 1.0, "large_norm": 100.0, "zero": 0.0,
+              "little_is_enough": 0.33}
 
 
 def inject_byzantine(grads, wid: jax.Array, n_byz: int, mode: str,
@@ -86,7 +87,9 @@ def inject_byzantine(grads, wid: jax.Array, n_byz: int, mode: str,
 
     Mirrors ``core.byzantine``: "sign_flip" sends -scale*g (classic
     descent reversal), "large_norm" sends -scale*g with a huge scale
-    (what CGC's norm clipping neutralises), "zero" crashes silently.
+    (what CGC's norm clipping neutralises), "zero" crashes silently,
+    "little_is_enough" reverses with a sub-unit scale (Baruch et al.) —
+    deliberately small enough that norm clipping never fires on it.
     """
     if mode not in _BYZ_SCALE:
         raise ValueError(f"unknown byzantine mode {mode!r}; "

@@ -989,7 +989,11 @@ class Trainer:
         n = self.n_workers
         d = self._grad_dim(state.values)
         codec, channel, echo_r = self._policy_decide(state.step, d)
-        raw_round = raw_round_bits(codec, n, d)
+        # A routed channel (repro.net.relay) multiplies every message by
+        # its copy count; scaling the baseline too keeps the echo-vs-raw
+        # saving a property of the protocol, not the medium.
+        price = channel.price_factor()
+        raw_round = raw_round_bits(codec, n, d) * price
         record: Dict[str, Any] = {"step": state.step,
                                   "strategy": self.bundle.name}
         echoed = False
@@ -1039,7 +1043,7 @@ class Trainer:
                     basis = roll_basis(state.basis, agg)
                 rolled = True
             bits = round_comm_bits(codec, n, d, K, all_echo and drops == 0,
-                                   attempted)
+                                   attempted) * price
             record.update(all_echo=echoed, basis_rolled=rolled)
             if drops:
                 record["echo_drops"] = drops

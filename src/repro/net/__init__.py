@@ -1,0 +1,98 @@
+"""repro.net — network topology, relay routing and reliable broadcast
+(DESIGN.md §15).
+
+    topology.py  per-worker directed hearing graphs (complete / ring /
+                 random_geometric / explicit) behind the TOPOLOGIES
+                 registry; the protocol slot loop consumes them as
+                 per-worker reference masks
+    relay.py     RelayChannel — multi-hop routed delivery priced into
+                 the CommLedger, with direct / Dolev / Bracha routing
+                 disciplines and Byzantine-relay corruption semantics
+    bracha.py    the SEND/ECHO/READY quorum machinery (host-side
+                 simulation + the plain-relay wrong-accept comparator)
+    attacks.py   channel-aware adversaries (echo_jam / colluding_fade /
+                 little_is_enough) in the shared ATTACKS registry
+
+``resolve_net`` turns a job's ``scenario.net`` section into a
+:class:`HearingGraph` for n workers; ``apply_to_comm`` validates the
+relay axes against the resolved ``CommConfig`` and swaps the relay
+channel in. Both are what ``run.facade.train`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.run.registry import TOPOLOGIES
+
+from .bracha import (BroadcastOutcome, echo_quorum, ready_quorum,
+                     simulate_bracha, simulate_plain_relay)
+from .relay import BROADCASTS, RelayChannel
+from .topology import (HearingGraph, complete_graph, explicit_graph,
+                       random_geometric_graph, ring_graph)
+from . import attacks as _attacks               # noqa: F401  (registry)
+
+
+def resolve_net(spec, n: int) -> HearingGraph:
+    """Build the hearing graph a ``scenario.net`` section describes for
+    ``n`` workers, via the TOPOLOGIES registry."""
+    name = getattr(spec, "topology", "complete") or "complete"
+    try:
+        builder = TOPOLOGIES[name]
+    except KeyError as e:              # did-you-mean text, CLI-friendly
+        raise ValueError(e.args[0]) from None
+    return builder(spec, n)
+
+
+def net_active(spec) -> bool:
+    """Whether a ``scenario.net`` section asks for anything beyond the
+    paper's single-hop complete-graph default."""
+    return (getattr(spec, "topology", "complete") != "complete"
+            or getattr(spec, "relays", 0) > 0
+            or getattr(spec, "byz_relays", 0) > 0
+            or getattr(spec, "broadcast", "direct") != "direct")
+
+
+def apply_to_comm(spec, comm_cfg):
+    """Swap the relay channel into a resolved ``CommConfig`` when the
+    ``scenario.net`` relay axes ask for one; validate the combination.
+
+    Rejected rather than silently ignored (the ``repro.comm.resolve``
+    contract): Byzantine relays or a non-direct broadcast without a
+    relay tier, and a relay tier on top of a non-ideal channel (the
+    relay fabric replaces the broadcast medium, it does not compose
+    with per-slot fading or metering).
+    """
+    relays = int(getattr(spec, "relays", 0))
+    byz_relays = int(getattr(spec, "byz_relays", 0))
+    broadcast = getattr(spec, "broadcast", "direct")
+    if broadcast not in BROADCASTS:
+        raise ValueError(f"scenario.net.broadcast must be one of "
+                         f"{BROADCASTS}, got {broadcast!r}")
+    if relays == 0:
+        if byz_relays:
+            raise ValueError(
+                f"scenario.net.byz_relays={byz_relays} needs a relay "
+                f"tier — set scenario.net.relays > 0")
+        if broadcast != "direct":
+            raise ValueError(
+                f"scenario.net.broadcast={broadcast!r} needs a relay "
+                f"tier — set scenario.net.relays > 0")
+        return comm_cfg
+    if comm_cfg.channel.name != "ideal":
+        raise ValueError(
+            f"scenario.net.relays={relays} replaces the broadcast "
+            f"channel, which is already {comm_cfg.channel.name!r} — "
+            f"set scenario.comm.channel=ideal to route through relays")
+    channel = RelayChannel(
+        seed=getattr(spec, "seed", 0), relays=relays,
+        byz_relays=byz_relays, broadcast=broadcast)
+    return dataclasses.replace(comm_cfg, channel=channel)
+
+
+__all__ = [
+    "BROADCASTS", "BroadcastOutcome", "HearingGraph", "RelayChannel",
+    "apply_to_comm", "complete_graph", "echo_quorum", "explicit_graph",
+    "net_active", "random_geometric_graph", "ready_quorum", "resolve_net",
+    "ring_graph", "simulate_bracha", "simulate_plain_relay",
+]

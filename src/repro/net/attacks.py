@@ -1,0 +1,119 @@
+"""Channel-aware Byzantine attacks (DESIGN.md §15).
+
+The attack zoo in ``core.byzantine`` is value-level: the adversary
+forges gradients or echo messages. These three exploit the *medium*
+instead — ordinary ``ATTACKS`` plugins, so every driver and job file
+reaches them through ``scenario.attack``:
+
+    echo_jam          attackers spend their slots jamming: no honest
+                      broadcast is overheard or verifiable, so the
+                      reference set never forms and every would-be echo
+                      pays the O(d) raw fallback — correctness survives
+                      (the uplink still reaches the server), the paper's
+                      savings do not.
+    colluding_fade    colluding attackers replay the lossy channel's
+                      seeded fade schedule and swing hard (a deep
+                      mean - z*std shift) exactly in fade-heavy rounds,
+                      where the thinned reference set and raw
+                      retransmissions give the aggregate the least
+                      redundancy — staying mild elsewhere to avoid
+                      standing out.
+    little_is_enough  the Baruch et al. shift, variance-calibrated AND
+                      norm-capped to the smallest honest gradient norm,
+                      so it provably lands below the CGC clip threshold
+                      (with <= f attackers the (n-f)-th smallest norm is
+                      at least the smallest honest one) — never clipped,
+                      only outvoted.
+
+``colluding_fade`` takes the channel + this round's fading key as extra
+keyword arguments; ``core.protocol.run_training`` passes them only to
+attacks whose signature asks (signature inspection, so every existing
+attack keeps its exact call and trajectory).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.byzantine import AttackPlan, _default_plan
+from repro.comm.wire import MSG_SILENT
+from repro.run.registry import ATTACKS
+
+
+def _honest_stats(honest: jax.Array, byz_mask: jax.Array):
+    """Mean / std / min-norm over the honest rows only."""
+    h = (~byz_mask).astype(honest.dtype)[:, None]
+    cnt = jnp.maximum(jnp.sum(h), 1.0)
+    mean = jnp.sum(honest * h, 0) / cnt
+    var = jnp.sum(((honest - mean) ** 2) * h, 0) / cnt
+    norms = jnp.linalg.norm(honest, axis=-1)
+    min_norm = jnp.min(jnp.where(byz_mask, jnp.inf, norms))
+    return mean, jnp.sqrt(var), min_norm
+
+
+@ATTACKS.register("echo_jam")
+def echo_jam(key, honest, byz_mask, w, true_grad) -> AttackPlan:
+    """Attackers jam every honest slot and stay silent themselves.
+
+    Jammed slots behave like faded ones (``core.protocol``): an echo
+    cannot be verified so its sender retransmits raw (echo + raw bits on
+    the ledger), and a raw is never overheard, so R stays empty and the
+    echo mechanism is starved for the whole round. The uplink itself
+    still reaches the server — the attack destroys the O(n)-vs-O(d)
+    savings, not convergence.
+    """
+    n, d = honest.shape
+    plan = _default_plan(n, d, honest)
+    return dataclasses.replace(
+        plan, mode=jnp.full((n,), MSG_SILENT, jnp.int32), jam=byz_mask)
+
+
+@ATTACKS.register("colluding_fade")
+def colluding_fade(key, honest, byz_mask, w, true_grad, z: float = 4.0,
+                   channel=None, chan_key=None) -> AttackPlan:
+    """Coordinated shift timed against the lossy fade schedule.
+
+    The fade draws are a deterministic function of (channel seed, round,
+    slot) — public knowledge in the model — so colluders evaluate this
+    round's schedule and pick their amplitude: the full ``z``-deep
+    mean - z*std shift when at least one slot fades (reference set
+    thinned, raws retransmitted), a mild 0.5-std shift otherwise. On a
+    non-lossy channel (or a driver that cannot provide ``chan_key``)
+    the attack degrades to the mild constant shift.
+    """
+    n, d = honest.shape
+    mean, std, _ = _honest_stats(honest, byz_mask)
+    drop = float(getattr(channel, "drop_prob", 0.0)) \
+        if channel is not None else 0.0
+    if chan_key is not None and drop > 0.0:
+        fades = jax.vmap(
+            lambda s: jax.random.bernoulli(
+                jax.random.fold_in(chan_key, s), drop))(jnp.arange(n))
+        zz = jnp.where(jnp.any(fades), z, 0.5)
+    else:
+        zz = jnp.asarray(0.5)
+    bogus = mean - zz * std
+    return _default_plan(n, d, jnp.broadcast_to(bogus, (n, d)))
+
+
+@ATTACKS.register("little_is_enough")
+def little_is_enough(key, honest, byz_mask, w, true_grad, z: float = 1.5
+                     ) -> AttackPlan:
+    """Variance-calibrated shift capped under the CGC clip threshold.
+
+    ``mean - z * std`` (the "A Little Is Enough" direction), rescaled so
+    its norm never exceeds the smallest honest gradient norm. The CGC
+    threshold is the (n-f)-th smallest received norm; with at most f
+    attackers that is >= the smallest honest norm >= this payload's, so
+    the attack is provably never clipped — CGC's guarantee here is only
+    that the n - f honest gradients outvote it in the sum.
+    """
+    n, d = honest.shape
+    mean, std, min_norm = _honest_stats(honest, byz_mask)
+    bogus = mean - z * std
+    bnorm = jnp.linalg.norm(bogus)
+    cap = jnp.where(jnp.isfinite(min_norm), min_norm, bnorm)
+    bogus = bogus * jnp.minimum(1.0, cap / jnp.maximum(bnorm, 1e-30))
+    return _default_plan(n, d, jnp.broadcast_to(bogus, (n, d)))

@@ -1,0 +1,138 @@
+"""Bracha-style reliable broadcast over a Byzantine relay set
+(DESIGN.md §15).
+
+The classic SEND/ECHO/READY protocol (Bracha 1987), instantiated on the
+relay tier of :class:`repro.net.relay.RelayChannel`: the source SENDs
+its value to every relay; each correct relay ECHOes the first SEND it
+sees; on an ECHO quorum (> (R + b) / 2 of the R relays, b Byzantine) a
+relay sends READY; b + 1 READYs *amplify* (a correct relay sends READY
+even without the echo quorum — at least one READY came from a correct
+relay); 2 b + 1 READYs accept. With R >= 3 b + 1 any two ECHO quorums
+intersect in a correct relay, so colluding Byzantine relays can neither
+split correct relays between two values nor push a forged value to
+acceptance.
+
+``simulate_bracha`` runs the whole exchange deterministically
+(host-side, no jax) and returns a :class:`BroadcastOutcome`; it is both
+the unit-testable core of the quorum math and what the train facade
+emits as the run's ``net.broadcast`` event. ``simulate_plain_relay`` is
+the straw-man comparator: a receiver behind a single forwarding relay
+accepts whatever its relay forwards — one Byzantine relay is a wrong
+accept, the failure mode the Bracha tier exists to close.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class BroadcastOutcome:
+    """What the receiver concluded, and what it cost.
+
+    ``accepted`` is the value the receiver delivered (None: no accept);
+    ``safe`` says no *wrong* value was delivered — a no-accept is safe
+    (below R = 3b + 1 Bracha loses liveness, never safety); ``messages``
+    counts every relay-tier message sent (the bit-pricing basis for the
+    relay channel's bracha mode).
+    """
+
+    accepted: Optional[Any]
+    safe: bool
+    messages: int
+    echoes: Dict[Any, int]
+    readies: Dict[Any, int]
+    quorum_echo: int
+    quorum_ready: int
+
+    def as_event(self) -> Dict[str, Any]:
+        """JSON-friendly digest for the ``net.broadcast`` obs event."""
+        return {
+            "accepted": self.accepted, "safe": self.safe,
+            "messages": self.messages,
+            "echoes": {str(k): v for k, v in self.echoes.items()},
+            "readies": {str(k): v for k, v in self.readies.items()},
+            "quorum_echo": self.quorum_echo,
+            "quorum_ready": self.quorum_ready,
+        }
+
+
+def echo_quorum(n_relays: int, byz_relays: int) -> int:
+    """Smallest ECHO count a relay needs before READY: > (R + b) / 2."""
+    return (n_relays + byz_relays) // 2 + 1
+
+
+def ready_quorum(byz_relays: int) -> int:
+    """READY count that accepts: 2 b + 1 (b + 1 amplifies)."""
+    return 2 * byz_relays + 1
+
+
+def simulate_bracha(n_relays: int, byz_relays: int, value: Any = 1,
+                    forged: Any = -1) -> BroadcastOutcome:
+    """One Bracha broadcast of ``value`` while ``byz_relays`` colluding
+    relays push ``forged`` at every step (the strongest equivocation the
+    model allows: they ECHO and READY the forged value unconditionally).
+
+    Deterministic and synchronous: correct relays all hear the SEND, so
+    the interesting question is purely the quorum arithmetic — does the
+    forged value reach acceptance, and does the true one?
+    """
+    if n_relays < 1:
+        raise ValueError(f"need n_relays >= 1, got {n_relays}")
+    if not 0 <= byz_relays <= n_relays:
+        raise ValueError(f"byz_relays must be in [0, {n_relays}], "
+                         f"got {byz_relays}")
+    correct = n_relays - byz_relays
+    q_echo = echo_quorum(n_relays, byz_relays)
+    q_ready = ready_quorum(byz_relays)
+    amplify = byz_relays + 1
+
+    messages = n_relays                       # SEND to every relay
+    # ECHO round: correct relays echo the SEND value, Byzantine relays
+    # echo the forged one.
+    echoes = {value: correct, forged: byz_relays} if byz_relays \
+        else {value: correct}
+    messages += n_relays * n_relays           # each relay echoes to all
+
+    # READY round: a correct relay READYs a value on an echo quorum;
+    # amplification then spreads READY through the correct set once any
+    # b+1 READYs exist (at least one from a correct relay).
+    readies: Dict[Any, int] = {}
+    for v, n_echo in echoes.items():
+        r = byz_relays if v == forged and byz_relays else 0
+        if n_echo >= q_echo:
+            r += correct
+        elif r >= amplify and v == forged:
+            # amplification needs b+1 READYs, but all b forged READYs
+            # come from Byzantine relays — never enough on their own
+            pass
+        readies[v] = r
+    messages += n_relays * n_relays           # READY flood
+
+    accepted = None
+    for v, n_ready in sorted(readies.items(), key=lambda kv: -kv[1]):
+        if n_ready >= q_ready:
+            accepted = v
+            break
+    return BroadcastOutcome(
+        accepted=accepted, safe=accepted is None or accepted == value,
+        messages=messages, echoes=echoes, readies=readies,
+        quorum_echo=q_echo, quorum_ready=q_ready)
+
+
+def simulate_plain_relay(n_relays: int, byz_relays: int, value: Any = 1,
+                         forged: Any = -1) -> BroadcastOutcome:
+    """The unprotected baseline: the receiver trusts the single relay
+    its route picked (route 0 — Byzantine relays occupy the low routes,
+    matching :meth:`repro.net.relay.RelayChannel.deliver`). Any
+    ``byz_relays > 0`` is a wrong accept."""
+    if n_relays < 1:
+        raise ValueError(f"need n_relays >= 1, got {n_relays}")
+    if not 0 <= byz_relays <= n_relays:
+        raise ValueError(f"byz_relays must be in [0, {n_relays}], "
+                         f"got {byz_relays}")
+    delivered = forged if byz_relays > 0 else value
+    return BroadcastOutcome(
+        accepted=delivered, safe=delivered == value,
+        messages=2,                            # SEND + one forward
+        echoes={}, readies={}, quorum_echo=0, quorum_ready=0)

@@ -1,0 +1,115 @@
+"""Multi-hop relay routing as a broadcast :class:`~repro.comm.Channel`
+(DESIGN.md §15).
+
+When the parameter server is out of radio range, every uplink slot is
+forwarded by one of ``relays`` relay nodes (slot i routes through relay
+``i % relays``). Relaying is not free — every forwarded copy is priced
+into the CommLedger through the channel's ``price`` hook — and it is not
+trustworthy: a Byzantine relay can corrupt the payload it forwards.
+Three routing disciplines trade bits for fault tolerance:
+
+    direct   one path per message. Cheapest, zero tolerance: any
+             Byzantine relay on the route corrupts the delivered value
+             (the protocol's ``deliver`` hook flips the sign of the
+             reconstructed gradient server-side — the overhearing
+             workers, in radio range of each other, still hear the
+             uncorrupted broadcast).
+    dolev    Dolev-style redundant routing over ``2 b + 1``
+             node-disjoint relay paths (b = ``byz_relays``): the
+             receiver majority-votes, so delivery is protected whenever
+             ``relays >= 2 * byz_relays + 1``.
+    bracha   Bracha SEND/ECHO/READY authenticated echo over the relay
+             set (``repro.net.bracha``): protected whenever
+             ``relays >= 3 * byz_relays + 1`` (quorum intersection),
+             at the cost of the ECHO + READY floods.
+
+The channel registers as ``"relay"`` in the CHANNELS registry; jobs
+normally reach it through the ``scenario.net.{relays, byz_relays,
+broadcast}`` axes (``repro.net.apply_to_comm``), which validate the
+combination and swap it in for the ideal channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax.numpy as jnp
+
+from repro.comm.channel import Channel
+from repro.run.registry import CHANNELS
+
+BROADCASTS = ("direct", "dolev", "bracha")
+
+
+@dataclasses.dataclass(frozen=True)
+class RelayChannel(Channel):
+    """Routed relay delivery with a configurable routing discipline."""
+
+    name: ClassVar[str] = "relay"
+    relays: int = 2
+    byz_relays: int = 0
+    broadcast: str = "direct"
+
+    def __post_init__(self):
+        if self.relays < 1:
+            raise ValueError(f"RelayChannel needs relays >= 1, "
+                             f"got {self.relays}")
+        if not 0 <= self.byz_relays <= self.relays:
+            raise ValueError(
+                f"byz_relays must be in [0, relays={self.relays}], "
+                f"got {self.byz_relays}")
+        if self.broadcast not in BROADCASTS:
+            raise ValueError(f"unknown relay broadcast "
+                             f"{self.broadcast!r}; known: {BROADCASTS}")
+
+    # --- routing analysis --------------------------------------------
+
+    @property
+    def protected(self) -> bool:
+        """Whether delivery survives ``byz_relays`` Byzantine relays."""
+        if self.byz_relays == 0:
+            return True
+        if self.broadcast == "dolev":
+            return self.relays >= 2 * self.byz_relays + 1
+        if self.broadcast == "bracha":
+            return self.relays >= 3 * self.byz_relays + 1
+        return False                     # direct: any bad relay corrupts
+
+    def price_factor(self) -> int:
+        """Copies of each message on the air: the source uplink plus the
+        relay hops the discipline requires."""
+        if self.broadcast == "dolev":
+            return 1 + (2 * self.byz_relays + 1)
+        if self.broadcast == "bracha":
+            return 1 + 2 * self.relays   # SEND relayed + ECHO/READY floods
+        return 2                         # direct: uplink + one relay hop
+
+    # --- jittable slot-loop hooks ------------------------------------
+
+    def price(self, bits):
+        return bits * jnp.float32(self.price_factor())
+
+    def deliver(self, state, slot, vec):
+        """What the server decodes from slot ``slot``.
+
+        An unprotected route through a Byzantine relay (slot mod relays
+        picks the route) delivers a sign-flipped payload — the worst
+        value-preserving corruption, since it exactly reverses the
+        gradient's contribution while keeping its norm under the CGC
+        clip threshold. Protected disciplines deliver verbatim.
+        """
+        if self.protected:
+            return vec
+        corrupted = (slot % self.relays) < self.byz_relays
+        return jnp.where(corrupted, -vec, vec)
+
+
+@CHANNELS.register("relay")
+def _build_relay(spec=None) -> RelayChannel:
+    if spec is None:
+        return RelayChannel()
+    return RelayChannel(
+        seed=getattr(spec, "seed", 0),
+        relays=int(getattr(spec, "relays", 2)),
+        byz_relays=int(getattr(spec, "byz_relays", 0)),
+        broadcast=getattr(spec, "broadcast", "direct"))

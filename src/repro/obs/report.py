@@ -28,13 +28,14 @@ def load_run(run_dir: str) -> Dict[str, Any]:
         with open(cfg_path) as fh:
             data.setdefault("config", json.load(fh))
     data.setdefault("policy_events", load_policy_events(run_dir))
+    data.setdefault("net_events", load_net_events(run_dir))
     return data
 
 
-def load_policy_events(run_dir: str) -> List[Dict[str, Any]]:
-    """The run's ``comm.policy.*`` events from ``events.jsonl`` (empty
-    when the run had no jsonl tracker or no policy). Malformed lines —
-    e.g. a run killed mid-write — are skipped, not fatal."""
+def _load_events(run_dir: str, prefix: str) -> List[Dict[str, Any]]:
+    """Events under one kind prefix from ``events.jsonl`` (empty when
+    the run had no jsonl tracker). Malformed lines — e.g. a run killed
+    mid-write — are skipped, not fatal."""
     path = os.path.join(run_dir, "events.jsonl")
     if not os.path.exists(path):
         return []
@@ -48,9 +49,20 @@ def load_policy_events(run_dir: str) -> List[Dict[str, Any]]:
                 rec = json.loads(line)
             except ValueError:
                 continue
-            if str(rec.get("kind", "")).startswith("comm.policy."):
+            if str(rec.get("kind", "")).startswith(prefix):
                 out.append(rec)
     return out
+
+
+def load_policy_events(run_dir: str) -> List[Dict[str, Any]]:
+    """The run's ``comm.policy.*`` events."""
+    return _load_events(run_dir, "comm.policy.")
+
+
+def load_net_events(run_dir: str) -> List[Dict[str, Any]]:
+    """The run's ``net.*`` events (topology / relay channel / reliable
+    broadcast digests from ``repro.net``)."""
+    return _load_events(run_dir, "net.")
 
 
 def _fmt_s(t: float) -> str:
@@ -171,6 +183,31 @@ def _comm_lines(s: Dict[str, Any],
     return lines
 
 
+def _net_lines(events: List[Dict[str, Any]]) -> List[str]:
+    """The network digest: hearing graph, relay tier, and the reliable-
+    broadcast outcome (``net.*`` events from ``repro.net``)."""
+    lines = []
+    for e in events:
+        kind = e.get("kind")
+        if kind == "net.topology":
+            lines.append(f"  topology      {e.get('topology')} "
+                         f"(n={e.get('n')}, edges={e.get('edges')}"
+                         + (", complete" if e.get("complete") else "")
+                         + ")")
+        elif kind == "net.channel":
+            lines.append(f"  relay tier    {e.get('relays')} relays "
+                         f"({e.get('byz_relays')} byzantine), "
+                         f"broadcast={e.get('broadcast')}, "
+                         f"{'protected' if e.get('protected') else 'UNPROTECTED'}, "
+                         f"price x{e.get('price_factor')}")
+        elif kind == "net.broadcast":
+            lines.append(f"  broadcast     {e.get('discipline')}: "
+                         f"accepted={e.get('accepted')} "
+                         f"safe={e.get('safe')} "
+                         f"messages={e.get('messages')}")
+    return lines
+
+
 def render(data: Dict[str, Any], run_dir: str = "") -> str:
     """Render a loaded run (see :func:`load_run`) to the report text."""
     kind = data.get("kind", "run")
@@ -191,6 +228,11 @@ def render(data: Dict[str, Any], run_dir: str = "") -> str:
     if comm:
         lines.append("-- comm policy --")
         lines += comm
+
+    net = _net_lines(data.get("net_events") or [])
+    if net:
+        lines.append("-- network --")
+        lines += net
 
     lines.append("-- span breakdown (share of root spans) --")
     lines += _span_lines(obs.get("spans") or {})

@@ -84,6 +84,31 @@ class CommSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """Network topology + relay tier (``repro.net``, DESIGN.md §15).
+
+    ``topology`` picks the hearing graph restricting worker-to-worker
+    overhearing (the paper's single-hop radio is ``complete``);
+    ``degree`` parametrises ring / random_geometric; ``adjacency`` is
+    the explicit graph's row string ("011;101;110"). ``relays`` > 0
+    routes every uplink through a relay tier (``byz_relays`` of them
+    Byzantine) with the ``broadcast`` discipline: ``direct`` trusts one
+    forwarding relay, ``dolev`` sends over 2b+1 disjoint routes,
+    ``bracha`` runs SEND/ECHO/READY reliable broadcast (needs
+    relays >= 3*byz_relays + 1 to protect). The defaults are the
+    paper's setup — no relays, everyone hears everyone.
+    """
+
+    topology: str = "complete"       # registry: topologies
+    degree: int = 2                  # ring/random_geometric: hearing degree
+    adjacency: str = ""              # explicit: "011;101;110" row string
+    relays: int = 0                  # relay tier size (0 = single-hop)
+    byz_relays: int = 0              # Byzantine relays in the tier
+    broadcast: str = "direct"        # direct | dolev | bracha
+    seed: int = 0                    # placement / relay PRNG seed
+
+
+@dataclasses.dataclass(frozen=True)
 class DataSpec:
     """What the workers sample gradients of.
 
@@ -132,6 +157,7 @@ class ScenarioSpec:
     echo_r: float = 0.9              # echo-DP deviation ratio (Eq. 7)
     data: DataSpec = DataSpec()
     comm: CommSpec = CommSpec()      # wire codec + broadcast channel
+    net: NetSpec = NetSpec()         # hearing graph + relay tier
 
 
 @dataclasses.dataclass(frozen=True)

@@ -229,16 +229,21 @@ def train(cfg: RunConfig) -> TrainResult:
     from repro.models.nn import split_params
     from repro.optim import adamw, sgd
 
+    from repro import net as net_lib
+
     tspec, scen = cfg.train, cfg.scenario
     if tspec.strategy not in TRAIN_STRATEGIES:
         raise ValueError(f"unknown train strategy {tspec.strategy!r}; "
                          f"known: {sorted(TRAIN_STRATEGIES)}")
+    # scenario.net: validate + swap the relay channel in before the
+    # settings freeze (apply_to_comm is a no-op without a relay tier).
+    comm_cfg = net_lib.apply_to_comm(scen.net, resolve_comm(scen.comm))
     settings = TrainSettings(
         aggregator=scen.aggregator, f=scen.f, n_byz=scen.n_byz,
         byz_mode=scen.attack, microbatches=tspec.microbatches,
         clip_norm=tspec.clip_norm, echo_k=scen.echo_k, echo_r=scen.echo_r,
         moe_impl=cfg.mesh.moe_impl, fsdp=tspec.strategy == "fsdp",
-        comm=resolve_comm(scen.comm),
+        comm=comm_cfg,
         policy=resolve_policy(scen.comm), ef=scen.comm.ef)
     optimizers = {"adamw": adamw, "sgd": sgd}
     if tspec.optimizer not in optimizers:
@@ -289,6 +294,40 @@ def train(cfg: RunConfig) -> TrainResult:
             comm_tag += f" policy={scen.comm.policy}"
         if scen.comm.ef:
             comm_tag += " ef=on"
+        if net_lib.net_active(scen.net):
+            # resolve the hearing graph against the workers that ran and
+            # emit the run's net.* digest next to the comm events. The
+            # coarse driver's echo basis is a parameter-server downlink,
+            # so the graph is informational here (DESIGN.md §15); the
+            # slot-level simulation enforces it per worker.
+            graph = net_lib.resolve_net(scen.net, trainer.n_workers)
+            obs_lib.event("net.topology", topology=scen.net.topology,
+                          n=graph.n, edges=graph.edge_count(),
+                          complete=graph.is_complete,
+                          degree=scen.net.degree)
+            obs_lib.counter("net.hearing_edges", graph.edge_count())
+            comm_tag += f" net={scen.net.topology}"
+            if scen.net.relays:
+                ch = settings.comm.channel
+                obs_lib.event("net.channel", relays=scen.net.relays,
+                              byz_relays=scen.net.byz_relays,
+                              broadcast=scen.net.broadcast,
+                              protected=ch.protected,
+                              price_factor=ch.price_factor())
+                if scen.net.broadcast == "bracha":
+                    outcome = net_lib.simulate_bracha(
+                        scen.net.relays, scen.net.byz_relays)
+                elif scen.net.broadcast == "direct":
+                    outcome = net_lib.simulate_plain_relay(
+                        scen.net.relays, scen.net.byz_relays)
+                else:
+                    outcome = None
+                if outcome is not None:
+                    obs_lib.event("net.broadcast",
+                                  discipline=scen.net.broadcast,
+                                  **outcome.as_event())
+                comm_tag += (f" relays={scen.net.relays}"
+                             f"({scen.net.broadcast})")
         print(f"strategy={tspec.strategy} workers={trainer.n_workers} "
               f"aggregator={scen.aggregator} f={scen.f}{comm_tag} "
               f"run_dir={run_dir}")

@@ -98,6 +98,7 @@ class Registry(Mapping):
 #   CHANNELS               comm/channel.py          broadcast channel builders
 #   POLICIES               comm/policy/base.py      comm control-plane policies
 #   TRACKERS               obs/tracker.py           observability sinks
+#   TOPOLOGIES             net/topology.py          hearing-graph builders
 # ---------------------------------------------------------------------------
 
 AGGREGATORS = Registry("aggregator")
@@ -113,6 +114,7 @@ CODECS = Registry("wire codec")
 CHANNELS = Registry("broadcast channel")
 POLICIES = Registry("comm policy")
 TRACKERS = Registry("tracker")
+TOPOLOGIES = Registry("hearing-graph topology")
 
 _REGISTRIES: Dict[str, Registry] = {
     "aggregators": AGGREGATORS,
@@ -128,13 +130,15 @@ _REGISTRIES: Dict[str, Registry] = {
     "channels": CHANNELS,
     "comm_policies": POLICIES,
     "trackers": TRACKERS,
+    "topologies": TOPOLOGIES,
 }
 
 # modules whose import populates the registries above
 _HOSTS = ("repro.core.aggregators", "repro.core.byzantine",
           "repro.dist.collectives", "repro.launch.engine",
           "repro.kernels.ops", "repro.comm.wire", "repro.comm.channel",
-          "repro.comm.policy", "repro.obs.tracker")
+          "repro.comm.policy", "repro.obs.tracker",
+          "repro.net.topology", "repro.net.relay", "repro.net.attacks")
 
 
 def load_plugins() -> None:

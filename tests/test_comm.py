@@ -20,7 +20,7 @@ from repro.core import byzantine, costfns, protocol
 from repro.core.types import ProtocolConfig, echo_bits, raw_bits
 
 ALL_CODECS = (comm.Fp32Codec(), comm.Bf16Codec(), Int8Codec(),
-              TopKCodec(k=8))
+              TopKCodec(k=8), comm.Sign1Codec())
 
 
 def _setup(n=12, d=24, seed=0, r=0.3):
@@ -81,6 +81,24 @@ def test_codec_roundtrip_error_bounds(codec):
         # the k largest magnitudes all survived
         order = np.argsort(-np.abs(v_np))[:codec.k]
         assert kept[order].all()
+    elif codec.name == "sign1":
+        # every sign exact, every magnitude the shared mean-|v| scale
+        rt_np, v_np = np.asarray(rt), np.asarray(v)
+        assert np.array_equal(np.sign(rt_np), np.where(v_np >= 0, 1.0, -1.0))
+        np.testing.assert_allclose(np.abs(rt_np), np.mean(np.abs(v_np)),
+                                   rtol=1e-6)
+
+
+def test_sign1_scalar_is_exact_and_on_the_ladder():
+    """A length-1 vector roundtrips exactly (the echo norm-ratio scalar
+    survives sign compression) and sign1 is the ladder's deepest rung."""
+    from repro.comm.policy import CODEC_LADDER
+    codec = comm.Sign1Codec()
+    for x in (3.25, -2.5, 0.0):
+        assert float(codec.roundtrip(jnp.asarray([x]))[0]) == x
+    assert CODEC_LADDER[-1] == "sign1"
+    # 32x payload compression for byte-aligned d, plus the fp32 scale
+    assert int(codec.vector_bits(256)) == 256 + 32
 
 
 def test_typed_messages_price_like_the_codec():
@@ -282,8 +300,8 @@ def test_resolve_builds_from_the_registries():
     with pytest.raises(ValueError, match="channel=metered"):
         resolve(CommSpec(channel="lossy", drop_prob=0.1, budget_bits=64))
     names = available()
-    assert names["codecs"] == ["bf16", "fp32", "int8", "topk"]
-    assert names["channels"] == ["ideal", "lossy", "metered"]
+    assert names["codecs"] == ["bf16", "fp32", "int8", "sign1", "topk"]
+    assert names["channels"] == ["ideal", "lossy", "metered", "relay"]
 
 
 def test_comm_config_is_jit_static():

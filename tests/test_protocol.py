@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import repro.net  # noqa: F401  (registers the channel-aware attacks)
+from repro.comm import CommConfig
+from repro.comm.channel import LossyBroadcast
+from repro.comm.wire import FP32
 from repro.core import byzantine, costfns, theory
 from repro.core.protocol import (communication_phase, echo_cgc_round,
                                  pointwise_round, run_training)
@@ -94,7 +98,8 @@ def test_crash_workers_ignored():
 
 
 @pytest.mark.parametrize("attack", ["sign_flip", "large_norm", "mean_shift",
-                                    "poisoned_echo"])
+                                    "poisoned_echo", "echo_jam",
+                                    "little_is_enough", "colluding_fade"])
 def test_convergence_under_attack(attack):
     """Theorem 9: Echo-CGC converges despite f Byzantine workers."""
     key = jax.random.PRNGKey(0)
@@ -107,6 +112,29 @@ def test_convergence_under_attack(attack):
                          key, jnp.zeros(d), rounds=60)
     d0, dT = float(trace["dist2"][0]), float(trace["dist2"][-1])
     assert dT < 1e-2 * d0, (attack, d0, dT)
+
+
+@pytest.mark.parametrize("channel", [None,
+                                     LossyBroadcast(seed=3, drop_prob=0.3)])
+def test_n_equals_f_plus_one_crash_degrades_to_raw_only(channel):
+    """The n = f+1 edge: every Byzantine worker crashed, one honest
+    worker left. The empty crashed slots must not drag the CGC clip
+    threshold to zero (the server filters on *known-bad* rows, reduced
+    f' = f - crashed), so the lone raw gradient still drives descent —
+    with and without a fading channel on top."""
+    key = jax.random.PRNGKey(0)
+    d, n, f = 12, 2, 1
+    cost = costfns.quadratic(key, d=d, mu=1.0, L=1.0, sigma=0.01)
+    cfg = ProtocolConfig(n=n, f=f, r=0.3, eta=0.05)
+    byz_mask = jnp.zeros(n, bool).at[0].set(True)
+    comm = None if channel is None else CommConfig(channel=channel,
+                                                   codec=FP32)
+    trace = run_training(cfg, cost, byzantine.ATTACKS["crash"], byz_mask,
+                         key, jnp.ones(d) * 2.0, rounds=50, comm=comm)
+    d2 = np.asarray(trace["dist2"])
+    assert np.isfinite(d2).all()
+    assert int(np.asarray(trace["n_echo"]).sum()) == 0   # raw-only
+    assert d2[-1] < 0.25 * d2[0], (d2[0], d2[-1])
 
 
 def test_rate_within_proven_bound():
